@@ -1,0 +1,88 @@
+"""Kernel micro-benchmarks: Pallas (interpret on CPU) vs the jnp oracle,
+plus the solver-throughput benchmark (candidate evaluations / second) that
+quantifies the batched-objective speedup over per-candidate evaluation.
+
+On CPU the Pallas timings measure the interpreter (not TPU perf); the
+numbers that matter here are (a) correctness-at-scale and (b) the jnp
+batched-vs-loop factor, which carries to TPU.
+"""
+from __future__ import annotations
+
+import csv
+import time
+from pathlib import Path
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import power, topology, vsr
+from repro.kernels import ops, ref
+
+OUT = Path("experiments/benchmarks")
+
+
+def _write(name: str, rows: List[Dict]) -> None:
+    OUT.mkdir(parents=True, exist_ok=True)
+    with (OUT / f"{name}.csv").open("w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0]))
+        w.writeheader()
+        w.writerows(rows)
+
+
+def _time(fn, *args, reps=3) -> float:
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps
+
+
+def placement_throughput() -> List[Dict]:
+    topo = topology.paper_topology()
+    vs = vsr.random_vsrs(10, rng=0, source_nodes=[0])
+    prob = power.build_problem(topo, vs)
+    rows = []
+    for B in (64, 512, 4096):
+        Xb = jax.random.randint(jax.random.PRNGKey(0),
+                                (B, prob.R, prob.V), 0, prob.P, jnp.int32)
+        t_batch = _time(lambda X: power.objective_batch(prob, X), Xb)
+        t_kernel = _time(
+            lambda X: ops.placement_objective(prob, X), Xb)
+        # per-candidate python loop baseline (small B only)
+        if B <= 64:
+            t0 = time.time()
+            for i in range(B):
+                jax.block_until_ready(power.objective(prob, Xb[i]))
+            t_loop = (time.time() - t0)
+        else:
+            t_loop = float("nan")
+        rows.append(dict(batch=B,
+                         batched_evals_per_s=round(B / t_batch, 1),
+                         kernel_evals_per_s=round(B / t_kernel, 1),
+                         loop_evals_per_s=(round(B / t_loop, 1)
+                                           if t_loop == t_loop else "n/a")))
+    _write("placement_throughput", rows)
+    return rows
+
+
+def flash_cases() -> List[Dict]:
+    rows = []
+    for (B, H, KH, S, D) in [(1, 8, 2, 256, 64), (2, 4, 4, 512, 64)]:
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (B, H, S, D), jnp.float32)
+        k = jax.random.normal(ks[1], (B, KH, S, D), jnp.float32)
+        v = jax.random.normal(ks[2], (B, KH, S, D), jnp.float32)
+        t_ref = _time(lambda a, b, c: ref.flash_attention_ref(a, b, c),
+                      q, k, v)
+        got = ops.flash_attention(q, k, v)
+        want = ref.flash_attention_ref(q, k, v)
+        err = float(jnp.max(jnp.abs(got - want)))
+        flops = 4.0 * B * H * S * S * D / 2
+        rows.append(dict(shape=f"B{B}H{H}KH{KH}S{S}D{D}",
+                         ref_ms=round(t_ref * 1e3, 2),
+                         ref_gflops=round(flops / t_ref / 1e9, 1),
+                         kernel_max_err=f"{err:.1e}"))
+    _write("flash_attention", rows)
+    return rows

@@ -1,0 +1,66 @@
+"""Aggregate the dry-run artifacts into the §Roofline table.
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and emits
+one row per (arch x shape x mesh): the three roofline terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs and the per-device memory figure.
+"""
+from __future__ import annotations
+
+import csv
+import json
+from pathlib import Path
+from typing import Dict, List
+
+DRYRUN = Path("experiments/dryrun")
+OUT = Path("experiments/benchmarks")
+
+
+def rows_from_dryrun() -> List[Dict]:
+    rows = []
+    for p in sorted(DRYRUN.glob("*.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("skipped"):
+            continue
+        r = rec["roofline"]
+        h = rec["hlo"]
+        rows.append(dict(
+            arch=rec["arch"], shape=rec["shape"],
+            mesh="x".join(str(s) for s in rec["mesh"]["shape"]),
+            compile_s=rec.get("compile_s"),
+            perdev_gb=round(rec["memory"]["peak_per_device_bytes"] / 1e9, 2),
+            fits_16gb=rec["memory"]["fits_16gb"],
+            compute_s=round(r["compute_s"], 4),
+            memory_s=round(r["memory_s"], 4),
+            collective_s=round(r["collective_s"], 4),
+            dominant=r["dominant"],
+            compute_fraction=round(r["compute_fraction"], 4),
+            useful_ratio=round(rec.get("useful_flops_ratio", 0.0), 3),
+            dot_tflops_dev=round(h["dot_flops"] / 1e12, 2),
+            wire_gb_dev=round(h["collective_wire_bytes"] / 1e9, 2),
+        ))
+    return rows
+
+
+def write_table() -> List[Dict]:
+    rows = rows_from_dryrun()
+    OUT.mkdir(parents=True, exist_ok=True)
+    if rows:
+        with (OUT / "roofline.csv").open("w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=list(rows[0]))
+            w.writeheader()
+            w.writerows(rows)
+    return rows
+
+
+def markdown_table(rows: List[Dict], mesh: str = "16x16") -> str:
+    sel = [r for r in rows if r["mesh"] == mesh]
+    hdr = ("| arch | shape | compute_s | memory_s | collective_s | "
+           "dominant | useful | GB/dev |")
+    sep = "|" + "---|" * 8
+    lines = [hdr, sep]
+    for r in sel:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']} | "
+            f"{r['memory_s']} | {r['collective_s']} | {r['dominant']} | "
+            f"{r['useful_ratio']} | {r['perdev_gb']} |")
+    return "\n".join(lines)

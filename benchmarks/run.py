@@ -1,0 +1,89 @@
+"""Benchmark driver: one entry per paper table/figure + framework benches.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run fig3 gap   # subset
+
+Outputs CSVs under experiments/benchmarks/ and prints name,value summaries.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from . import kernel_bench, paper_figures, roofline_table
+
+
+def run_fig3():
+    rows = paper_figures.fig3()
+    stats = rows[-1]
+    print(f"fig3: CFN-vs-CDC savings avg={stats['saving_vs_cdc']:.2%} "
+          f"min={stats['saving_min']:.2%} max={stats['saving_max']:.2%} "
+          f"(paper: 68% / 19% / 91%)")
+    spill = [r for r in rows[:-1] if "cdc" in str(r["layers_used"])]
+    print(f"fig3: CDC spill at n_vsrs={[r['n_vsrs'] for r in spill]} "
+          "(paper: spike at 20)")
+    fog = [r for r in rows[:-1]
+           if "af" in str(r["layers_used"]).split("+")
+           or "mf" in str(r["layers_used"]).split("+")]
+    print(f"fig3: AF/MF selected in {len(fog)}/20 runs (paper: never)")
+
+
+def run_fig4():
+    rows = paper_figures.fig4()
+    for r in rows:
+        print(f"fig4: {r['policy']:9s} net={r['net_w']:9.1f}W "
+              f"proc={r['proc_w']:9.1f}W total={r['total_w']:9.1f}W")
+
+
+def run_gap():
+    rows = paper_figures.solver_gap()
+    import statistics
+    for m in ("coordinate", "anneal", "genetic", "relax", "cfn-milp"):
+        gaps = [r[f"{m}_gap"] for r in rows]
+        print(f"gap: {m:11s} mean={statistics.mean(gaps):.4%} "
+              f"max={max(gaps):.4%}")
+
+
+def run_placement():
+    rows = kernel_bench.placement_throughput()
+    for r in rows:
+        print(f"placement-throughput: B={r['batch']:5d} "
+              f"batched={r['batched_evals_per_s']}/s "
+              f"kernel(interp)={r['kernel_evals_per_s']}/s "
+              f"loop={r['loop_evals_per_s']}/s")
+
+
+def run_flash():
+    rows = kernel_bench.flash_cases()
+    for r in rows:
+        print(f"flash: {r['shape']} ref={r['ref_ms']}ms "
+              f"({r['ref_gflops']} GF/s cpu) kernel_err={r['kernel_max_err']}")
+
+
+def run_roofline():
+    rows = roofline_table.write_table()
+    n = len(rows)
+    fits = sum(1 for r in rows if r["fits_16gb"])
+    doms = {}
+    for r in rows:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    print(f"roofline: {n} cells aggregated -> experiments/benchmarks/"
+          f"roofline.csv ; fits-16GB {fits}/{n} ; dominant={doms}")
+
+
+BENCHES = dict(fig3=run_fig3, fig4=run_fig4, gap=run_gap,
+               placement=run_placement, flash=run_flash,
+               roofline=run_roofline)
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(BENCHES)
+    for name in names:
+        t0 = time.time()
+        print(f"== {name} ==", flush=True)
+        BENCHES[name]()
+        print(f"== {name} done in {time.time() - t0:.1f}s ==", flush=True)
+
+
+if __name__ == "__main__":
+    main()

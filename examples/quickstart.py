@@ -1,0 +1,35 @@
+"""Quickstart: the paper in ~30 lines.
+
+Builds the paper's Cloud-Fog Network, embeds DNN-inference VSRs with the
+MILP stand-in, and prints the energy comparison against the CDC / AF / MF
+baselines (paper Fig. 3/4).
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.core import embed, power, topology, vsr
+
+# 1. the paper's substrate: 20 RPi-class IoT devices in 4 Wi-Fi zones,
+#    one Access-Fog and one Metro-Fog server, a Xeon CDC behind the core
+topo = topology.paper_topology()
+
+# 2. ten DNN inference services; each VSR = input VM (pinned at the IoT
+#    source) + compute VMs with U(3,10) GFLOPS demands, chained by Mbps links
+vsrs = vsr.random_vsrs(10, rng=0, source_nodes=[0])
+
+# 3. optimize the placement (portfolio solver = the CPLEX stand-in)
+problem = power.build_problem(topo, vsrs)
+result = embed.embed(topo, vsrs, "cfn-milp", problem=problem)
+print(f"CFN-MILP : {result.power:8.1f} W  "
+      f"(feasible={result.feasible}, method={result.method})")
+
+# 4. the paper's fixed-layer baselines
+for pol in ("cdc", "af", "mf"):
+    base = embed.embed(topo, vsrs, pol, problem=problem)
+    saving = 1 - result.power / base.power
+    print(f"{pol.upper():9s}: {base.power:8.1f} W  -> CFN saves {saving:.1%}")
+
+# 5. where did the VMs land?  (paper: the IoT layer, AF/MF bypassed)
+layers = [topo.proc_layer[p] for p in result.X.reshape(-1)]
+print("placement layers:", sorted(set(layers)))

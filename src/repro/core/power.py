@@ -1,0 +1,213 @@
+"""The CFN power model: paper Eq. (1) + Eq. (2), batched in JAX.
+
+Given a placement ``X[r, v]`` (processing-node index per VM), total power is
+
+  net_pc = sum_n PUE_n * ( eps_n * lambda_n + beta_n * delta_n * pi_n )      (1)
+  pr_pc  = sum_p PUE_p * ( E_p * Omega_p + N_p * pi_p
+                           + EL_p * theta_p + Phi_p * share_p * pi_p^LAN )   (2)
+
+with lambda_n obtained by contracting the per-candidate traffic matrix with the
+precomputed path-incidence tensor (topology.py).  Everything is expressed as
+dense tensor algebra so the objective vmaps over thousands of candidate
+placements -- this is the "solver hot loop" that kernels/placement_power
+implements as a Pallas TPU kernel.
+
+Units: W, GFLOPS, Mbps (converted to Gbps where eps/EL are W per Gbps).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .topology import CFNTopology
+from .vsr import VSRBatch
+
+# Penalty weight for capacity violations (W per unit violation); large enough
+# that any feasible placement beats any infeasible one at paper scale.
+PENALTY = 1.0e4
+# lambda_n > ACTIVE_EPS Mbps counts a network node as activated.
+ACTIVE_EPS = 1.0e-6
+
+
+class PowerBreakdown(NamedTuple):
+    total: jnp.ndarray        # [] W (net + pr, no penalty)
+    net: jnp.ndarray          # [] W
+    proc: jnp.ndarray         # [] W
+    violation: jnp.ndarray    # [] capacity violation magnitude (0 = feasible)
+    per_proc: jnp.ndarray     # [P] W
+    per_net: jnp.ndarray      # [N] W
+    omega: jnp.ndarray        # [P] GFLOPS allocated
+
+    @property
+    def objective(self):
+        return self.total + PENALTY * self.violation
+
+
+@dataclass(frozen=True)
+class PlacementProblem:
+    """Immutable tensor bundle: substrate parameters + workload."""
+
+    # substrate ----------------------------------------------------------
+    path_nodes: jnp.ndarray   # [P, P, N]
+    E: jnp.ndarray            # [P] W/GFLOPS
+    C_pr: jnp.ndarray         # [P] GFLOPS per server
+    NS: jnp.ndarray           # [P] servers
+    pi_pr: jnp.ndarray        # [P] W idle per server
+    pue_pr: jnp.ndarray       # [P]
+    EL: jnp.ndarray           # [P] W/Gbps (LAN)
+    C_lan: jnp.ndarray        # [P] Gbps
+    pi_lan: jnp.ndarray       # [P] W
+    lan_share: jnp.ndarray    # [P]
+    eps: jnp.ndarray          # [N] W/Gbps
+    C_net: jnp.ndarray        # [N] Gbps
+    pi_net: jnp.ndarray       # [N] W
+    pue_net: jnp.ndarray      # [N]
+    idle_share: jnp.ndarray   # [N]
+    # workload -----------------------------------------------------------
+    F: jnp.ndarray            # [R, V] GFLOPS
+    link_src: jnp.ndarray     # [L] int32 (flattened r*V+v)
+    link_dst: jnp.ndarray     # [L] int32
+    link_h: jnp.ndarray       # [L] Mbps
+    fixed_mask: jnp.ndarray   # [R, V] bool: True where VM is pinned
+    fixed_node: jnp.ndarray   # [R, V] int32: pinned node (src for input VMs)
+
+    @property
+    def P(self) -> int:
+        return self.E.shape[0]
+
+    @property
+    def N(self) -> int:
+        return self.eps.shape[0]
+
+    @property
+    def R(self) -> int:
+        return self.F.shape[0]
+
+    @property
+    def V(self) -> int:
+        return self.F.shape[1]
+
+    def tree_flatten(self):  # registered below
+        children = tuple(getattr(self, f.name) for f in
+                         self.__dataclass_fields__.values())  # type: ignore[attr-defined]
+        return children, None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    PlacementProblem,
+    lambda p: p.tree_flatten(),
+    PlacementProblem.tree_unflatten)
+
+
+def build_problem(topo: CFNTopology, vsrs: VSRBatch) -> PlacementProblem:
+    pp = topo.proc_param_arrays()
+    nn = topo.net_param_arrays()
+    link_src, link_dst, link_h = vsrs.links()
+    R, V = vsrs.R, vsrs.V
+    fixed_mask = np.zeros((R, V), dtype=bool)
+    fixed_mask[np.arange(R), vsrs.input_vm] = True
+    fixed_node = np.zeros((R, V), dtype=np.int32)
+    fixed_node[np.arange(R), vsrs.input_vm] = vsrs.src
+    as_j = lambda x: jnp.asarray(x)
+    return PlacementProblem(
+        path_nodes=as_j(topo.path_nodes),
+        **{k: as_j(v) for k, v in pp.items()},
+        **{k: as_j(v) for k, v in nn.items()},
+        F=as_j(vsrs.F),
+        link_src=as_j(link_src), link_dst=as_j(link_dst), link_h=as_j(link_h),
+        fixed_mask=as_j(fixed_mask), fixed_node=as_j(fixed_node),
+    )
+
+
+def apply_pins(problem: PlacementProblem, X: jnp.ndarray) -> jnp.ndarray:
+    """Force pinned VMs (input VMs) onto their source nodes."""
+    return jnp.where(problem.fixed_mask, problem.fixed_node, X)
+
+
+def _loads(problem: PlacementProblem, onehot: jnp.ndarray):
+    """Shared load computation given one-hot placements [R, V, P]."""
+    p = problem
+    omega = jnp.einsum("rvp,rv->p", onehot, p.F)                    # [P]
+    flat = onehot.reshape(-1, p.P)
+    u = flat[p.link_src]                                            # [L, P]
+    w = flat[p.link_dst]                                            # [L, P]
+    tm = jnp.einsum("l,lp,lq->pq", p.link_h, u, w)                  # [P, P]
+    intra = jnp.einsum("l,lp,lp->p", p.link_h, u, w)                # [P]
+    lam = jnp.einsum("pq,pqn->n", tm, p.path_nodes)                 # [N] Mbps
+    theta = (u.T @ p.link_h) + (w.T @ p.link_h) - intra             # [P] Mbps
+    return omega, lam, theta
+
+
+def evaluate(problem: PlacementProblem, X: jnp.ndarray,
+             hard: bool = True, temp: float = 1.0) -> PowerBreakdown:
+    """Total power for one placement X [R, V] (int32 node indices).
+
+    ``hard=False`` computes the differentiable surrogate used by the
+    relaxation solver: X is then [R, V, P] soft assignment probabilities,
+    ceil() -> smooth overcount, indicator -> saturating soft-gate.
+    """
+    p = problem
+    if hard:
+        X = apply_pins(p, X)
+        onehot = jax.nn.one_hot(X, p.P, dtype=jnp.float32)
+    else:
+        pin_oh = jax.nn.one_hot(p.fixed_node, p.P, dtype=jnp.float32)
+        onehot = jnp.where(p.fixed_mask[..., None], pin_oh, X)
+    omega, lam, theta = _loads(p, onehot)
+
+    if hard:
+        n_srv = jnp.ceil(omega / p.C_pr)
+        beta = (lam > ACTIVE_EPS).astype(jnp.float32)
+        phi = ((omega > ACTIVE_EPS) | (theta > ACTIVE_EPS)).astype(jnp.float32)
+    else:
+        # smooth surrogates (upper-bounding ceil by x/C + sigmoid gate)
+        n_srv = omega / p.C_pr + jax.nn.sigmoid(omega / temp)
+        beta = 1.0 - jnp.exp(-lam / temp)
+        phi = 1.0 - jnp.exp(-(omega + theta) / temp)
+
+    per_net = p.pue_net * (p.eps * lam / 1e3 + beta * p.idle_share * p.pi_net)
+    per_proc = p.pue_pr * (p.E * omega + n_srv * p.pi_pr
+                           + p.EL * theta / 1e3
+                           + phi * p.lan_share * p.pi_lan)
+    violation = (jnp.sum(jax.nn.relu(omega - p.NS * p.C_pr))
+                 + jnp.sum(jax.nn.relu(lam / 1e3 - p.C_net))
+                 + jnp.sum(jax.nn.relu(theta / 1e3 - p.C_lan)))
+    net = per_net.sum()
+    proc = per_proc.sum()
+    return PowerBreakdown(total=net + proc, net=net, proc=proc,
+                          violation=violation, per_proc=per_proc,
+                          per_net=per_net, omega=omega)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def objective(problem: PlacementProblem, X: jnp.ndarray) -> jnp.ndarray:
+    """Scalar objective (power + capacity penalty) for a hard placement."""
+    return evaluate(problem, X).objective
+
+
+evaluate_batch = jax.jit(jax.vmap(evaluate, in_axes=(None, 0)))
+objective_batch = jax.jit(jax.vmap(objective, in_axes=(None, 0)))
+
+
+def summarize(problem: PlacementProblem, topo: CFNTopology,
+              X: np.ndarray) -> Dict[str, float]:
+    """Human-readable per-layer report (drives Fig. 3 / Fig. 4 benchmarks)."""
+    bd = evaluate(problem, jnp.asarray(X))
+    per_proc = np.asarray(bd.per_proc)
+    omega = np.asarray(bd.omega)
+    out = dict(total_w=float(bd.total), net_w=float(bd.net),
+               proc_w=float(bd.proc), violation=float(bd.violation))
+    for layer in ("iot", "af", "mf", "cdc"):
+        idx = topo.layer_indices(layer)
+        out[f"proc_w_{layer}"] = float(per_proc[idx].sum())
+        out[f"gflops_{layer}"] = float(omega[idx].sum())
+    return out

@@ -1,0 +1,296 @@
+"""CFN physical topology: nodes, links, and the path-incidence tensor.
+
+The paper's Fig. 1 architecture is a tree:
+
+    IoT devices --(Wi-Fi)--> ONU APs --> OLT --> metro router --> metro switch
+                                   \\-> AF                    \\-> MF
+    metro switch --> core (IP/WDM ingress) --> core (IP/WDM egress) --> CDC
+
+Because the substrate is a tree, the route between any two processing nodes is
+unique, so flow conservation (paper Eq. 5) holds by construction once we record
+for every ordered processing-node pair (b, e) which *network* nodes its route
+traverses: ``path_nodes[b, e, n] in {0, 1}``.  Traffic aggregated by network
+node n is then a tensor contraction (see power.py), which is what makes the
+placement objective batchable on accelerator.  A generic BFS router is used so
+meshed cores (e.g. NSFNET, the paper's future work) drop in unchanged.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from . import hardware as hw
+
+PROCESSING = "processing"
+NETWORK = "network"
+
+# Canonical layer tags used by solvers / benchmarks.
+LAYER_IOT = "iot"
+LAYER_AF = "af"
+LAYER_MF = "mf"
+LAYER_CDC = "cdc"
+
+
+@dataclass
+class CFNTopology:
+    """A CFN substrate graph with hardware annotations.
+
+    Processing nodes and network nodes have separate index spaces:
+      * ``proc_names[p]`` / ``proc_hw[p]`` for p in [0, P)
+      * ``net_names[n]`` / ``net_hw[n]`` for n in [0, N)
+    ``adj`` is over the merged space (processing first, then network) and only
+    used to derive ``path_nodes``.
+    """
+
+    proc_names: List[str] = field(default_factory=list)
+    proc_hw: List[hw.ProcessingHW] = field(default_factory=list)
+    proc_layer: List[str] = field(default_factory=list)   # iot/af/mf/cdc tag
+    net_names: List[str] = field(default_factory=list)
+    net_hw: List[hw.NetworkHW] = field(default_factory=list)
+    edges: List[Tuple[str, str]] = field(default_factory=list)
+    # derived
+    path_nodes: np.ndarray | None = None   # [P, P, N] float32
+    path_hops: np.ndarray | None = None    # [P, P] int32 (#network nodes)
+
+    # -- construction ------------------------------------------------------
+    def add_proc(self, name: str, h: hw.ProcessingHW, layer: str) -> str:
+        self.proc_names.append(name)
+        self.proc_hw.append(h)
+        self.proc_layer.append(layer)
+        return name
+
+    def add_net(self, name: str, h: hw.NetworkHW) -> str:
+        self.net_names.append(name)
+        self.net_hw.append(h)
+        return name
+
+    def connect(self, a: str, b: str) -> None:
+        self.edges.append((a, b))
+
+    # -- index helpers -----------------------------------------------------
+    @property
+    def P(self) -> int:
+        return len(self.proc_names)
+
+    @property
+    def N(self) -> int:
+        return len(self.net_names)
+
+    def proc_index(self, name: str) -> int:
+        return self.proc_names.index(name)
+
+    def layer_indices(self, layer: str) -> List[int]:
+        return [i for i, l in enumerate(self.proc_layer) if l == layer]
+
+    # -- routing -----------------------------------------------------------
+    def finalize(self) -> "CFNTopology":
+        """Compute ``path_nodes`` by BFS over the merged graph."""
+        names = list(self.proc_names) + list(self.net_names)
+        index: Dict[str, int] = {n: i for i, n in enumerate(names)}
+        n_all = len(names)
+        nbrs: List[List[int]] = [[] for _ in range(n_all)]
+        for a, b in self.edges:
+            ia, ib = index[a], index[b]
+            nbrs[ia].append(ib)
+            nbrs[ib].append(ia)
+
+        P, N = self.P, self.N
+        path_nodes = np.zeros((P, P, N), dtype=np.float32)
+        path_hops = np.zeros((P, P), dtype=np.int32)
+        for b in range(P):
+            # BFS from processing node b.
+            prev = np.full(n_all, -1, dtype=np.int64)
+            seen = np.zeros(n_all, dtype=bool)
+            seen[b] = True
+            frontier = [b]
+            while frontier:
+                nxt = []
+                for u in frontier:
+                    for v in nbrs[u]:
+                        if not seen[v]:
+                            seen[v] = True
+                            prev[v] = u
+                            nxt.append(v)
+                frontier = nxt
+            for e in range(P):
+                if e == b or not seen[e]:
+                    continue
+                # walk back, collecting intermediate *network* nodes.
+                u = int(prev[e])
+                hops = 0
+                while u != b and u != -1:
+                    if u >= P:  # network node
+                        path_nodes[b, e, u - P] = 1.0
+                        hops += 1
+                    u = int(prev[u])
+                path_hops[b, e] = hops
+        self.path_nodes = path_nodes
+        self.path_hops = path_hops
+        return self
+
+    # -- parameter vectors (consumed by power.py) ---------------------------
+    def proc_param_arrays(self) -> Dict[str, np.ndarray]:
+        f = np.float32
+        g = lambda attr: np.array([getattr(h, attr) for h in self.proc_hw], f)
+        return dict(
+            E=np.array([h.eps_w_per_gflops for h in self.proc_hw], f),
+            C_pr=g("cap_gflops"),
+            NS=g("n_servers"),
+            pi_pr=g("idle_w"),
+            pue_pr=g("pue"),
+            EL=g("lan_eps_w_per_gbps"),
+            C_lan=g("lan_cap_gbps"),
+            pi_lan=g("lan_idle_w"),
+            lan_share=g("lan_idle_share"),
+        )
+
+    def net_param_arrays(self) -> Dict[str, np.ndarray]:
+        f = np.float32
+        g = lambda attr: np.array([getattr(h, attr) for h in self.net_hw], f)
+        return dict(
+            eps=np.array([h.eps_w_per_gbps for h in self.net_hw], f),
+            C_net=g("cap_gbps"),
+            pi_net=g("idle_w"),
+            pue_net=g("pue"),
+            idle_share=g("idle_share"),
+        )
+
+
+def paper_topology(n_iot: int = 20, n_zones: int = 4,
+                   af_servers: int | None = None,
+                   mf_servers: int | None = None,
+                   cdc_servers: int | None = None) -> CFNTopology:
+    """The paper's evaluation substrate (§3): 20 IoT devices in 4 zones."""
+    t = CFNTopology()
+    af_hw = hw.AF_I5 if af_servers is None else hw.scaled(hw.AF_I5, n_servers=af_servers)
+    mf_hw = hw.MF_I5 if mf_servers is None else hw.scaled(hw.MF_I5, n_servers=mf_servers)
+    cdc_hw = hw.CDC_XEON if cdc_servers is None else hw.scaled(hw.CDC_XEON, n_servers=cdc_servers)
+
+    for i in range(n_iot):
+        t.add_proc(f"iot{i}", hw.IOT_RPI4, LAYER_IOT)
+    t.add_proc("af0", af_hw, LAYER_AF)
+    t.add_proc("mf0", mf_hw, LAYER_MF)
+    t.add_proc("cdc0", cdc_hw, LAYER_CDC)
+
+    for z in range(n_zones):
+        t.add_net(f"onu{z}", hw.ONU_AP)
+    t.add_net("olt0", hw.OLT)
+    t.add_net("mrouter0", hw.METRO_ROUTER)
+    t.add_net("mswitch0", hw.METRO_SWITCH)
+    t.add_net("core0", hw.IPWDM_NODE)   # ingress (aggregation) core node
+    t.add_net("core1", hw.IPWDM_NODE)   # egress core node, 1 hop / ~200 km
+    # dedicated low-end attachment gear for the fog nodes (paper §2.1)
+    t.add_net("af_router0", hw.LOW_END_ROUTER)
+    t.add_net("af_switch0", hw.LOW_END_SWITCH)
+    t.add_net("mf_router0", hw.LOW_END_ROUTER)
+    t.add_net("mf_switch0", hw.LOW_END_SWITCH)
+
+    for i in range(n_iot):
+        t.connect(f"iot{i}", f"onu{i % n_zones}")
+    for z in range(n_zones):
+        t.connect(f"onu{z}", "olt0")
+    t.connect("olt0", "af_router0")
+    t.connect("af_router0", "af_switch0")
+    t.connect("af_switch0", "af0")
+    t.connect("olt0", "mrouter0")
+    t.connect("mrouter0", "mswitch0")
+    t.connect("mswitch0", "mf_router0")
+    t.connect("mf_router0", "mf_switch0")
+    t.connect("mf_switch0", "mf0")
+    t.connect("mswitch0", "core0")
+    t.connect("core0", "core1")
+    t.connect("cdc0", "core1")
+    return t.finalize()
+
+
+# NSFNET 14-node core (paper §4 future work: "a realistic core network
+# topology such as ... NSFNET").  Edges are the standard NSFNET T1 links.
+NSFNET_EDGES = [
+    (0, 1), (0, 2), (0, 7), (1, 2), (1, 3), (2, 5), (3, 4), (3, 10),
+    (4, 5), (4, 6), (5, 9), (5, 13), (6, 7), (7, 8), (8, 9), (8, 11),
+    (8, 12), (10, 11), (10, 12), (11, 13), (12, 13),
+]
+
+
+def nsfnet_topology(n_iot: int = 20, n_zones: int = 4,
+                    access_core: int = 0, cdc_core: int = 8) -> CFNTopology:
+    """The paper's CFN with the tree core replaced by the 14-node NSFNET.
+
+    The access/metro side attaches at core node ``access_core``; the CDC
+    hangs off ``cdc_core``.  Because the core is MESHED, routes are no
+    longer unique -- the BFS router picks shortest paths, and the
+    path-incidence contraction (and hence Eq. 1) still holds: this is the
+    drop-in-core property claimed in the module docstring, exercised by
+    tests/test_core_paper.py::test_nsfnet_flow_conservation.
+    """
+    t = CFNTopology()
+    for i in range(n_iot):
+        t.add_proc(f"iot{i}", hw.IOT_RPI4, LAYER_IOT)
+    t.add_proc("af0", hw.AF_I5, LAYER_AF)
+    t.add_proc("mf0", hw.MF_I5, LAYER_MF)
+    t.add_proc("cdc0", hw.CDC_XEON, LAYER_CDC)
+
+    for z in range(n_zones):
+        t.add_net(f"onu{z}", hw.ONU_AP)
+    t.add_net("olt0", hw.OLT)
+    t.add_net("mrouter0", hw.METRO_ROUTER)
+    t.add_net("mswitch0", hw.METRO_SWITCH)
+    for c in range(14):
+        t.add_net(f"core{c}", hw.IPWDM_NODE)
+    t.add_net("af_router0", hw.LOW_END_ROUTER)
+    t.add_net("af_switch0", hw.LOW_END_SWITCH)
+    t.add_net("mf_router0", hw.LOW_END_ROUTER)
+    t.add_net("mf_switch0", hw.LOW_END_SWITCH)
+
+    for i in range(n_iot):
+        t.connect(f"iot{i}", f"onu{i % n_zones}")
+    for z in range(n_zones):
+        t.connect(f"onu{z}", "olt0")
+    t.connect("olt0", "af_router0")
+    t.connect("af_router0", "af_switch0")
+    t.connect("af_switch0", "af0")
+    t.connect("olt0", "mrouter0")
+    t.connect("mrouter0", "mswitch0")
+    t.connect("mswitch0", "mf_router0")
+    t.connect("mf_router0", "mf_switch0")
+    t.connect("mf_switch0", "mf0")
+    t.connect("mswitch0", f"core{access_core}")
+    for a, b in NSFNET_EDGES:
+        t.connect(f"core{a}", f"core{b}")
+    t.connect("cdc0", f"core{cdc_core}")
+    return t.finalize()
+
+
+def datacenter_topology(n_edge: int = 8, n_fog: int = 2) -> CFNTopology:
+    """Beyond-paper preset: TPU-pod-class nodes in the same CFN shape.
+
+    Edge pods sit behind access DCN switches, fog pods behind a metro DCN
+    switch, and the cloud pod behind a WAN router pair -- the datacenter
+    analogue of Fig. 1 used to place the assigned LM architectures.
+    """
+    t = CFNTopology()
+    for i in range(n_edge):
+        t.add_proc(f"edge{i}", hw.EDGE_POD, LAYER_IOT)
+    for i in range(n_fog):
+        t.add_proc(f"fog{i}", hw.FOG_POD, LAYER_AF if i == 0 else LAYER_MF)
+    t.add_proc("cloud0", hw.CLOUD_POD, LAYER_CDC)
+
+    n_acc = max(1, n_edge // 4)
+    for z in range(n_acc):
+        t.add_net(f"acc{z}", hw.DCN_SWITCH)
+    t.add_net("agg0", hw.DCN_SWITCH)
+    t.add_net("wan0", hw.WAN_ROUTER)
+    t.add_net("wan1", hw.WAN_ROUTER)
+
+    for i in range(n_edge):
+        t.connect(f"edge{i}", f"acc{i % n_acc}")
+    for z in range(n_acc):
+        t.connect(f"acc{z}", "agg0")
+    for i in range(n_fog):
+        t.connect(f"fog{i}", "agg0")
+    t.connect("agg0", "wan0")
+    t.connect("wan0", "wan1")
+    t.connect("cloud0", "wan1")
+    return t.finalize()

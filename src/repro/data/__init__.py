@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, DataIterator, make_batch, synth_tokens

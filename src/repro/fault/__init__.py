@@ -1,0 +1,2 @@
+from .monitor import HeartbeatMonitor, StragglerTracker
+from .runner import ResilientTrainer, RunReport, SimulatedFailure

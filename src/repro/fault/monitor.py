@@ -1,0 +1,57 @@
+"""Failure detection: heartbeats and straggler tracking.
+
+On a real cluster the heartbeat source is the per-host agent (and the
+coordinator is the jax.distributed service); here workers are simulated so
+the detection/reaction logic -- the part that belongs to this framework --
+is real and testable: a missed heartbeat triggers restart-from-checkpoint,
+a straggling step raises a mitigation signal (at scale: evict + elastic
+rescale to the surviving host set).
+"""
+from __future__ import annotations
+
+import statistics
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+
+@dataclass
+class HeartbeatMonitor:
+    timeout_s: float = 10.0
+    clock: Callable[[], float] = time.monotonic
+    last_beat: Dict[str, float] = field(default_factory=dict)
+
+    def register(self, worker: str) -> None:
+        self.last_beat[worker] = self.clock()
+
+    def beat(self, worker: str) -> None:
+        self.last_beat[worker] = self.clock()
+
+    def dead_workers(self) -> List[str]:
+        now = self.clock()
+        return [w for w, t in self.last_beat.items()
+                if now - t > self.timeout_s]
+
+    def healthy(self) -> bool:
+        return not self.dead_workers()
+
+
+@dataclass
+class StragglerTracker:
+    """Flags steps slower than ``threshold`` x the rolling median."""
+
+    threshold: float = 3.0
+    window: int = 32
+    times: List[float] = field(default_factory=list)
+    flagged_steps: List[int] = field(default_factory=list)
+
+    def record(self, step: int, duration_s: float) -> bool:
+        history = self.times[-self.window:]
+        self.times.append(duration_s)
+        if len(history) < 5:
+            return False
+        med = statistics.median(history)
+        if duration_s > self.threshold * med:
+            self.flagged_steps.append(step)
+            return True
+        return False

@@ -1,0 +1,135 @@
+"""Pallas TPU flash attention (GQA + sliding window + logit softcap).
+
+Targets the MXU: the score/PV products are [bq, d] x [d, bkv] and
+[bq, bkv] x [bkv, d] dots per tile, with the online-softmax running max/sum
+held in VMEM scratch across the kv grid dimension (TPU grids execute
+sequentially, so scratch persists along the last axis).
+
+Grid: (B * H, Sq // bq, Skv // bkv); block shapes are explicit BlockSpecs:
+  q   (1, 1, bq, D)    indexed by (bh, iq)
+  k/v (1, 1, bkv, D)   indexed by (bh // G, jkv)   -- GQA head folding
+  out (1, 1, bq, D)    indexed by (bh, iq), written at the last kv step
+
+The pure-jnp oracle is kernels/ref.py::flash_attention_ref (the same
+online-softmax math, used by the model stack); tests sweep shapes, dtypes,
+windows and softcaps in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window: Optional[int],
+            logit_cap: Optional[float], q_offset: int, kv_len: int,
+            bq: int, bkv: int, n_kv: int):
+    jkv = pl.program_id(2)
+
+    @pl.when(jkv == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # [bq, D]
+    k = k_ref[0, 0].astype(jnp.float32)                  # [bkv, D]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))   # [bq, bkv]
+    if logit_cap is not None:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+
+    iq = pl.program_id(1)
+    q_pos = q_offset + iq * bq + jax.lax.broadcasted_iota(
+        jnp.int32, (bq, bkv), 0)
+    kv_pos = jkv * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    mask = kv_pos < kv_len                                # kv padding
+    if causal:
+        rel = q_pos - kv_pos
+        mask = mask & (rel >= 0)
+        if window is not None:
+            mask = mask & (rel < window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                   # [bq]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1)
+    v = v_ref[0, 0].astype(jnp.float32)                   # [bkv, D]
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))  # [bq, D]
+    acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(jkv == n_kv - 1)
+    def _finish():
+        l = l_ref[...]
+        safe = jnp.maximum(l, 1e-20)
+        o_ref[0, 0, :, :] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_tpu(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: Optional[int] = None,
+                        logit_cap: Optional[float] = None, q_offset: int = 0,
+                        bq: int = 128, bkv: int = 128,
+                        interpret: bool = False) -> jax.Array:
+    """q [B, H, Sq, D]; k/v [B, KH, Skv, D] -> [B, H, Sq, D].
+
+    Sq/Skv are padded to block multiples here; padding keys are masked via
+    ``kv_len`` and padded query rows are sliced off the result.
+    """
+    B, H, Sq, D = q.shape
+    KH, Skv = k.shape[1], k.shape[2]
+    G = H // KH
+    scale = 1.0 / math.sqrt(D)
+
+    bq = min(bq, max(Sq, 8))
+    bkv = min(bkv, max(Skv, 8))
+    pq = (-Sq) % bq
+    pkv = (-Skv) % bkv
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pkv:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pkv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pkv), (0, 0)))
+    Sqp, Skvp = Sq + pq, Skv + pkv
+    n_q, n_kv = Sqp // bq, Skvp // bkv
+
+    grid = (B * H, n_q, n_kv)
+    kern = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        logit_cap=logit_cap, q_offset=q_offset, kv_len=Skv,
+        bq=bq, bkv=bkv, n_kv=n_kv)
+
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D),
+                         lambda bh, iq, jkv: (bh // H, bh % H, iq, 0)),
+            pl.BlockSpec((1, 1, bkv, D),
+                         lambda bh, iq, jkv: (bh // H, (bh % H) // G, jkv, 0)),
+            pl.BlockSpec((1, 1, bkv, D),
+                         lambda bh, iq, jkv: (bh // H, (bh % H) // G, jkv, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D),
+                               lambda bh, iq, jkv: (bh // H, bh % H, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sqp, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),      # running max
+            pltpu.VMEM((bq,), jnp.float32),      # running sum
+            pltpu.VMEM((bq, D), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :Sq, :]

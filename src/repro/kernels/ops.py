@@ -1,0 +1,51 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On this CPU container the kernels execute in interpret mode (the kernel
+body runs as Python/jnp on CPU); on a real TPU set ``interpret=False`` (the
+default flips automatically based on the backend).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.power import PlacementProblem, apply_pins
+from . import flash_attention as fa
+from . import placement_power as pp
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "logit_cap",
+                                             "q_offset", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    logit_cap: Optional[float] = None, q_offset: int = 0,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """Pallas flash attention; q [B, H, Sq, D], k/v [B, KH, Skv, D]."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return fa.flash_attention_tpu(q, k, v, causal=causal, window=window,
+                                  logit_cap=logit_cap, q_offset=q_offset,
+                                  interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def placement_objective(problem: PlacementProblem, Xb: jax.Array, *,
+                        interpret: Optional[bool] = None) -> jax.Array:
+    """Batched placement objective: Xb [B, R, V] -> [B, 4].
+
+    Columns: (objective = power + penalty*violation, net W, proc W,
+    violation).  Matches kernels.ref.placement_objective_ref bit-for-bit up
+    to float accumulation order.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    B = Xb.shape[0]
+    Xp = jax.vmap(lambda X: apply_pins(problem, X))(Xb)
+    Xflat = Xp.reshape(B, -1).astype(jnp.int32)
+    operands = pp.pack_problem(problem)
+    return pp.placement_power_tpu(Xflat, *operands, interpret=interpret)

@@ -1,0 +1,147 @@
+"""Pallas TPU kernel for the CFN placement power objective (paper Eq. 1+2).
+
+This is the solver hot loop: simulated annealing / genetic / coordinate
+descent evaluate thousands of candidate placements per step, and each
+evaluation is a chain of small contractions:
+
+  onehot[b, j, p]  = (X[b, j] == p)                 (iota compare, VPU)
+  omega[b, p]      = sum_j F[j] * onehot[b, j, p]   (dot, MXU)
+  tm[b, p, q]      = sum_l H[l] u[b,l,p] w[b,l,q]   (batched dot, MXU)
+  lam[b, n]        = tm[b, :] . path[:, n]          (dot, MXU)
+  power terms      = elementwise over [b, P] / [b, N] + penalties
+
+Blocked over candidates: each grid step evaluates a [bc]-candidate block
+entirely in VMEM.  Problem tensors (path incidence, device parameters) are
+broadcast to every block via constant index maps.  The oracle is
+kernels/ref.py::placement_objective_ref == core.power.objective_batch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ACTIVE_EPS = 1.0e-6
+PENALTY = 1.0e4
+
+
+def _kernel(x_ref, u_ref, w_ref,
+            f_ref, h_ref, path_ref, pp_ref, nn_ref,
+            out_ref, *, P: int, N: int, bc: int):
+    X = x_ref[...]                                   # [bc, J]  int32
+    U = u_ref[...]                                   # [bc, L]  int32
+    W = w_ref[...]                                   # [bc, L]  int32
+    F = f_ref[...]                                   # [J]
+    H = h_ref[...]                                   # [L]
+    path = path_ref[...]                             # [P*P, N]
+    pp = pp_ref[...]                                 # [9, P] processing params
+    nn = nn_ref[...]                                 # [5, N] network params
+
+    J = X.shape[1]
+    L = U.shape[1]
+    iota_p = jax.lax.broadcasted_iota(jnp.int32, (1, 1, P), 2)
+    oh_x = (X[:, :, None] == iota_p).astype(jnp.float32)        # [bc, J, P]
+    oh_u = (U[:, :, None] == iota_p).astype(jnp.float32)        # [bc, L, P]
+    oh_w = (W[:, :, None] == iota_p).astype(jnp.float32)        # [bc, L, P]
+
+    # omega[b,p] = F . onehot
+    omega = jax.lax.dot_general(
+        oh_x, F, (((1,), (0,)), ((), ())))                       # [bc, P]
+    # tm[b,p,q] = sum_l H_l u w ; uh = u * H
+    uh = oh_u * H[None, :, None]
+    tm = jax.lax.dot_general(
+        uh, oh_w, (((1,), (1,)), ((0,), (0,))))                  # [bc, P, P]
+    lam = jax.lax.dot_general(
+        tm.reshape(bc, P * P), path, (((1,), (0,)), ((), ())))   # [bc, N]
+    # theta: traffic touching node p (sum of in+out minus double-counted
+    # intra-node traffic)
+    t_out = jax.lax.dot_general(uh, jnp.ones((bc, L), jnp.float32),
+                                (((1,), (1,)), ((0,), (0,))))    # [bc, P]
+    wh = oh_w * H[None, :, None]
+    t_in = jax.lax.dot_general(wh, jnp.ones((bc, L), jnp.float32),
+                               (((1,), (1,)), ((0,), (0,))))
+    intra = jnp.sum(uh * oh_w, axis=1)                           # [bc, P]
+    theta = t_out + t_in - intra
+
+    E, C_pr, NS, pi_pr, pue_pr, EL, C_lan, pi_lan, lan_share = \
+        (pp[i] for i in range(9))
+    eps, C_net, pi_net, pue_net, idle_share = (nn[i] for i in range(5))
+
+    n_srv = jnp.ceil(omega / C_pr)
+    beta = (lam > ACTIVE_EPS).astype(jnp.float32)
+    phi = ((omega > ACTIVE_EPS) | (theta > ACTIVE_EPS)).astype(jnp.float32)
+    per_net = pue_net * (eps * lam / 1e3 + beta * idle_share * pi_net)
+    per_proc = pue_pr * (E * omega + n_srv * pi_pr
+                         + EL * theta / 1e3 + phi * lan_share * pi_lan)
+    relu = lambda x: jnp.maximum(x, 0.0)
+    violation = (jnp.sum(relu(omega - NS * C_pr), axis=-1)
+                 + jnp.sum(relu(lam / 1e3 - C_net), axis=-1)
+                 + jnp.sum(relu(theta / 1e3 - C_lan), axis=-1))
+    net = jnp.sum(per_net, axis=-1)
+    proc = jnp.sum(per_proc, axis=-1)
+    out_ref[:, 0] = net + proc + PENALTY * violation
+    out_ref[:, 1] = net
+    out_ref[:, 2] = proc
+    out_ref[:, 3] = violation
+
+
+def placement_power_tpu(X: jax.Array, link_src: jax.Array,
+                        link_dst: jax.Array, F: jax.Array, H: jax.Array,
+                        path_flat: jax.Array, proc_params: jax.Array,
+                        net_params: jax.Array, *, bc: int = 256,
+                        interpret: bool = False) -> jax.Array:
+    """Evaluate B candidate placements.
+
+    X [B, J=R*V] int32 (pins already applied); link_src/dst [L] indices into
+    the flattened VM space; F [J] GFLOPS; H [L] Mbps; path_flat [P*P, N];
+    proc_params [9, P]; net_params [5, N].
+    Returns [B, 4]: (objective, net W, proc W, violation).
+    """
+    B, J = X.shape
+    L = link_src.shape[0]
+    P = proc_params.shape[1]
+    N = net_params.shape[1]
+    bc = min(bc, max(B, 8))
+    pad = (-B) % bc
+    if pad:
+        X = jnp.pad(X, ((0, pad), (0, 0)))
+    Bp = B + pad
+    U = jnp.take(X, link_src, axis=1)                 # [Bp, L]
+    W = jnp.take(X, link_dst, axis=1)
+
+    grid = (Bp // bc,)
+    const = lambda i: (0, 0)
+    out = pl.pallas_call(
+        functools.partial(_kernel, P=P, N=N, bc=bc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bc, J), lambda i: (i, 0)),
+            pl.BlockSpec((bc, L), lambda i: (i, 0)),
+            pl.BlockSpec((bc, L), lambda i: (i, 0)),
+            pl.BlockSpec((J,), lambda i: (0,)),
+            pl.BlockSpec((L,), lambda i: (0,)),
+            pl.BlockSpec((P * P, N), const),
+            pl.BlockSpec((9, P), const),
+            pl.BlockSpec((5, N), const),
+        ],
+        out_specs=pl.BlockSpec((bc, 4), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, 4), jnp.float32),
+        interpret=interpret,
+    )(X, U, W, F, H, path_flat, proc_params, net_params)
+    return out[:B]
+
+
+def pack_problem(problem) -> Tuple[jax.Array, ...]:
+    """Flatten a core.power.PlacementProblem into kernel operands."""
+    p = problem
+    path_flat = p.path_nodes.reshape(p.P * p.P, p.N)
+    proc_params = jnp.stack([p.E, p.C_pr, p.NS, p.pi_pr, p.pue_pr,
+                             p.EL, p.C_lan, p.pi_lan, p.lan_share])
+    net_params = jnp.stack([p.eps, p.C_net, p.pi_net, p.pue_net,
+                            p.idle_share])
+    F = p.F.reshape(-1)
+    return (p.link_src, p.link_dst, F, p.link_h, path_flat,
+            proc_params, net_params)

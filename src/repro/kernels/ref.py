@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for the Pallas kernels (tests assert_allclose vs these).
+
+  * flash_attention_ref: chunked online-softmax attention -- the same code
+    path the model stack uses (models.layers.flash_attention), re-exposed in
+    the [B, H, S, D] kernel layout.
+  * placement_objective_ref: the paper's Eq.(1)+(2) objective from
+    core.power, evaluated with vmap -- the "CPLEX objective" ground truth.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.power import PlacementProblem, apply_pins, evaluate
+from ..models.layers import flash_attention
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: Optional[int] = None,
+                        logit_cap: Optional[float] = None,
+                        q_offset: int = 0) -> jax.Array:
+    """q [B, H, Sq, D]; k/v [B, KH, Skv, D] -> [B, H, Sq, D]."""
+    B, H, Sq, D = q.shape
+    Skv = k.shape[2]
+    qpos = q_offset + jnp.arange(Sq)
+    kpos = jnp.arange(Skv)
+    out = flash_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), q_positions=qpos, kv_positions=kpos,
+        causal=causal, window=window, logit_cap=logit_cap, kv_chunk=128)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def placement_objective_ref(problem: PlacementProblem,
+                            Xb: jax.Array) -> jax.Array:
+    """[B, R, V] placements -> [B, 4] (objective, net, proc, violation)."""
+    def one(X):
+        bd = evaluate(problem, X)
+        return jnp.stack([bd.objective, bd.net, bd.proc, bd.violation])
+    return jax.vmap(one)(Xb)

@@ -1,0 +1,201 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh and extract memory / cost / collective analyses.
+
+This is the proof that the distribution config is coherent: a sharding
+mismatch, compile-time OOM or unsupported collective fails the cell.  The
+512 placeholder host devices exist ONLY here (flag above, set before any
+other import so jax locks the device count correctly).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch olmoe-1b-7b \
+      --shape train_4k [--multi-pod] [--accum 8] [--out-dir experiments/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .. import configs
+from ..models import costs as costs_mod
+from ..optim import adamw
+from ..parallel import sharding as sh
+from ..serve import cache as C
+from ..serve import engine
+from ..train.step import make_train_step
+from . import mesh as mesh_mod
+from . import specs as S
+from .roofline import analyze_hlo, roofline_terms
+
+
+def _named(tree, axes_tree, mesh):
+    return sh.shard_params(tree, axes_tree, mesh)
+
+
+def _batch_shardings(batch_specs: Dict, mesh) -> Dict:
+    out = {}
+    for k, v in batch_specs.items():
+        logical = ("batch",) + (None,) * (len(v.shape) - 1)
+        out[k] = jax.sharding.NamedSharding(
+            mesh, sh.logical_spec(logical, v.shape, mesh))
+    return out
+
+
+def build_train(cfg, shape: configs.Shape, mesh, accum: int):
+    state_sds, state_axes = S.train_state_specs(cfg)
+    batch_sds = S.token_specs(cfg, shape.global_batch, shape.seq_len,
+                              with_labels=True)
+    state_sh = _named(state_sds, state_axes, mesh)
+    batch_sh = _batch_shardings(batch_sds, mesh)
+    opt_cfg = adamw.AdamWConfig()
+    # compute_dtype: bf16 is the TPU-target setting, but the XLA *CPU*
+    # pipeline trips an internal check ("Invalid binary instruction opcode
+    # copy" in float normalization) on the bf16+shard_map+scan combination
+    # for the largest MoE, and CPU promotes bf16 compute to f32 before SPMD
+    # anyway (EXPERIMENTS.md §Perf, measurement-artifacts note) -- so the
+    # dry-run lowers the f32 variant; REPRO_BF16=1 opts in where it works.
+    import jax.numpy as _jnp
+    param_axes = None if os.environ.get("REPRO_NO_GC") else state_axes.params
+    cdtype = _jnp.bfloat16 if os.environ.get("REPRO_BF16") else None
+    step = make_train_step(cfg, opt_cfg, accum=accum,
+                           param_axes=param_axes, compute_dtype=cdtype)
+    fn = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                 out_shardings=(state_sh, None), donate_argnums=(0,))
+    return fn, (state_sds, batch_sds)
+
+
+def build_serve(cfg, shape: configs.Shape, mesh, kind: str):
+    params_sds, axes, batch_sds, extra, cache_tree = S.serve_specs(
+        cfg, shape.global_batch, shape.seq_len, kind)
+    params_sh = _named(params_sds, axes, mesh)
+    batch_sh = _batch_shardings(batch_sds, mesh)
+    cache_sds = C.sds(cache_tree)
+    cache_sh = C.shardings(cache_tree, mesh)
+    if kind == "prefill":
+        def fn(params, batch, cache):
+            return engine.prefill(params, cfg, batch, cache)
+        jitted = jax.jit(fn, in_shardings=(params_sh, batch_sh, cache_sh),
+                         out_shardings=(None, cache_sh),
+                         donate_argnums=(2,))
+        return jitted, (params_sds, batch_sds, cache_sds)
+    def fn(params, tokens, position, cache):
+        return engine.decode_step(params, cfg, tokens, position, cache)
+    jitted = jax.jit(
+        fn,
+        in_shardings=(params_sh, batch_sh["tokens"], None, cache_sh),
+        out_shardings=(None, cache_sh), donate_argnums=(3,))
+    return jitted, (params_sds, batch_sds["tokens"],
+                    extra["position"], cache_sds)
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             accum: Optional[int] = None, mesh=None,
+             verbose: bool = True) -> Dict:
+    cfg = configs.get(arch)
+    shape = configs.SHAPES[shape_name]
+    if shape not in configs.applicable_shapes(cfg):
+        return dict(arch=arch, shape=shape_name, skipped=True,
+                    reason="long_500k needs a sub-quadratic arch")
+    if mesh is None:
+        mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    dp = mesh.shape.get("pod", 1) * mesh.shape.get("data", 1)
+    if accum is None and shape.kind == "train":
+        accum = max(1, min(8, shape.global_batch // dp))
+
+    t0 = time.time()
+    with sh.mesh_context(mesh):
+        if shape.kind == "train":
+            fn, args = build_train(cfg, shape, mesh, accum)
+        else:
+            fn, args = build_serve(cfg, shape, mesh, shape.kind)
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = analyze_hlo(compiled.as_text(), n_dev)
+    model_fl = costs_mod.model_flops(cfg, shape)
+    terms = roofline_terms(
+        hlo.dot_flops, hlo.bytes_written, hlo.collective_wire_bytes,
+        peak_flops=mesh_mod.PEAK_FLOPS_BF16, hbm_bw=mesh_mod.HBM_BW,
+        ici_bw=mesh_mod.ICI_BW)
+    per_dev_bytes = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                     - mem.alias_size_in_bytes + mem.temp_size_in_bytes)
+    rec = dict(
+        arch=arch, shape=shape_name,
+        mesh=dict(shape=list(mesh.devices.shape),
+                  axes=list(mesh.axis_names), n_devices=int(n_dev)),
+        accum=accum,
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        memory=dict(
+            argument_bytes=mem.argument_size_in_bytes,
+            output_bytes=mem.output_size_in_bytes,
+            alias_bytes=mem.alias_size_in_bytes,
+            temp_bytes=mem.temp_size_in_bytes,
+            peak_per_device_bytes=per_dev_bytes,
+            fits_16gb=bool(per_dev_bytes < 16e9),
+        ),
+        cost_analysis=dict(
+            flops_uncorrected=cost.get("flops", 0.0),
+            bytes_accessed_uncorrected=cost.get("bytes accessed", 0.0)),
+        hlo=hlo.merged(),
+        model_flops=model_fl,
+        useful_flops_ratio=(model_fl["total_flops"] / n_dev / hlo.dot_flops
+                            if hlo.dot_flops else 0.0),
+        roofline=terms,
+    )
+    if verbose:
+        print(json.dumps(rec, indent=1))
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(configs.ARCH_IDS))
+    ap.add_argument("--shape", choices=list(configs.SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--accum", type=int, default=None)
+    ap.add_argument("--out-dir", default="experiments/dryrun")
+    args = ap.parse_args(argv)
+
+    out_dir = Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    mesh = mesh_mod.make_production_mesh(multi_pod=args.multi_pod)
+    tag = "multipod" if args.multi_pod else "singlepod"
+    cells = (configs.all_cells() if args.all
+             else [(args.arch, args.shape)])
+    failures = 0
+    for arch, shape in cells:
+        out_path = out_dir / f"{arch}_{shape}_{tag}.json"
+        try:
+            rec = run_cell(arch, shape, multi_pod=args.multi_pod,
+                           accum=args.accum, mesh=mesh, verbose=False)
+            out_path.write_text(json.dumps(rec, indent=1))
+            mem = rec.get("memory", {})
+            print(f"OK   {arch:24s} {shape:12s} {tag}: "
+                  f"compile={rec.get('compile_s', 0):7.1f}s "
+                  f"perdev={mem.get('peak_per_device_bytes', 0)/1e9:6.2f}GB "
+                  f"dominant={rec.get('roofline', {}).get('dominant', '?')}",
+                  flush=True)
+        except Exception as e:  # noqa: BLE001 -- report and continue
+            failures += 1
+            print(f"FAIL {arch:24s} {shape:12s} {tag}: "
+                  f"{type(e).__name__}: {e}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,288 @@
+"""Trip-count-aware HLO analysis: FLOPs, bytes and collective traffic.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE, which silently
+drops ~(repeats-1)/repeats of the compute of a scanned-layer model (verified
+empirically: a 4-step scan reports 1/4 the flops of its unrolled twin).  The
+dry-run therefore parses the partitioned HLO text, builds the computation
+call graph, extracts while trip counts (the loop-bound constant in the
+condition computation) and multiplies every op's cost by its execution
+count.  All shapes in the partitioned module are PER-DEVICE shapes, so the
+totals are per-device numbers -- exactly what the roofline terms need.
+
+Collective wire-bytes model (ring algorithms, g = group size):
+  all-gather:          result_bytes * (g-1)/g      received per device
+  all-reduce:          2 * bytes * (g-1)/g         (reduce-scatter + gather)
+  reduce-scatter:      result_bytes * (g-1)
+  all-to-all:          bytes * (g-1)/g
+  collective-permute:  bytes
+The task-spec "operand bytes" sum is also reported (operand = result/g for
+all-gather, result*g for reduce-scatter, result otherwise).
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^=]*?\)?)\s*"
+    r"([\w\-]+)\((.*)$")
+_CALLED_RE = re.compile(r"(?:to_apply|calls|condition|body)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# Ops that pass buffers through without writing new data: excluded from the
+# HBM-traffic proxy (a while's result is its aliased carry tuple -- counting
+# it per iteration would bill every stacked parameter once per layer).
+NON_WRITING = frozenset({
+    "while", "conditional", "call", "tuple", "get-tuple-element",
+    "parameter", "constant", "bitcast", "after-all", "opt-barrier"})
+
+
+def shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string (handles tuples by summing parts)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    symbols: Dict[str, str] = field(default_factory=dict)  # name -> type str
+
+
+def parse_computations(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    comment_re = re.compile(r"/\*.*?\*/")
+    for line in text.splitlines():
+        line = comment_re.sub("", line)
+        stripped = line.strip()
+        # computation header: "%name (args...) -> type {".  Args may nest
+        # parens / contain /*index=k*/ comments, so detect "no ' = ' before
+        # the first '('" rather than trying to match the whole arg list.
+        if stripped.endswith("{") and "->" in stripped:
+            header = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", stripped)
+            paren = stripped.find("(")
+            if header and " = " not in stripped[:paren]:
+                cur = Computation(name=header.group(1))
+                comps[cur.name] = cur
+                continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode, rest = m.groups()
+        cur.ops.append(Op(name, type_str.strip(), opcode, rest))
+        cur.symbols[name] = type_str.strip()
+    return comps
+
+
+def while_trip_count(cond: Computation) -> int:
+    """Loop bound from the condition computation's constant (scan pattern)."""
+    consts = []
+    for op in cond.ops:
+        if op.opcode == "constant":
+            m = re.search(r"constant\((-?\d+)\)", "constant(" + op.rest)
+            if m:
+                consts.append(int(m.group(1)))
+    return max(consts) if consts else 1
+
+
+def execution_counts(comps: Dict[str, Computation],
+                     entry: str) -> Dict[str, float]:
+    """Times each computation executes (entry = 1; while bodies x trip)."""
+    mult: Dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    order = [entry]
+    seen = {entry}
+    # BFS over call graph accumulating multipliers (call graph is a DAG)
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        for op in comp.ops:
+            callees = [m.group(1) for m in _CALLED_RE.finditer(op.rest)]
+            bm = _BRANCHES_RE.search(op.rest)
+            if bm:
+                callees += [c.strip().lstrip("%")
+                            for c in bm.group(1).split(",")]
+            factor = 1.0
+            if op.opcode == "while":
+                tm = _TRIP_RE.search(op.rest)
+                if tm:
+                    factor = max(1, int(tm.group(1)))
+                else:
+                    cond_m = re.search(r"condition=%?([\w.\-]+)", op.rest)
+                    if cond_m and cond_m.group(1) in comps:
+                        factor = max(
+                            1, while_trip_count(comps[cond_m.group(1)]))
+            for callee in callees:
+                if not callee or callee not in comps:
+                    continue
+                mult[callee] += mult[cname] * factor
+                if callee not in seen:
+                    seen.add(callee)
+                    order.append(callee)
+    return dict(mult)
+
+
+def _group_size(rest: str, n_devices: int) -> int:
+    m = _GROUPS_RE.search(rest)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(rest)
+    if m:
+        return int(m.group(2))
+    return n_devices
+
+
+@dataclass
+class HLOAnalysis:
+    dot_flops: float = 0.0                  # per device, trip-corrected
+    bytes_written: float = 0.0              # sum of op result bytes
+    collective_wire_bytes: float = 0.0      # ring-model bytes per device
+    collective_operand_bytes: float = 0.0   # task-spec operand-sum
+    per_collective: Dict[str, float] = field(default_factory=dict)
+    per_group_size: Dict[int, float] = field(default_factory=dict)
+    n_collective_ops: int = 0
+
+    def merged(self) -> Dict:
+        return dict(dot_flops=self.dot_flops, bytes_written=self.bytes_written,
+                    collective_wire_bytes=self.collective_wire_bytes,
+                    collective_operand_bytes=self.collective_operand_bytes,
+                    per_collective=dict(self.per_collective),
+                    per_group_size={str(k): v
+                                    for k, v in self.per_group_size.items()},
+                    n_collective_ops=self.n_collective_ops)
+
+
+def analyze_hlo(text: str, n_devices: int) -> HLOAnalysis:
+    comps = parse_computations(text)
+    entry = None
+    m = re.search(r"ENTRY\s+%?([\w.\-]+)", text)
+    if m:
+        entry = m.group(1)
+    if entry not in comps:
+        entry = next(iter(comps))
+    counts = execution_counts(comps, entry)
+    # computations reached via a fusion op's calls= are fused bodies: their
+    # internal ops produce no HBM traffic (the fusion's result is counted in
+    # the caller), but dots inside them still count as compute.
+    fusion_bodies = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode == "fusion":
+                for m in _CALLED_RE.finditer(op.rest):
+                    fusion_bodies.add(m.group(1))
+    out = HLOAnalysis()
+    for cname, comp in comps.items():
+        mult = counts.get(cname, 0.0)
+        if mult <= 0:
+            continue
+        fused = cname in fusion_bodies
+        for op in comp.ops:
+            rbytes = shape_bytes(op.type_str)
+            if op.opcode not in NON_WRITING and not fused:
+                out.bytes_written += rbytes * mult
+            if op.opcode == "dot":
+                dims = shape_dims(op.type_str)
+                res = math.prod(dims) if dims else 0
+                cm = _CONTRACT_RE.search(op.rest)
+                contracted = 1
+                if cm:
+                    # lhs operand name is the first argument
+                    arg = re.match(r"\s*%?([\w.\-]+)", op.rest)
+                    lhs_shape = comp.symbols.get(arg.group(1), "") if arg else ""
+                    ldims = shape_dims(lhs_shape)
+                    for ci in cm.group(1).split(","):
+                        if ci and ldims and int(ci) < len(ldims):
+                            contracted *= ldims[int(ci)]
+                out.dot_flops += 2.0 * res * contracted * mult
+            elif op.opcode in COLLECTIVES:
+                g = _group_size(op.rest, n_devices)
+                if op.opcode == "all-gather":
+                    wire = rbytes * (g - 1) / max(g, 1)
+                    operand = rbytes / max(g, 1)
+                elif op.opcode == "all-reduce":
+                    wire = 2.0 * rbytes * (g - 1) / max(g, 1)
+                    operand = rbytes
+                elif op.opcode == "reduce-scatter":
+                    wire = rbytes * (g - 1)
+                    operand = rbytes * g
+                elif op.opcode == "all-to-all":
+                    wire = rbytes * (g - 1) / max(g, 1)
+                    operand = rbytes
+                else:  # collective-permute
+                    wire = rbytes
+                    operand = rbytes
+                out.collective_wire_bytes += wire * mult
+                out.collective_operand_bytes += operand * mult
+                out.per_collective[op.opcode] = \
+                    out.per_collective.get(op.opcode, 0.0) + wire * mult
+                out.per_group_size[g] = \
+                    out.per_group_size.get(g, 0.0) + wire * mult
+                out.n_collective_ops += 1
+    return out
+
+
+def roofline_terms(dot_flops_per_dev: float, bytes_per_dev: float,
+                   wire_bytes_per_dev: float, *,
+                   peak_flops: float, hbm_bw: float, ici_bw: float) -> Dict:
+    compute_s = dot_flops_per_dev / peak_flops
+    memory_s = bytes_per_dev / hbm_bw
+    collective_s = wire_bytes_per_dev / ici_bw
+    total = max(compute_s, memory_s, collective_s)
+    dominant = ("compute" if total == compute_s else
+                "memory" if total == memory_s else "collective")
+    return dict(compute_s=compute_s, memory_s=memory_s,
+                collective_s=collective_s, dominant=dominant,
+                bound_s=total,
+                compute_fraction=compute_s / total if total else 0.0)

@@ -1,0 +1,101 @@
+"""ShapeDtypeStruct input specs for every (architecture x shape) cell.
+
+No device allocation happens here: everything is abstract (eval_shape for
+parameters, TSpec trees for caches), which is what lets the 236B configs
+lower on a CPU container.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .. import configs
+from ..models import model as M
+from ..models.config import ArchConfig
+from ..optim import adamw
+from ..serve import cache as C
+from ..train.step import TrainState
+
+SDS = jax.ShapeDtypeStruct
+
+
+def dec_len(cfg: ArchConfig, seq_len: int) -> int:
+    """Decoder-side token count for a given assigned seq_len."""
+    if cfg.is_encoder_decoder:
+        return max(64, int(seq_len * cfg.decoder_frac))
+    if cfg.vision_prefix_tokens:
+        return seq_len - cfg.vision_prefix_tokens
+    return seq_len
+
+
+def abstract_model(cfg: ArchConfig, dtype: Optional[Any] = None
+                   ) -> Tuple[Any, Dict]:
+    """(abstract params, logical axes) without allocating anything."""
+    box = {}
+
+    def f(key):
+        p, axes = M.init_model(cfg, key)
+        box["axes"] = axes
+        return p
+
+    shapes = jax.eval_shape(f, jax.random.key(0))
+    if dtype is not None:
+        shapes = jax.tree_util.tree_map(
+            lambda s: SDS(s.shape, dtype) if s.dtype in
+            (jnp.float32, jnp.bfloat16) else s, shapes)
+    return shapes, box["axes"]
+
+
+def token_specs(cfg: ArchConfig, batch: int, seq_len: int,
+                with_labels: bool) -> Dict[str, SDS]:
+    """Token / stub-frontend input specs for one (micro)batch."""
+    dl = dec_len(cfg, seq_len)
+    out: Dict[str, SDS] = {"tokens": SDS((batch, dl), jnp.int32)}
+    if with_labels:
+        out["labels"] = SDS((batch, dl), jnp.int32)
+    if cfg.is_encoder_decoder:
+        out["frames"] = SDS((batch, seq_len, cfg.d_model), jnp.bfloat16)
+    if cfg.vision_prefix_tokens:
+        out["patches"] = SDS((batch, cfg.vision_prefix_tokens, cfg.d_model),
+                             jnp.bfloat16)
+    return out
+
+
+def train_state_specs(cfg: ArchConfig, compress_pod: bool = False):
+    """(abstract TrainState, state logical-axes TrainState)."""
+    params, axes = abstract_model(cfg)
+    f32 = lambda t: jax.tree_util.tree_map(lambda s: SDS(s.shape,
+                                                         jnp.float32), t)
+    opt = adamw.OptState(m=f32(params), v=f32(params),
+                         count=SDS((), jnp.int32))
+    err = f32(params) if compress_pod else None
+    state = TrainState(params=params, opt=opt, step=SDS((), jnp.int32),
+                       err=err)
+    oaxes = adamw.state_axes(axes)
+    state_axes = TrainState(params=axes, opt=oaxes, step=(),
+                            err=(axes if compress_pod else None))
+    return state, state_axes
+
+
+def serve_specs(cfg: ArchConfig, batch: int, seq_len: int, kind: str):
+    """(abstract params, axes, batch specs, cache spec tree).
+
+    kind == 'prefill': tokens are the full prompt, cache sized to hold it.
+    kind == 'decode' : tokens [B, 1] + scalar position, cache holds seq_len.
+    """
+    params, axes = abstract_model(cfg, dtype=jnp.bfloat16)
+    dl = dec_len(cfg, seq_len)
+    enc_len = seq_len if cfg.is_encoder_decoder else 0
+    spec = C.cache_spec(cfg, batch, dl, enc_len=enc_len)
+    if kind == "prefill":
+        batch_specs = token_specs(cfg, batch, seq_len, with_labels=False)
+        extra: Dict[str, Any] = {}
+    else:
+        batch_specs = {"tokens": SDS((batch, 1), jnp.int32)}
+        if cfg.is_encoder_decoder:
+            pass  # cross-cache already holds projected encoder states
+        extra = {"position": SDS((), jnp.int32)}
+    return params, axes, batch_specs, extra, spec

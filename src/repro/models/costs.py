@@ -1,0 +1,142 @@
+"""Analytic parameter / FLOP / bandwidth accounting.
+
+Two consumers:
+  * the roofline report (MODEL_FLOPS = 6*N*D train / 2*N*D-per-token decode,
+    N = active non-embedding params, + attention context terms), compared
+    against trip-corrected HLO dot-FLOPs to expose remat / dispatch waste;
+  * the CFN bridge (core.vsr.from_architecture): per-layer GFLOP/token and
+    inter-layer activation bitrates turn any assigned architecture into the
+    paper's VSR abstraction.
+
+Everything is derived from ``jax.eval_shape`` over the real ``init_model``,
+so the numbers track the actual parameter tree, not a hand-maintained
+formula.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ArchConfig
+from . import model as M
+
+
+def _tree_sizes(tree, path=()) -> List[Tuple[Tuple, int]]:
+    out = []
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out += _tree_sizes(v, path + (k,))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out += _tree_sizes(v, path + (str(i),))
+    else:
+        out.append((path, int(np.prod(tree.shape))))
+    return out
+
+
+def param_breakdown(cfg: ArchConfig) -> Dict[str, int]:
+    """total / embedding / expert / active parameter counts."""
+    shapes = jax.eval_shape(
+        lambda k: M.init_model(cfg, k)[0], jax.random.key(0))
+    sizes = _tree_sizes(shapes)
+    total = sum(s for _, s in sizes)
+    embed = sum(s for p, s in sizes
+                if p[-1] in ("embed", "lm_head"))
+    expert = sum(s for p, s in sizes
+                 if any(str(k).startswith("we_") for k in p))
+    active_expert = (expert * cfg.top_k / cfg.n_experts
+                     if cfg.moe and cfg.n_experts else 0)
+    active = total - expert + active_expert
+    return dict(total=total, embed=embed, expert=expert,
+                active=int(active), active_nonembed=int(active - embed),
+                nonembed=total - embed)
+
+
+def _attention_layers(cfg: ArchConfig) -> List[Tuple[str, int]]:
+    """(kind, effective kv dim) for every layer that attends."""
+    out = []
+    for grp in M.layer_plan(cfg):
+        for _ in range(grp.repeats):
+            for kind in grp.kinds:
+                if kind in ("mlstm", "slstm"):
+                    continue
+                out.append((kind, cfg.head_dim))
+    return out
+
+
+def attention_flops(cfg: ArchConfig, s_q: int, s_kv: int,
+                    causal_avg: bool) -> float:
+    """Scores + PV flops for the whole stack at the given context."""
+    total = 0.0
+    H, Dh = cfg.n_heads, cfg.head_dim
+    for kind, _ in _attention_layers(cfg):
+        w = M.block_window(cfg, kind)
+        kv = min(w, s_kv) if w else s_kv
+        if causal_avg and kv == s_kv:
+            kv = max(1, kv // 2)
+        total += 4.0 * s_q * kv * H * Dh
+    return total
+
+
+def model_flops(cfg: ArchConfig, shape) -> Dict[str, float]:
+    """Useful FLOPs for one step of the given shape (whole mesh)."""
+    pb = param_breakdown(cfg)
+    N = pb["active_nonembed"]
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        from ..launch.specs import dec_len
+        toks = B * dec_len(cfg, S)
+        flops = 6.0 * N * toks + 3.0 * attention_flops(
+            cfg, dec_len(cfg, S), dec_len(cfg, S), causal_avg=True) * B
+    elif shape.kind == "prefill":
+        from ..launch.specs import dec_len
+        toks = B * dec_len(cfg, S)
+        flops = 2.0 * N * toks + attention_flops(
+            cfg, dec_len(cfg, S), dec_len(cfg, S), causal_avg=True) * B
+    else:  # decode: one token against an S-token cache
+        flops = 2.0 * N * B + attention_flops(cfg, 1, S,
+                                              causal_avg=False) * B
+    return dict(total_flops=flops, params=pb)
+
+
+def layer_costs(cfg: ArchConfig, context: int = 2048,
+                ) -> Tuple[List[float], List[float]]:
+    """(gflop_per_token per layer, boundary activation bytes per token).
+
+    Used by core.vsr.from_architecture: one transformer layer == one VM in
+    the paper's abstraction.  Inference cost: 2 FLOPs per active param plus
+    the attention context term at the given context length.
+    """
+    shapes = jax.eval_shape(
+        lambda k: M.init_model(cfg, k)[0], jax.random.key(0))
+    plan = M.layer_plan(cfg)
+    gflops: List[float] = []
+    act_bytes: List[float] = []
+    H, Dh = cfg.n_heads, cfg.head_dim
+    for gi, grp in enumerate(plan):
+        sizes = _tree_sizes(shapes[f"g{gi}"])
+        per_layer: Dict[str, int] = {}
+        for path, size in sizes:
+            bj = path[0]
+            per_layer[bj] = per_layer.get(bj, 0) + size // grp.repeats
+        for _ in range(grp.repeats):
+            for j, kind in enumerate(grp.kinds):
+                n = per_layer.get(f"b{j}", 0)
+                if cfg.moe and kind in ("attn_moe", "mla_moe"):
+                    sizes_j = [(p, s) for p, s in sizes if p[0] == f"b{j}"]
+                    expert = sum(s for p, s in sizes_j
+                                 if any(str(k).startswith("we_")
+                                        for k in p)) // grp.repeats
+                    n = n - expert + expert * cfg.top_k / cfg.n_experts
+                fl = 2.0 * n
+                if kind not in ("mlstm", "slstm"):
+                    w = M.block_window(cfg, kind)
+                    kv = min(w, context) if w else context
+                    fl += 4.0 * kv * H * Dh
+                gflops.append(fl / 1e9)
+                act_bytes.append(2.0 * cfg.d_model)
+    return gflops, act_bytes

@@ -1,0 +1,813 @@
+"""Shared transformer building blocks (pure JAX, mesh-agnostic).
+
+Attention is flash-style (KV-chunked online softmax) in plain jnp so it
+compiles on any backend and doubles as the oracle for the Pallas kernel in
+kernels/flash_attention.  Supports GQA, sliding windows, logit softcaps,
+qk-norm and MLA.  MoE uses capacity-based dispatch blocked over token groups
+(GShard-style) so the HLO FLOPs reflect *active* expert compute.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import shard
+from .config import ArchConfig
+
+Params = Dict[str, Any]
+
+# ---------------------------------------------------------------------------
+# init helper
+# ---------------------------------------------------------------------------
+
+
+class Init:
+    """Collects parameter arrays + their logical sharding axes."""
+
+    def __init__(self, key: jax.Array):
+        self._key = key
+        self.params: Params = {}
+        self.axes: Dict[str, Tuple] = {}
+
+    def _next(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def mk(self, name: str, shape, axes, scale: Optional[float] = None,
+           mode: str = "normal") -> None:
+        assert len(axes) == len(shape), (name, shape, axes)
+        if mode == "zeros":
+            val = jnp.zeros(shape, jnp.float32)
+        elif mode == "ones":
+            val = jnp.ones(shape, jnp.float32)
+        else:
+            if scale is None:
+                fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+                scale = 1.0 / math.sqrt(max(1, fan_in))
+            val = scale * jax.random.normal(self._next(), shape, jnp.float32)
+        self.params[name] = val
+        self.axes[name] = tuple(axes)
+
+    def sub(self, name: str, init_fn) -> None:
+        """Nest another init under ``name``."""
+        child = Init(self._next())
+        init_fn(child)
+        self.params[name] = child.params
+        self.axes[name] = child.axes
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float,
+         rot_dims: Optional[int] = None) -> jax.Array:
+    """Rotary embedding on the last dim; x [..., S, H, D], positions [..., S]."""
+    d = rot_dims or x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(0, half, dtype=jnp.float32)
+                    / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(ang)[..., :, None, :]   # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:d]
+    rx1 = x1 * cos - x2 * sin
+    rx2 = x2 * cos + x1 * sin
+    out = jnp.concatenate([rx1, rx2, x[..., d:]], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# flash-style attention (jnp oracle; Pallas kernel mirrors this)
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    q_positions: jax.Array, kv_positions: jax.Array,
+                    causal: bool = True, window: Optional[int] = None,
+                    logit_cap: Optional[float] = None,
+                    kv_chunk: int = 1024) -> jax.Array:
+    """Online-softmax attention, scanned over KV chunks.
+
+    q [B, Sq, H, D]; k/v [B, Skv, KH, D(v)]; GQA via H = KH * G.
+    ``kv_positions`` < 0 marks padded/unwritten cache slots (masked out).
+    Never materializes the [Sq, Skv] score matrix beyond one chunk.
+    """
+    B, Sq, H, D = q.shape
+    Skv, KH = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = H // KH
+    scale = 1.0 / math.sqrt(D)
+    qg = (q * scale).reshape(B, Sq, KH, G, D).astype(jnp.float32)
+
+    n_chunks = max(1, math.ceil(Skv / kv_chunk))
+    pad = n_chunks * kv_chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, (0, pad), constant_values=-1)
+    kc = k.reshape(B, n_chunks, kv_chunk, KH, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, kv_chunk, KH, Dv).transpose(1, 0, 2, 3, 4)
+    pc = kv_positions.reshape(n_chunks, kv_chunk)
+
+    def chunk_step(carry, inp):
+        m, l, acc = carry
+        kj, vj, pj = inp          # [B, C, KH, D], [B, C, KH, Dv], [C]
+        s = jnp.einsum("bqhgd,bchd->bqhgc", qg, kj.astype(jnp.float32))
+        s = softcap(s, logit_cap)
+        mask = (pj >= 0)[None, None, None, None, :]
+        if causal:
+            rel = q_positions[None, :, None, None, None] - \
+                pj[None, None, None, None, :]
+            mask = mask & (rel >= 0)
+            if window is not None:
+                mask = mask & (rel < window)
+        s = jnp.where(mask, s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        # guard fully-masked rows
+        m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(jnp.where(jnp.isneginf(m), 0.0, m) - m_safe)
+        corr = jnp.where(jnp.isneginf(m), 0.0, corr)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bqhgc,bchv->bqhgv", p, vj.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, KH, G), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Sq, KH, G), jnp.float32)
+    a0 = jnp.zeros((B, Sq, KH, G, Dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(chunk_step, (m0, l0, a0), (kc, vc, pc))
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    return out.reshape(B, Sq, H, Dv)
+
+
+def direct_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     q_positions: jax.Array, kv_positions: jax.Array,
+                     causal: bool = True, window: Optional[int] = None,
+                     logit_cap: Optional[float] = None) -> jax.Array:
+    """Unchunked attention for short q (decode): one einsum over the cache.
+
+    Because there is no sequential chunk scan, the XLA SPMD partitioner can
+    shard k/v along the *sequence* axis and lower the softmax max/sum into
+    all-reduces -- distributed flash-decode.  Memory is O(B*H*Sq*Skv) scores,
+    fine for Sq <= a few tokens.
+    """
+    B, Sq, H, D = q.shape
+    Skv, KH = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = H // KH
+    qg = (q.astype(jnp.float32) / math.sqrt(D)).reshape(B, Sq, KH, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, k.astype(jnp.float32))
+    s = softcap(s, logit_cap)
+    mask = (kv_positions >= 0)[None, None, None, None, :]
+    if causal:
+        rel = q_positions[None, :, None, None, None] - \
+            kv_positions[None, None, None, None, :]
+        mask = mask & (rel >= 0)
+        if window is not None:
+            mask = mask & (rel < window)
+    s = jnp.where(mask, s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isneginf(m), 0.0, m)
+    p = jnp.exp(s - m)
+    p = jnp.where(mask, p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bqhgk,bkhv->bqhgv", p, v.astype(jnp.float32))
+    out = out / jnp.maximum(l, 1e-20)
+    return out.reshape(B, Sq, H, Dv)
+
+
+# Q sequence lengths up to this use the direct (seq-shardable) path.
+DECODE_DIRECT_MAX_Q = 8
+
+
+# ---------------------------------------------------------------------------
+# flash attention with a TRUE flash backward (custom VJP)
+#
+# Differentiating the chunked forward scan makes JAX stack every chunk's
+# probability tensor for the VJP: O(n_chunks * B * Sq * H * chunk) fp32 --
+# measured 190+ GB/device on hymba train_4k.  The custom backward below
+# recomputes scores one kv chunk at a time (the standard FlashAttention-2
+# backward), carrying only dq and emitting dk/dv per chunk.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def _flash(q, k, v, q_positions, kv_positions, causal, window, logit_cap,
+           kv_chunk):
+    return flash_attention(q, k, v, q_positions=q_positions,
+                           kv_positions=kv_positions, causal=causal,
+                           window=window, logit_cap=logit_cap,
+                           kv_chunk=kv_chunk)
+
+
+def _flash_fwd(q, k, v, q_positions, kv_positions, causal, window,
+               logit_cap, kv_chunk):
+    out = _flash(q, k, v, q_positions, kv_positions, causal, window,
+                 logit_cap, kv_chunk)
+    return out, (q, k, v, q_positions, kv_positions, out)
+
+
+def _flash_bwd(causal, window, logit_cap, kv_chunk, res, do):
+    q, k, v, q_positions, kv_positions, out = res
+    B, Sq, H, D = q.shape
+    Skv, KH = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = H // KH
+    scale = 1.0 / math.sqrt(D)
+    qg = (q.astype(jnp.float32) * scale).reshape(B, Sq, KH, G, D)
+    og = out.astype(jnp.float32).reshape(B, Sq, KH, G, Dv)
+    dog = do.astype(jnp.float32).reshape(B, Sq, KH, G, Dv)
+    delta = jnp.sum(og * dog, axis=-1)                     # [B,Sq,KH,G]
+
+    n_chunks = max(1, math.ceil(Skv / kv_chunk))
+    pad = n_chunks * kv_chunk - Skv
+    kp, vp, kvp = k, v, kv_positions
+    if pad:
+        kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kvp = jnp.pad(kv_positions, (0, pad), constant_values=-1)
+    kc = kp.reshape(B, n_chunks, kv_chunk, KH, D).transpose(1, 0, 2, 3, 4)
+    vc = vp.reshape(B, n_chunks, kv_chunk, KH, Dv).transpose(1, 0, 2, 3, 4)
+    pc = kvp.reshape(n_chunks, kv_chunk)
+
+    # softmax statistics are recomputed from a first light pass: exact
+    # log-sum-exp via the forward oracle is equivalent to caching (m, l);
+    # we recompute row max/sum per chunk pair-free using the forward's out
+    # identity  p = exp(s - lse)  with  lse = log l + m  derived below.
+    # One extra pass computes lse exactly:
+    def lse_pass(carry, inp):
+        m_run, l_run = carry
+        kj, pj = inp
+        s = jnp.einsum("bqhgd,bchd->bqhgc", qg, kj.astype(jnp.float32))
+        s = softcap(s, logit_cap)
+        mask = (pj >= 0)[None, None, None, None, :]
+        if causal:
+            rel = q_positions[None, :, None, None, None] - \
+                pj[None, None, None, None, :]
+            mask = mask & (rel >= 0)
+            if window is not None:
+                mask = mask & (rel < window)
+        s = jnp.where(mask, s, -jnp.inf)
+        m_new = jnp.maximum(m_run, s.max(axis=-1))
+        m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+        corr = jnp.exp(jnp.where(jnp.isneginf(m_run), 0.0, m_run) - m_safe)
+        corr = jnp.where(jnp.isneginf(m_run), 0.0, corr)
+        p = jnp.where(mask, jnp.exp(s - m_safe[..., None]), 0.0)
+        return (m_new, l_run * corr + p.sum(axis=-1)), None
+
+    m0 = jnp.full((B, Sq, KH, G), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Sq, KH, G), jnp.float32)
+    (m_fin, l_fin), _ = jax.lax.scan(lse_pass, (m0, l0), (kc, pc))
+    m_safe = jnp.where(jnp.isneginf(m_fin), 0.0, m_fin)
+    lse = m_safe + jnp.log(jnp.maximum(l_fin, 1e-20))      # [B,Sq,KH,G]
+
+    def bwd_chunk(dq_acc, inp):
+        kj, vj, pj = inp
+        kf = kj.astype(jnp.float32)
+        s = jnp.einsum("bqhgd,bchd->bqhgc", qg, kf)
+        t = s if logit_cap is None else s / logit_cap
+        sc = softcap(s, logit_cap)
+        mask = (pj >= 0)[None, None, None, None, :]
+        if causal:
+            rel = q_positions[None, :, None, None, None] - \
+                pj[None, None, None, None, :]
+            mask = mask & (rel >= 0)
+            if window is not None:
+                mask = mask & (rel < window)
+        p = jnp.where(mask, jnp.exp(sc - lse[..., None]), 0.0)
+        dv_j = jnp.einsum("bqhgc,bqhgv->bchv", p, dog)
+        dp = jnp.einsum("bqhgv,bchv->bqhgc", dog, vj.astype(jnp.float32))
+        ds = p * (dp - delta[..., None])
+        if logit_cap is not None:                 # d softcap = 1 - tanh^2
+            ds = ds * (1.0 - jnp.tanh(t) ** 2)
+        dq_acc = dq_acc + jnp.einsum("bqhgc,bchd->bqhgd", ds, kf)
+        dk_j = jnp.einsum("bqhgc,bqhgd->bchd", ds, qg)
+        return dq_acc, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((B, Sq, KH, G, D), jnp.float32)
+    dq, (dk_c, dv_c) = jax.lax.scan(bwd_chunk, dq0, (kc, vc, pc))
+    dq = (dq * scale).reshape(B, Sq, H, D).astype(q.dtype)
+    dk = dk_c.transpose(1, 0, 2, 3, 4).reshape(B, n_chunks * kv_chunk,
+                                               KH, D)[:, :Skv].astype(k.dtype)
+    dv = dv_c.transpose(1, 0, 2, 3, 4).reshape(B, n_chunks * kv_chunk,
+                                               KH, Dv)[:, :Skv].astype(v.dtype)
+    return dq, dk, dv, None, None
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def attend(q, k, v, *, q_positions, kv_positions, causal=True, window=None,
+           logit_cap=None, kv_chunk: int = 512):
+    """Dispatch: direct path for decode-sized q, flash (custom VJP) else."""
+    if q.shape[1] <= DECODE_DIRECT_MAX_Q:
+        return direct_attention(q, k, v, q_positions=q_positions,
+                                kv_positions=kv_positions, causal=causal,
+                                window=window, logit_cap=logit_cap)
+    return _flash(q, k, v, q_positions, kv_positions, causal, window,
+                  logit_cap, kv_chunk)
+
+
+# ---------------------------------------------------------------------------
+# attention block (GQA / SWA / softcap / qk-norm) with KV cache
+# ---------------------------------------------------------------------------
+
+
+def init_attention(ini: Init, cfg: ArchConfig, prefix: str = "") -> None:
+    D, H, KH, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ini.mk(prefix + "wq", (D, H * Dh), ("fsdp", "tp"))
+    ini.mk(prefix + "wk", (D, KH * Dh), ("fsdp", "tp"))
+    ini.mk(prefix + "wv", (D, KH * Dh), ("fsdp", "tp"))
+    ini.mk(prefix + "wo", (H * Dh, D), ("tp", "fsdp"),
+           scale=1.0 / math.sqrt(H * Dh * 2 * cfg.n_layers))
+    if cfg.qk_norm:
+        ini.mk(prefix + "q_norm", (Dh,), (None,), mode="zeros")
+        ini.mk(prefix + "k_norm", (Dh,), (None,), mode="zeros")
+
+
+def attention(params: Params, x: jax.Array, cfg: ArchConfig, *,
+              positions: jax.Array, cache: Optional[Dict] = None,
+              causal: bool = True, window: Optional[int] = None,
+              prefix: str = "") -> Tuple[jax.Array, Optional[Dict]]:
+    """x [B, S, D] -> [B, S, D].  cache: {"k","v" [B,Smax,KH,Dh], "pos" []}.
+
+    SWA cache is a ring buffer of size Smax (== window for windowed layers):
+    slot = position % Smax; slot positions are tracked in cache["pos_ids"].
+    """
+    B, S, D = x.shape
+    H, KH, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ params[prefix + "wq"].astype(x.dtype)).reshape(B, S, H, Dh)
+    k = (x @ params[prefix + "wk"].astype(x.dtype)).reshape(B, S, KH, Dh)
+    v = (x @ params[prefix + "wv"].astype(x.dtype)).reshape(B, S, KH, Dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, params[prefix + "q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params[prefix + "k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    from ..parallel.sharding import axis_size
+    if H % max(1, axis_size("model")) == 0 or S <= DECODE_DIRECT_MAX_Q:
+        q = shard(q, "batch", None, "heads", None)
+    else:
+        # heads don't divide the TP axis (hymba: 25 heads on 16-way model):
+        # fall back to sequence parallelism for the q rows so attention
+        # compute doesn't silently replicate across the model axis.
+        q = shard(q, "batch", "q_seq", None, None)
+    k = shard(k, "batch", None, "heads", None)
+
+    if cache is None:
+        kv_pos = positions[0] if positions.ndim == 2 else positions
+        out = attend(q, k, v, q_positions=kv_pos,
+                     kv_positions=kv_pos, causal=causal,
+                     window=window,
+                     logit_cap=cfg.attn_logit_softcap)
+        new_cache = None
+    else:
+        Smax = cache["k"].shape[1]
+        slots = positions % Smax                       # ring-buffer slots
+        ck = _scatter_kv(cache["k"], k, slots)
+        cv = _scatter_kv(cache["v"], v, slots)
+        pos_ids = cache["pos_ids"].at[slots].set(positions)
+        ck = shard(ck, "batch", "kv_seq", None, None)
+        cv = shard(cv, "batch", "kv_seq", None, None)
+        out = attend(q, ck, cv, q_positions=positions,
+                     kv_positions=pos_ids, causal=causal,
+                     window=window,
+                     logit_cap=cfg.attn_logit_softcap)
+        new_cache = dict(k=ck, v=cv, pos_ids=pos_ids)
+    out = out.astype(x.dtype).reshape(B, S, H * Dh)
+    y = out @ params[prefix + "wo"].astype(x.dtype)
+    return shard(y, "batch", None, None), new_cache
+
+
+def _scatter_kv(buf: jax.Array, new: jax.Array, slots: jax.Array) -> jax.Array:
+    """buf [B,Smax,KH,Dh] <- new [B,S,KH,Dh] at ``slots`` [S]."""
+    return buf.astype(new.dtype).at[:, slots].set(new)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): low-rank compressed KV with decoupled RoPE
+# ---------------------------------------------------------------------------
+
+
+def init_mla(ini: Init, cfg: ArchConfig) -> None:
+    D, H = cfg.d_model, cfg.n_heads
+    dn, dr, dv = cfg.head_dim, cfg.rope_head_dim, cfg.v_dim
+    ini.mk("wq_a", (D, cfg.q_lora_rank), ("fsdp", None))
+    ini.mk("q_a_norm", (cfg.q_lora_rank,), (None,), mode="zeros")
+    ini.mk("wq_b", (cfg.q_lora_rank, H * (dn + dr)), (None, "tp"))
+    ini.mk("wkv_a", (D, cfg.kv_lora_rank + dr), ("fsdp", None))
+    ini.mk("kv_a_norm", (cfg.kv_lora_rank,), (None,), mode="zeros")
+    ini.mk("wk_b", (cfg.kv_lora_rank, H * dn), (None, "tp"))
+    ini.mk("wv_b", (cfg.kv_lora_rank, H * dv), (None, "tp"))
+    ini.mk("wo", (H * dv, D), ("tp", "fsdp"),
+           scale=1.0 / math.sqrt(H * dv * 2 * cfg.n_layers))
+
+
+def mla_attention(params: Params, x: jax.Array, cfg: ArchConfig, *,
+                  positions: jax.Array, cache: Optional[Dict] = None
+                  ) -> Tuple[jax.Array, Optional[Dict]]:
+    """Cache holds the compressed c_kv [B, Smax, kv_lora] + k_rope."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.head_dim, cfg.rope_head_dim, cfg.v_dim
+    rank = cfg.kv_lora_rank
+
+    qa = rms_norm(x @ params["wq_a"].astype(x.dtype), params["q_a_norm"],
+                  cfg.norm_eps)
+    q = (qa @ params["wq_b"].astype(x.dtype)).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = x @ params["wkv_a"].astype(x.dtype)          # [B,S,rank+dr]
+    c_kv = rms_norm(kv_a[..., :rank], params["kv_a_norm"], cfg.norm_eps)
+    k_rope = rope(kv_a[..., None, rank:], positions, cfg.rope_theta)  # [B,S,1,dr]
+
+    if cache is not None:
+        Smax = cache["c_kv"].shape[1]
+        slots = positions % Smax
+        c_kv = cache["c_kv"].astype(x.dtype).at[:, slots].set(c_kv)
+        k_rope = cache["k_rope"].astype(x.dtype).at[:, slots].set(
+            k_rope.squeeze(2))[..., None, :]
+        pos_ids = cache["pos_ids"].at[slots].set(positions)
+        c_kv = shard(c_kv, "batch", "kv_seq", None)
+        new_cache = dict(c_kv=c_kv, k_rope=k_rope.squeeze(2), pos_ids=pos_ids)
+    else:
+        pos_ids = positions
+        new_cache = None
+
+    if S <= DECODE_DIRECT_MAX_Q and cache is not None:
+        # Absorbed decode path: attention runs IN the compressed space, the
+        # cache is never expanded to per-head K/V (the point of MLA).
+        #   q_c[b,s,h,r]   = q_nope . wk_b(head h)          (W^UK absorbed)
+        #   score          = q_c . c_kv + q_rope . k_rope
+        #   out            = (softmax . c_kv) @ wv_b        (W^UV absorbed)
+        wk_b = params["wk_b"].astype(x.dtype).reshape(rank, H, dn)
+        wv_b = params["wv_b"].astype(x.dtype).reshape(rank, H, dv)
+        q_c = jnp.einsum("bshd,rhd->bshr", q_nope, wk_b).astype(jnp.float32)
+        scale = 1.0 / math.sqrt(dn + dr)
+        s_c = jnp.einsum("bshr,bkr->bshk", q_c,
+                         c_kv.astype(jnp.float32)) * scale
+        s_r = jnp.einsum("bshd,bkd->bshk", q_rope.astype(jnp.float32),
+                         k_rope.squeeze(2).astype(jnp.float32)) * scale
+        s = s_c + s_r
+        mask = (pos_ids >= 0)[None, None, None, :]
+        rel = positions[None, :, None, None] - pos_ids[None, None, None, :]
+        mask = mask & (rel >= 0)
+        s = jnp.where(mask, s, -jnp.inf)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - jnp.where(jnp.isneginf(m), 0.0, m))
+        p = jnp.where(mask, p, 0.0)
+        p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-20)
+        out_c = jnp.einsum("bshk,bkr->bshr", p, c_kv.astype(jnp.float32))
+        out = jnp.einsum("bshr,rhv->bshv", out_c.astype(x.dtype), wv_b)
+    else:
+        # expand compressed KV to per-head keys/values (train / prefill)
+        Skv = c_kv.shape[1]
+        k_nope = (c_kv @ params["wk_b"].astype(x.dtype)).reshape(B, Skv, H, dn)
+        val = (c_kv @ params["wv_b"].astype(x.dtype)).reshape(B, Skv, H, dv)
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (B, Skv, H, dr))], axis=-1)
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        q_full = shard(q_full, "batch", None, "heads", None)
+        k_full = shard(k_full, "batch", None, "heads", None)
+        out = attend(q_full, k_full, val, q_positions=positions,
+                     kv_positions=pos_ids, causal=True)
+    out = out.astype(x.dtype).reshape(B, S, H * dv)
+    y = out @ params["wo"].astype(x.dtype)
+    return shard(y, "batch", None, None), new_cache
+
+
+# ---------------------------------------------------------------------------
+# dense MLP + MoE
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(ini: Init, d_model: int, d_ff: int, n_layers: int,
+             prefix: str = "") -> None:
+    ini.mk(prefix + "w_gate", (d_model, d_ff), ("fsdp", "tp"))
+    ini.mk(prefix + "w_up", (d_model, d_ff), ("fsdp", "tp"))
+    ini.mk(prefix + "w_down", (d_ff, d_model), ("tp", "fsdp"),
+           scale=1.0 / math.sqrt(d_ff * 2 * n_layers))
+
+
+def mlp(params: Params, x: jax.Array, prefix: str = "") -> jax.Array:
+    g = x @ params[prefix + "w_gate"].astype(x.dtype)
+    u = x @ params[prefix + "w_up"].astype(x.dtype)
+    h = jax.nn.silu(g) * u
+    h = shard(h, "batch", None, "tp")
+    y = h @ params[prefix + "w_down"].astype(x.dtype)
+    return shard(y, "batch", None, None)
+
+
+def init_moe(ini: Init, cfg: ArchConfig) -> None:
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ini.mk("router", (D, E), ("fsdp", None), scale=0.02)
+    ini.mk("we_gate", (E, D, F), ("expert", "fsdp", None))
+    ini.mk("we_up", (E, D, F), ("expert", "fsdp", None))
+    ini.mk("we_down", (E, F, D), ("expert", None, "fsdp"),
+           scale=1.0 / math.sqrt(F * 2 * cfg.n_layers))
+    if cfg.n_shared_experts:
+        init_mlp(ini, D, cfg.moe_d_ff * cfg.n_shared_experts, cfg.n_layers,
+                 prefix="shared_")
+
+
+def moe_onehot_group(params: Params, xg: jax.Array, cfg: ArchConfig,
+                     cap: int) -> jax.Array:
+    """GShard-style matmul dispatch for one token group (default impl).
+
+    The classic [Tg, K, E, C] position one-hot is avoided by gathering each
+    (token, k)'s queue position at its SELECTED expert, so the dispatch mask
+    is built from two 3-D one-hots: disp = einsum("tke,tkc->tec").  The
+    dispatch/combine matmuls are what GSPMD partitions into all-to-alls.
+    """
+    Tg, D = xg.shape
+    E, K = cfg.n_experts, cfg.top_k
+    xg = shard(xg, "batch", None)
+    logits = (xg @ params["router"].astype(xg.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                 # [Tg, E]
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)         # [Tg, K]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)  # [Tg,K,E]
+    # the queue-position cumsum is inherently sequential over tokens, so it
+    # de-shards its (tiny) [Tg*K, E] operand; everything downstream is
+    # re-constrained to token sharding so the heavy dispatch/combine einsums
+    # stay distributed (without this they silently replicate 256-way).
+    pos = jnp.cumsum(onehot.reshape(Tg * K, E), axis=0) - 1.0
+    pos = pos.reshape(Tg, K, E)
+    # queue position at the selected expert only: [Tg, K]
+    pos_sel = jnp.take_along_axis(
+        pos, expert_idx[..., None], axis=-1)[..., 0]
+    in_cap = (pos_sel < cap).astype(jnp.float32)            # [Tg, K]
+    poh_c = jax.nn.one_hot(
+        jnp.clip(pos_sel, 0, cap - 1).astype(jnp.int32), cap,
+        dtype=jnp.float32)                                  # [Tg, K, C]
+    poh_c = shard(poh_c, "batch", None, None)
+    onehot = shard(onehot, "batch", None, None)
+    disp = jnp.einsum("tke,tkc,tk->tec", onehot, poh_c, in_cap)
+    disp = shard(disp, "batch", None, None)
+    comb = jnp.einsum("tec,tke,tk->tec", disp, onehot, gate_vals)
+    comb = shard(comb, "batch", None, None)
+    disp = disp.astype(xg.dtype)
+    xe = jnp.einsum("tec,td->ecd", disp, xg)
+    xe = shard(xe, "expert", "fsdp", None)
+    ye = _expert_ffn(params, xe, cfg)
+    y = jnp.einsum("tec,ecd->td", comb.astype(xg.dtype), ye,
+                   preferred_element_type=jnp.float32)
+    y = shard(y, "batch", None)
+    return y.astype(xg.dtype)
+
+
+def _expert_ffn(params: Params, xe: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """xe [E, C, D] -> [E, C, D] through each expert's gated MLP.
+
+    Sharded over experts ('model') AND capacity slots ('data'): without the
+    capacity factor every data shard would redundantly run the same expert
+    GEMMs (a silent 16x compute replication caught by the §Perf loop).
+    """
+    g = jnp.einsum("ecd,edf->ecf", xe, params["we_gate"].astype(xe.dtype))
+    u = jnp.einsum("ecd,edf->ecf", xe, params["we_up"].astype(xe.dtype))
+    h = jax.nn.silu(g) * u
+    h = shard(h, "expert", "fsdp", None)
+    ye = jnp.einsum("ecf,efd->ecd", h, params["we_down"].astype(xe.dtype))
+    return shard(ye, "expert", "fsdp", None)
+
+
+def _expert_ffn_dsharded(params: Params, xe: jax.Array,
+                         cfg: ArchConfig) -> jax.Array:
+    """Expert MLP with the D dim sharded to match the weights (decode)."""
+    g = jnp.einsum("ecd,edf->ecf", xe, params["we_gate"].astype(xe.dtype))
+    u = jnp.einsum("ecd,edf->ecf", xe, params["we_up"].astype(xe.dtype))
+    h = jax.nn.silu(g) * u
+    h = shard(h, "expert", None, None)
+    ye = jnp.einsum("ecf,efd->ecd", h, params["we_down"].astype(xe.dtype))
+    return shard(ye, "expert", None, "fsdp")
+
+
+def moe_sort_group(params: Params, xg: jax.Array, cfg: ArchConfig,
+                   cap: int) -> jax.Array:
+    """Sort-based (ragged) dispatch for one token group.
+
+    argsort tokens by expert, scatter into the [E, C, D] expert buffer,
+    gather back with gate weighting: O(Tg K D) memory, no dispatch matmuls.
+    """
+    Tg, D = xg.shape
+    E, K = cfg.n_experts, cfg.top_k
+    logits = (xg @ params["router"].astype(xg.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)          # [Tg, K]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = expert_idx.reshape(-1)                           # [Tg*K]
+    perm = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[perm]
+    seg_sizes = jnp.sum(jax.nn.one_hot(flat_e, E, dtype=jnp.int32), axis=0)
+    seg_start = jnp.cumsum(seg_sizes) - seg_sizes             # exclusive
+    ranks_sorted = jnp.arange(Tg * K, dtype=jnp.int32) - seg_start[sorted_e]
+    token_sorted = (perm // K).astype(jnp.int32)
+
+    xs = jnp.take(xg, token_sorted, axis=0)                   # [Tg*K, D]
+    xe = jnp.zeros((E, cap, D), xg.dtype)
+    xe = xe.at[sorted_e, ranks_sorted].set(xs, mode="drop")   # over-cap drop
+    # D-dim sharded over 'data' to MATCH the weight layout: the expert
+    # GEMMs contract the sharded dim (partial sums + tiny activation
+    # psums) instead of all-gathering the expert weights -- the decode-path
+    # fix from §Perf hillclimb #3 (52 GB/step of weight gathers before).
+    xe = shard(xe, "expert", None, "fsdp")
+    ye = _expert_ffn_dsharded(params, xe, cfg)
+
+    # combine: gather each (t, k)'s expert output, gate-weight, sum over k
+    ranks = jnp.zeros((Tg * K,), jnp.int32).at[perm].set(ranks_sorted)
+    ranks = ranks.reshape(Tg, K)
+    in_cap = (ranks < cap).astype(jnp.float32)
+    flat_idx = expert_idx * cap + jnp.minimum(ranks, cap - 1)  # [Tg, K]
+    ye_flat = ye.reshape(E * cap, D)
+    ytk = jnp.take(ye_flat, flat_idx.reshape(-1), axis=0).reshape(Tg, K, D)
+    w = (gate_vals * in_cap).astype(ytk.dtype)
+    y = jnp.einsum("tkd,tk->td", ytk, w,
+                   preferred_element_type=jnp.float32)
+    return y.astype(xg.dtype)
+
+
+def _moe_local_sort(router, wg, wu, wd, shared, xg, cfg: ArchConfig,
+                    cap: int) -> jax.Array:
+    """Per-data-shard sort dispatch (runs inside shard_map, constraint-free).
+
+    xg [T_local, D] is this data shard's tokens; expert weights arrive
+    data-gathered (P() on the manual axes) but still 'model'-sharded on the
+    auto axis, so the expert GEMMs partition over experts automatically.
+    """
+    T, D = xg.shape
+    E, K = cfg.n_experts, cfg.top_k
+    logits = (xg @ router.astype(xg.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = expert_idx.reshape(-1)
+    perm = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[perm]
+    seg_sizes = jnp.sum(jax.nn.one_hot(flat_e, E, dtype=jnp.int32), axis=0)
+    seg_start = jnp.cumsum(seg_sizes) - seg_sizes
+    ranks_sorted = jnp.arange(T * K, dtype=jnp.int32) - seg_start[sorted_e]
+    token_sorted = (perm // K).astype(jnp.int32)
+
+    xs = jnp.take(xg, token_sorted, axis=0)
+    xe = jnp.zeros((E, cap, D), xg.dtype)
+    xe = xe.at[sorted_e, ranks_sorted].set(xs, mode="drop")
+
+    g = jnp.einsum("ecd,edf->ecf", xe, wg.astype(xe.dtype))
+    u = jnp.einsum("ecd,edf->ecf", xe, wu.astype(xe.dtype))
+    h = jax.nn.silu(g) * u
+    ye = jnp.einsum("ecf,efd->ecd", h, wd.astype(xe.dtype))
+
+    ranks = jnp.zeros((T * K,), jnp.int32).at[perm].set(ranks_sorted)
+    ranks = ranks.reshape(T, K)
+    in_cap = (ranks < cap).astype(jnp.float32)
+    flat_idx = expert_idx * cap + jnp.minimum(ranks, cap - 1)
+    ytk = jnp.take(ye.reshape(E * cap, D), flat_idx.reshape(-1), axis=0) \
+        .reshape(T, K, D)
+    w = (gate_vals * in_cap).astype(ytk.dtype)
+    y = jnp.einsum("tkd,tk->td", ytk, w,
+                   preferred_element_type=jnp.float32).astype(xg.dtype)
+    if shared:
+        sg, su, sd = shared
+        hh = jax.nn.silu(xg @ sg.astype(xg.dtype)) * (xg @ su.astype(xg.dtype))
+        y = y + hh @ sd.astype(xg.dtype)
+    return y
+
+
+def moe_ep(params: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Expert-parallel MoE: shard_map manual over the (pod, data) axes.
+
+    Each data shard routes/sorts its own tokens locally (no GSPMD scatter
+    pathology, no dispatch matmuls), expert GEMMs stay auto-partitioned over
+    the 'model' axis, the FSDP weight gather and the weight-grad reduction
+    happen ONCE per layer instead of once per token group.  Capacity is
+    enforced per data shard (standard EP practice).
+    """
+    from jax.sharding import PartitionSpec as P
+    from ..parallel.sharding import current_mesh
+    mesh = current_mesh()
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    manual = tuple(a for a in ("pod", "data") if a in (mesh.shape if mesh
+                                                       else {}))
+    dp = 1
+    for a in manual:
+        dp *= mesh.shape[a]
+    t_local = B * S // max(dp, 1)
+    cap = max(16, -(-int(cfg.capacity_factor * t_local * K / E) // 16) * 16)
+    shared_keys = ("shared_w_gate", "shared_w_up", "shared_w_down")
+    shared = tuple(params[k] for k in shared_keys
+                   if k in params)  # () when no shared experts
+
+    def body(router, wg, wu, wd, shared, xs):
+        y = _moe_local_sort(router, wg, wu, wd, shared,
+                            xs.reshape(-1, D), cfg, cap)
+        return y.reshape(xs.shape)
+
+    if mesh is None or not manual or B % dp != 0:
+        y = body(params["router"], params["we_gate"], params["we_up"],
+                 params["we_down"], shared, x)
+        return shard(y, "batch", None, None)
+
+    # Weights enter replicated-on-manual-axes (P()): the data-axis gather
+    # this implies sits OUTSIDE the shard_map body, where XLA hoists it out
+    # of the layer/accum scan loops (loop-invariant).  The alternative --
+    # weights sharded-in + explicit lax.all_gather inside the body so the
+    # cotangent is a reduce-scatter -- was tried and REFUTED: the in-body
+    # gather cannot be hoisted and re-runs per layer x microbatch
+    # (deepseek train wire 7.1 -> 33.3 TB/dev; EXPERIMENTS.md §Perf #2).
+    wrapped = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(), P(), P(), tuple(P() for _ in shared), P(manual)),
+        out_specs=P(manual),
+        axis_names=frozenset(manual), check_vma=False)
+    y = wrapped(params["router"], params["we_gate"], params["we_up"],
+                params["we_down"], shared, x)
+    return shard(y, "batch", None, None)
+
+
+def moe(params: Params, x: jax.Array, cfg: ArchConfig,
+        impl: str = "ep_sort") -> jax.Array:
+    """Top-k MoE with capacity-based dispatch.
+
+    impl='onehot' (default): GShard-style matmul dispatch, scanned over
+    groups cut along the SEQUENCE dim so the batch-dim sharding survives the
+    regrouping; each group is rematerialized in backward (bounded memory).
+    GSPMD partitions the dispatch matmuls into all-to-alls.
+
+    impl='sort': ragged argsort/gather dispatch over all tokens.  Zero
+    dispatch FLOPs but GSPMD's scatter/gather partitioning materializes
+    index tensors of the gathered shape -- memory-hostile under pjit
+    (kept as a §Perf data point; viable under shard_map).
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    if impl == "ep_sort":
+        if T >= 4096:
+            return moe_ep(params, x, cfg)
+        # decode-sized batches: the shard_map EP path would all-gather the
+        # expert weights over 'data' to process a handful of tokens; the
+        # pjit sort path below keeps weights in place and moves activations
+        impl = "sort"
+    # capacity rounded up to a multiple of 16 so the slot dim shards over
+    # the 16-way data axis (non-divisible dims silently replicate).
+    rcap = lambda c: max(16, -(-c // 16) * 16)
+    if impl == "sort":
+        # weights keep their (expert, fsdp) layout: the GEMMs contract the
+        # data-sharded D dim in place (no gather; see moe_sort_group)
+        cap = rcap(int(cfg.capacity_factor * T * K / E))
+        y = moe_sort_group(params, x.reshape(T, D), cfg, cap) \
+            .reshape(B, S, D)
+    else:
+        # Hoist the FSDP weight gather out of the group loop: constrain
+        # expert weights to expert-sharding only (no 'fsdp' factor) BEFORE
+        # the scan so the data-axis all-gather happens once per layer, not
+        # once per group.
+        gathered = dict(params)
+        for k in ("we_gate", "we_up", "we_down"):
+            if k in params:
+                gathered[k] = shard(params[k].astype(x.dtype),
+                                    "expert", None, None)
+        chunk = max(1, min(S, cfg.moe_group_tokens // B))
+        while S % chunk:
+            chunk -= 1
+        n_groups = S // chunk
+        Tg = B * chunk
+        cap = rcap(int(cfg.capacity_factor * Tg * K / E))
+        # [B, S, D] -> [n_groups, B*chunk, D] keeping batch-dim sharding
+        xt = x.reshape(B, n_groups, chunk, D).transpose(1, 0, 2, 3) \
+            .reshape(n_groups, Tg, D)
+        group_fn = lambda xg: moe_onehot_group(gathered, xg, cfg, cap)
+        y = jax.lax.map(group_fn, xt)
+        y = y.reshape(n_groups, B, chunk, D).transpose(1, 0, 2, 3) \
+            .reshape(B, S, D)
+    if cfg.n_shared_experts:
+        y = y + mlp(params, x, prefix="shared_")
+    return shard(y, "batch", None, None)

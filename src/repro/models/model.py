@@ -1,0 +1,481 @@
+"""Model assembly: configs -> parameter trees -> train / prefill / decode fns.
+
+Every assigned architecture is expressed as a *layer plan*: a list of groups,
+each group a repeating unit of block kinds, e.g.
+
+  qwen3-4b        [("attn",) x 36]
+  gemma2-27b      [("attn_local", "attn_global") x 23]
+  xlstm-1.3b      [("mlstm",)*7 + ("slstm",) x 6]
+  deepseek-v2     [("mla_dense",) x 1, ("mla_moe",) x 59]
+  hymba-1.5b      [("hymba_global",) + ("hymba_local",)*15 x 2]
+  whisper-base    encoder [("enc_attn",) x 6] + decoder [("dec_attn",) x 6]
+
+Group parameters are stacked along a leading `repeats` axis and applied with
+``jax.lax.scan`` so HLO size / compile time is O(#groups), not O(#layers) --
+the property that makes the 40-cell multi-pod dry-run tractable.  Remat is
+applied per scanned unit (policy in cfg.remat_policy).
+
+Decode uses a direct (non-chunked) attention path so the XLA SPMD partitioner
+can shard the KV cache along the sequence axis and turn softmax reductions
+into all-reduces (distributed flash-decode); train/prefill use the chunked
+online-softmax path from layers.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import shard
+from . import ssm
+from .config import ArchConfig
+from .layers import (Init, Params, attention, flash_attention, init_attention,
+                     init_mla, init_mlp, init_moe, mla_attention, mlp, moe,
+                     rms_norm, rope, softcap)
+
+# ---------------------------------------------------------------------------
+# layer plan
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LayerGroup:
+    kinds: Tuple[str, ...]
+    repeats: int
+
+
+def _periodic_groups(kinds: Tuple[str, ...], max_period: int = 16
+                     ) -> List[LayerGroup]:
+    """Split a kind sequence into repeating units (smallest period <= cap)."""
+    n = len(kinds)
+    for p in range(1, min(max_period, n) + 1):
+        if n % p == 0 and all(kinds[i] == kinds[i % p] for i in range(n)):
+            return [LayerGroup(kinds=kinds[:p], repeats=n // p)]
+    # fall back: split off a prefix until the remainder is periodic
+    for cut in range(1, n):
+        rest = _periodic_groups(kinds[cut:], max_period)
+        if len(rest) == 1:
+            return [LayerGroup(kinds=kinds[:cut], repeats=1)] + rest
+    return [LayerGroup(kinds=kinds, repeats=1)]
+
+
+def layer_plan(cfg: ArchConfig) -> List[LayerGroup]:
+    """Decoder-side (or decoder-only) layer plan."""
+    L = cfg.n_layers
+    if cfg.family == "ssm" and cfg.block_pattern:
+        return _periodic_groups(cfg.layer_kinds())
+    if cfg.family == "hybrid":
+        period = cfg.local_global_period or L
+        kinds = tuple("hymba_global" if i % period == 0 else "hymba_local"
+                      for i in range(L))
+        return _periodic_groups(kinds)
+    if cfg.use_mla:
+        nd = cfg.first_dense_layers
+        groups = []
+        if nd:
+            groups.append(LayerGroup(kinds=("mla_dense",) * nd, repeats=1))
+        groups.append(LayerGroup(kinds=("mla_moe",), repeats=L - nd))
+        return groups
+    if cfg.moe:
+        return [LayerGroup(kinds=("attn_moe",), repeats=L)]
+    if cfg.is_encoder_decoder:
+        return [LayerGroup(kinds=("dec_attn",), repeats=L)]
+    if cfg.local_global_period:
+        p = cfg.local_global_period
+        kinds = tuple("attn_global" if i % p == (p - 1) else "attn_local"
+                      for i in range(L))
+        return _periodic_groups(kinds)
+    return [LayerGroup(kinds=("attn",), repeats=L)]
+
+
+def encoder_plan(cfg: ArchConfig) -> List[LayerGroup]:
+    if not cfg.is_encoder_decoder:
+        return []
+    return [LayerGroup(kinds=("enc_attn",), repeats=cfg.encoder_layers)]
+
+
+def block_window(cfg: ArchConfig, kind: str) -> Optional[int]:
+    """Static sliding window for a block kind (None = full attention)."""
+    if kind in ("attn_local", "hymba_local"):
+        return cfg.sliding_window or 4096
+    if kind in ("attn_global", "hymba_global", "enc_attn", "dec_attn"):
+        return None
+    return cfg.sliding_window
+
+
+# ---------------------------------------------------------------------------
+# per-kind init / apply
+# ---------------------------------------------------------------------------
+
+
+def _dense_ff(cfg: ArchConfig) -> int:
+    # deepseek-v2's first (dense) layer uses a wider FFN than the per-expert
+    # width; public config: 12288.  Everything else uses cfg.d_ff.
+    if cfg.use_mla and cfg.moe:
+        return 12288 if cfg.d_ff <= 2048 else cfg.d_ff
+    return cfg.d_ff
+
+
+def init_block(ini: Init, cfg: ArchConfig, kind: str) -> None:
+    D = cfg.d_model
+    if kind in ("attn", "attn_local", "attn_global", "enc_attn"):
+        ini.mk("ln1", (D,), (None,), mode="zeros")
+        init_attention(ini, cfg)
+        ini.mk("ln2", (D,), (None,), mode="zeros")
+        init_mlp(ini, D, cfg.d_ff, cfg.n_layers)
+    elif kind == "dec_attn":
+        ini.mk("ln1", (D,), (None,), mode="zeros")
+        init_attention(ini, cfg)
+        ini.mk("ln_x", (D,), (None,), mode="zeros")
+        init_attention(ini, cfg, prefix="x_")   # cross-attention
+        ini.mk("ln2", (D,), (None,), mode="zeros")
+        init_mlp(ini, D, cfg.d_ff, cfg.n_layers)
+    elif kind == "attn_moe":
+        ini.mk("ln1", (D,), (None,), mode="zeros")
+        init_attention(ini, cfg)
+        ini.mk("ln2", (D,), (None,), mode="zeros")
+        init_moe(ini, cfg)
+    elif kind == "mla_dense":
+        ini.mk("ln1", (D,), (None,), mode="zeros")
+        init_mla(ini, cfg)
+        ini.mk("ln2", (D,), (None,), mode="zeros")
+        init_mlp(ini, D, _dense_ff(cfg), cfg.n_layers)
+    elif kind == "mla_moe":
+        ini.mk("ln1", (D,), (None,), mode="zeros")
+        init_mla(ini, cfg)
+        ini.mk("ln2", (D,), (None,), mode="zeros")
+        init_moe(ini, cfg)
+    elif kind == "mlstm":
+        ssm.init_mlstm_block(ini, cfg)
+    elif kind == "slstm":
+        ssm.init_slstm_block(ini, cfg)
+    elif kind in ("hymba_local", "hymba_global"):
+        ini.mk("ln1", (D,), (None,), mode="zeros")
+        init_attention(ini, cfg, prefix="attn_")
+        ssm.init_mamba(ini, cfg, prefix="mamba_")
+        ini.mk("ln2", (D,), (None,), mode="zeros")
+        init_mlp(ini, D, cfg.d_ff, cfg.n_layers)
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+
+
+def apply_block(params: Params, x: jax.Array, cfg: ArchConfig, kind: str, *,
+                positions: jax.Array, cache: Optional[Dict] = None,
+                enc_out: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Optional[Dict]]:
+    window = block_window(cfg, kind)
+    if kind in ("attn", "attn_local", "attn_global", "enc_attn"):
+        h = rms_norm(x, params["ln1"], cfg.norm_eps)
+        a, new_cache = attention(params, h, cfg, positions=positions,
+                                 cache=cache, window=window,
+                                 causal=(kind != "enc_attn"))
+        x = x + a
+        h = rms_norm(x, params["ln2"], cfg.norm_eps)
+        x = x + mlp(params, h)
+        return x, new_cache
+    if kind == "dec_attn":
+        c_self = None if cache is None else cache["self"]
+        h = rms_norm(x, params["ln1"], cfg.norm_eps)
+        a, nc_self = attention(params, h, cfg, positions=positions,
+                               cache=c_self, window=None, causal=True)
+        x = x + a
+        h = rms_norm(x, params["ln_x"], cfg.norm_eps)
+        a, nc_cross = cross_attention(params, h, cfg, enc_out=enc_out,
+                                      cache=None if cache is None
+                                      else cache["cross"])
+        x = x + a
+        h = rms_norm(x, params["ln2"], cfg.norm_eps)
+        x = x + mlp(params, h)
+        nc = None if cache is None else dict(self=nc_self, cross=nc_cross)
+        return x, nc
+    if kind in ("attn_moe", "mla_moe", "mla_dense"):
+        h = rms_norm(x, params["ln1"], cfg.norm_eps)
+        if kind.startswith("mla"):
+            a, new_cache = mla_attention(params, h, cfg, positions=positions,
+                                         cache=cache)
+        else:
+            a, new_cache = attention(params, h, cfg, positions=positions,
+                                     cache=cache, window=window)
+        x = x + a
+        h = rms_norm(x, params["ln2"], cfg.norm_eps)
+        x = x + (mlp(params, h) if kind == "mla_dense" else moe(params, h, cfg))
+        return x, new_cache
+    if kind == "mlstm":
+        d, new_cache = ssm.mlstm_block(params, x, cfg, state=cache)
+        return x + d, new_cache
+    if kind == "slstm":
+        d, new_cache = ssm.slstm_block(params, x, cfg, state=cache)
+        return x + d, new_cache
+    if kind in ("hymba_local", "hymba_global"):
+        c_attn = None if cache is None else cache["attn"]
+        c_mamba = None if cache is None else cache["mamba"]
+        h = rms_norm(x, params["ln1"], cfg.norm_eps)
+        a, nc_attn = attention(params, h, cfg, positions=positions,
+                               cache=c_attn, window=window, prefix="attn_")
+        m, nc_mamba = ssm.mamba(params, h, cfg, state=c_mamba,
+                                prefix="mamba_")
+        x = x + 0.5 * (a + m)
+        h = rms_norm(x, params["ln2"], cfg.norm_eps)
+        x = x + mlp(params, h)
+        nc = None if cache is None else dict(attn=nc_attn, mamba=nc_mamba)
+        return x, nc
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def cross_attention(params: Params, x: jax.Array, cfg: ArchConfig, *,
+                    enc_out: Optional[jax.Array], cache: Optional[Dict],
+                    prefix: str = "x_") -> Tuple[jax.Array, Optional[Dict]]:
+    """Encoder-decoder cross attention (no rope, non-causal over enc states).
+
+    At prefill/decode the projected encoder K/V is computed once and cached.
+    """
+    B, S, D = x.shape
+    H, KH, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ params[prefix + "wq"].astype(x.dtype)).reshape(B, S, H, Dh)
+    if enc_out is None:
+        assert cache is not None, "cross attention needs enc_out or cache"
+        k, v = cache["k"].astype(x.dtype), cache["v"].astype(x.dtype)
+    else:
+        # prefill: project encoder states once; cached for decode
+        k = (enc_out @ params[prefix + "wk"].astype(x.dtype)) \
+            .reshape(B, -1, KH, Dh)
+        v = (enc_out @ params[prefix + "wv"].astype(x.dtype)) \
+            .reshape(B, -1, KH, Dh)
+    q = shard(q, "batch", None, "heads", None)
+    S_enc = k.shape[1]
+    kv_pos = jnp.arange(S_enc)
+    q_pos = jnp.zeros((S,), jnp.int32)  # non-causal: mask never fires
+    out = flash_attention(q, k, v, q_positions=q_pos, kv_positions=kv_pos,
+                          causal=False)
+    out = out.astype(x.dtype).reshape(B, S, H * Dh)
+    y = out @ params[prefix + "wo"].astype(x.dtype)
+    new_cache = dict(k=k, v=v) if cache is not None else None
+    return shard(y, "batch", None, None), new_cache
+
+
+# ---------------------------------------------------------------------------
+# parameter tree
+# ---------------------------------------------------------------------------
+
+
+def _stack_trees(trees: List[Params]) -> Params:
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _stack_axes(axes: Dict, repeats: int) -> Dict:
+    """Prepend a 'layers' (unsharded) axis to every leaf's logical axes."""
+    is_axes = lambda a: isinstance(a, tuple) and all(
+        isinstance(e, (str, type(None))) for e in a)
+    return jax.tree_util.tree_map(lambda a: (None,) + a, axes, is_leaf=is_axes)
+
+
+def init_model(cfg: ArchConfig, key: jax.Array) -> Tuple[Params, Dict]:
+    """Returns (params, logical_axes) with group-stacked layer params."""
+    ini = Init(key)
+    ini.mk("embed", (cfg.vocab, cfg.d_model), ("tp", "fsdp"), scale=0.02)
+    ini.mk("final_norm", (cfg.d_model,), (None,), mode="zeros")
+    if not cfg.tie_embeddings:
+        ini.mk("lm_head", (cfg.d_model, cfg.vocab), ("fsdp", "tp"),
+               scale=1.0 / math.sqrt(cfg.d_model))
+
+    def build_groups(plan: List[LayerGroup], tag: str) -> None:
+        for gi, grp in enumerate(plan):
+            reps = []
+            for _ in range(grp.repeats):
+                unit = Init(ini._next())
+                for j, kind in enumerate(grp.kinds):
+                    sub = Init(unit._next())
+                    init_block(sub, cfg, kind)
+                    unit.params[f"b{j}"] = sub.params
+                    unit.axes[f"b{j}"] = sub.axes
+                reps.append(unit.params)
+                unit_axes = unit.axes
+            ini.params[f"{tag}{gi}"] = _stack_trees(reps)
+            ini.axes[f"{tag}{gi}"] = _stack_axes(unit_axes, grp.repeats)
+
+    build_groups(layer_plan(cfg), "g")
+    if cfg.is_encoder_decoder:
+        build_groups(encoder_plan(cfg), "enc_g")
+        ini.mk("enc_final_norm", (cfg.d_model,), (None,), mode="zeros")
+    return ini.params, ini.axes
+
+
+def param_count(params: Params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# stack application (scan over stacked layer groups)
+# ---------------------------------------------------------------------------
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)
+
+
+def apply_stack(params: Params, x: jax.Array, cfg: ArchConfig,
+                plan: List[LayerGroup], tag: str, *,
+                positions: jax.Array, caches: Optional[List] = None,
+                enc_out: Optional[jax.Array] = None,
+                remat_policy: Optional[str] = None
+                ) -> Tuple[jax.Array, Optional[List]]:
+    """Run x through all layer groups; caches is a per-group list or None."""
+    policy = cfg.remat_policy if remat_policy is None else remat_policy
+    new_caches: Optional[List] = None if caches is None else []
+    for gi, grp in enumerate(plan):
+        gp = params[f"{tag}{gi}"]
+        gcache = None if caches is None else caches[gi]
+        # Nested remat: multi-layer units (gemma2's local/global pair,
+        # hymba's 16-layer period, xlstm's 7+1 pattern) checkpoint each
+        # BLOCK as well as the unit, so the unit's backward recomputes one
+        # block at a time instead of materializing every block's residuals
+        # at once (hymba: 16 blocks x ~13 GB -> ~1 block live).
+        nested = len(grp.kinds) > 1 and policy != "none"
+
+        def unit(x, unit_params, unit_cache, _kinds=grp.kinds,
+                 _nested=nested):
+            ncs = {}
+            for j, kind in enumerate(_kinds):
+                c = None if unit_cache is None else unit_cache[f"b{j}"]
+                blk = lambda x, p, c, _k=kind: apply_block(
+                    p, x, cfg, _k, positions=positions, cache=c,
+                    enc_out=enc_out)
+                if _nested:
+                    blk = jax.checkpoint(blk)
+                x, nc = blk(x, unit_params[f"b{j}"], c)
+                if unit_cache is not None:
+                    ncs[f"b{j}"] = nc
+            return x, (ncs if unit_cache is not None else None)
+
+        if grp.repeats == 1:
+            squeeze = lambda t: jax.tree_util.tree_map(lambda a: a[0], t)
+            up = squeeze(gp)
+            uc = None if gcache is None else squeeze(gcache)
+            x, nc = _remat(unit, policy)(x, up, uc)
+            if caches is not None:
+                new_caches.append(jax.tree_util.tree_map(
+                    lambda a: a[None], nc))
+        elif cfg.scan_layers:
+            if gcache is None:
+                def body(x, up):
+                    x, _ = _remat(unit, policy)(x, up, None)
+                    return x, None
+                x, _ = jax.lax.scan(body, x, gp)
+                nc = None
+            else:
+                def body(x, inp):
+                    up, uc = inp
+                    x, nc = _remat(unit, policy)(x, up, uc)
+                    return x, nc
+                x, nc = jax.lax.scan(body, x, (gp, gcache))
+            if caches is not None:
+                new_caches.append(nc)
+        else:  # unrolled (hillclimb knob)
+            ncs = []
+            for r in range(grp.repeats):
+                take = lambda t: jax.tree_util.tree_map(lambda a: a[r], t)
+                uc = None if gcache is None else take(gcache)
+                x, nc = _remat(unit, policy)(x, take(gp), uc)
+                ncs.append(nc)
+            if caches is not None:
+                new_caches.append(_stack_trees(ncs))
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# embeddings, logits, loss
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(params: Params, cfg: ArchConfig, tokens: jax.Array,
+                 dtype=None) -> jax.Array:
+    dtype = jnp.dtype(cfg.dtype) if dtype is None else dtype
+    emb = params["embed"].astype(dtype)
+    x = emb[tokens]
+    return shard(x, "batch", None, None)
+
+
+def logits_fn(params: Params, cfg: ArchConfig, h: jax.Array) -> jax.Array:
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    w = (params["embed"].T if cfg.tie_embeddings
+         else params["lm_head"]).astype(h.dtype)
+    logits = h @ w
+    logits = softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)
+    return shard(logits, "batch", None, "vocab")
+
+
+def xent_loss(params: Params, cfg: ArchConfig, h: jax.Array,
+              labels: jax.Array, n_chunks: int = 8) -> jax.Array:
+    """Chunked softmax cross-entropy: never materializes [B, S, V] at once."""
+    B, S, D = h.shape
+    n_chunks = min(n_chunks, S)
+    while S % n_chunks:
+        n_chunks -= 1
+    hc = h.reshape(B, n_chunks, S // n_chunks, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n_chunks, S // n_chunks).transpose(1, 0, 2)
+
+    def chunk_loss(args):
+        hh, ll = args
+        logits = logits_fn(params, cfg, hh)          # [B, s, V] fp32
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, ll[..., None], axis=-1)[..., 0]
+        return jnp.sum(lse - picked)
+
+    total = jnp.sum(jax.lax.map(chunk_loss, (hc, lc)))
+    return total / (B * S)
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+
+def _decoder_inputs(params: Params, cfg: ArchConfig, batch: Dict
+                    ) -> Tuple[jax.Array, jax.Array, Optional[jax.Array]]:
+    """Returns (x, positions, enc_out) handling enc-dec and VLM stubs."""
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        # stub frontend: precomputed frame embeddings [B, S_enc, D]
+        enc_in = shard(batch["frames"].astype(jnp.dtype(cfg.dtype)),
+                       "batch", None, None)
+        enc_pos = jnp.arange(enc_in.shape[1])
+        enc_out, _ = apply_stack(params, enc_in, cfg, encoder_plan(cfg),
+                                 "enc_g", positions=enc_pos)
+        enc_out = rms_norm(enc_out, params["enc_final_norm"], cfg.norm_eps)
+        x = embed_tokens(params, cfg, batch["tokens"])
+        positions = jnp.arange(batch["tokens"].shape[1])
+        return x, positions, enc_out
+    x = embed_tokens(params, cfg, batch["tokens"])
+    if cfg.vision_prefix_tokens:
+        # stub frontend: precomputed patch embeddings [B, P, D]
+        vis = shard(batch["patches"].astype(x.dtype), "batch", None, None)
+        x = jnp.concatenate([vis, x], axis=1)
+    positions = jnp.arange(x.shape[1])
+    return x, positions, None
+
+
+def forward_train(params: Params, cfg: ArchConfig, batch: Dict) -> jax.Array:
+    """Mean next-token loss for one (micro)batch."""
+    x, positions, enc_out = _decoder_inputs(params, cfg, batch)
+    x, _ = apply_stack(params, x, cfg, layer_plan(cfg), "g",
+                       positions=positions, enc_out=enc_out)
+    labels = batch["labels"]
+    if cfg.vision_prefix_tokens:     # loss only on the text tail
+        x = x[:, cfg.vision_prefix_tokens:]
+    return xent_loss(params, cfg, x, labels)
+
+
+def forward_hidden(params: Params, cfg: ArchConfig, batch: Dict) -> jax.Array:
+    x, positions, enc_out = _decoder_inputs(params, cfg, batch)
+    x, _ = apply_stack(params, x, cfg, layer_plan(cfg), "g",
+                       positions=positions, enc_out=enc_out)
+    return x

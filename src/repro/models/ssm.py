@@ -1,0 +1,369 @@
+"""Recurrent / state-space blocks: mLSTM + sLSTM (xLSTM) and Mamba (hymba).
+
+Training/prefill paths are chunkwise-parallel (mLSTM) or associative-scan
+(Mamba) so sequence compute is matmul-shaped for the MXU; decode paths are
+O(1)-state steps.  ``mlstm_sequential`` is the exact stabilized recurrence
+used as the oracle in tests (and by kernels/mlstm_chunk/ref.py).
+
+Dimensional note (DESIGN.md): xlstm-1.3b uses ssm_expand=1 with qk_dim =
+head_dim/2, calibrated to the published 1.3B parameter count; the official
+repo's block has proj_factor=2 with a narrower backbone.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import shard
+from .config import ArchConfig
+from .layers import Init, Params, rms_norm
+
+# ---------------------------------------------------------------------------
+# mLSTM cell
+# ---------------------------------------------------------------------------
+
+
+def mlstm_sequential(q, k, v, i_raw, lf, state=None):
+    """Exact stabilized mLSTM recurrence (oracle + decode step).
+
+    q,k [B,T,H,dk]; v [B,T,H,dv]; i_raw,lf [B,T,H] (lf = logsigmoid(f_raw)).
+    state: (C [B,H,dk,dv], n [B,H,dk], m [B,H]).  Returns (h, state).
+    """
+    B, T, H, dk = q.shape
+    dv = v.shape[-1]
+    if state is None:
+        C = jnp.zeros((B, H, dk, dv), jnp.float32)
+        n = jnp.zeros((B, H, dk), jnp.float32)
+        m = jnp.full((B, H), -jnp.inf, jnp.float32)
+        state = (C, n, m)
+    qf = q.astype(jnp.float32) / math.sqrt(dk)
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    i_raw = i_raw.astype(jnp.float32)
+    lf = lf.astype(jnp.float32)
+
+    def step(state, inp):
+        C, n, m = state
+        qt, kt, vt, it, ft = inp          # [B,H,dk] ... [B,H]
+        m_new = jnp.maximum(ft + m, it)
+        m_prev = jnp.where(jnp.isneginf(m), m_new, m)  # first step guard
+        fp = jnp.exp(ft + m_prev - m_new) * (~jnp.isneginf(m))
+        ip = jnp.exp(it - m_new)
+        C = fp[..., None, None] * C + ip[..., None, None] * \
+            (kt[..., :, None] * vt[..., None, :])
+        n = fp[..., None] * n + ip[..., None] * kt
+        num = jnp.einsum("bhd,bhdv->bhv", qt, C)
+        den = jnp.abs(jnp.einsum("bhd,bhd->bh", qt, n))
+        den = jnp.maximum(den, jnp.exp(-m_new))
+        h = num / den[..., None]
+        return (C, n, m_new), h
+
+    xs = (qf.transpose(1, 0, 2, 3), kf.transpose(1, 0, 2, 3),
+          vf.transpose(1, 0, 2, 3), i_raw.transpose(1, 0, 2),
+          lf.transpose(1, 0, 2))
+    state, hs = jax.lax.scan(step, state, xs)
+    return hs.transpose(1, 0, 2, 3), state
+
+
+def mlstm_chunkwise(q, k, v, i_raw, lf, state=None, chunk: int = 128):
+    """Chunkwise-parallel stabilized mLSTM (training/prefill fast path)."""
+    B, T, H, dk = q.shape
+    dv = v.shape[-1]
+    nc = max(1, T // chunk)
+    assert nc * chunk == T, "sequence length must be a multiple of chunk"
+    if state is None:
+        C0 = jnp.zeros((B, H, dk, dv), jnp.float32)
+        n0 = jnp.zeros((B, H, dk), jnp.float32)
+        m0 = jnp.full((B, H), -jnp.inf, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    resh = lambda x, d: x.astype(jnp.float32).reshape(B, nc, chunk, H, d) \
+        .transpose(1, 0, 3, 2, 4)  # [nc,B,H,Lc,d]
+    qc = resh(q, dk) / math.sqrt(dk)
+    kc = resh(k, dk)
+    vc = resh(v, dv)
+    ic = i_raw.astype(jnp.float32).reshape(B, nc, chunk, H).transpose(1, 0, 3, 2)
+    fc = lf.astype(jnp.float32).reshape(B, nc, chunk, H).transpose(1, 0, 3, 2)
+
+    def chunk_step(carry, inp):
+        C, n, m = carry                       # running inter-chunk state
+        qj, kj, vj, ij, fj = inp              # [B,H,Lc,(d)]
+        b = jnp.cumsum(fj, axis=-1)           # [B,H,Lc] cumulative log-decay
+        Btot = b[..., -1]
+        m_fin = jnp.where(jnp.isneginf(m), 0.0, m)
+        # intra-chunk log weights: w[t,s] = b_t - b_s + i_s  (s <= t)
+        wl = b[..., :, None] - b[..., None, :] + ij[..., None, :]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        wl = jnp.where(tri, wl, -jnp.inf)
+        m_intra = wl.max(axis=-1)                         # [B,H,Lc]
+        m_inter = b + m_fin[..., None]                    # [B,H,Lc]
+        have_state = ~jnp.isneginf(m)
+        m_row = jnp.maximum(m_intra, jnp.where(have_state[..., None],
+                                               m_inter, -jnp.inf))
+        m_row = jnp.where(jnp.isneginf(m_row), 0.0, m_row)
+        P = jnp.exp(wl - m_row[..., None])                # [B,H,Lc,Lc]
+        P = jnp.where(tri, P, 0.0)
+        scores = jnp.einsum("bhtd,bhsd->bhts", qj, kj)
+        num_intra = jnp.einsum("bhts,bhts,bhsv->bhtv", scores, P, vj)
+        den_intra = jnp.einsum("bhts,bhts->bht", scores, P)
+        inter_w = jnp.exp(m_inter - m_row) * have_state[..., None]
+        num_inter = jnp.einsum("bht,bhtd,bhdv->bhtv", inter_w, qj, C)
+        den_inter = inter_w * jnp.einsum("bhtd,bhd->bht", qj, n)
+        den = jnp.maximum(jnp.abs(den_intra + den_inter), jnp.exp(-m_row))
+        h = (num_intra + num_inter) / den[..., None]
+        # ---- state update to end of chunk
+        g = Btot[..., None] - b + ij                       # [B,H,Lc]
+        m_state = jnp.maximum(g.max(axis=-1),
+                              jnp.where(have_state, Btot + m_fin, -jnp.inf))
+        sw = jnp.exp(g - m_state[..., None])
+        carry_w = jnp.exp(Btot + m_fin - m_state) * have_state
+        C_new = carry_w[..., None, None] * C + \
+            jnp.einsum("bht,bhtd,bhtv->bhdv", sw, kj, vj)
+        n_new = carry_w[..., None] * n + jnp.einsum("bht,bhtd->bhd", sw, kj)
+        return (C_new, n_new, m_state), h
+
+    (C, n, m), hs = jax.lax.scan(chunk_step, (C0, n0, m0),
+                                 (qc, kc, vc, ic, fc))
+    h = hs.transpose(1, 0, 3, 2, 4).reshape(B, T, H, dv)
+    return h, (C, n, m)
+
+
+def init_mlstm_block(ini: Init, cfg: ArchConfig) -> None:
+    D = cfg.d_model
+    Din = cfg.ssm_expand * D
+    H = cfg.n_heads
+    dqk = Din // H // 2
+    ini.mk("norm", (D,), (None,), mode="zeros")
+    ini.mk("up_l", (D, Din), ("fsdp", "tp"))
+    ini.mk("up_r", (D, Din), ("fsdp", "tp"))
+    ini.mk("conv_w", (cfg.conv_kernel, Din), (None, "tp"), scale=0.3)
+    ini.mk("wq", (Din, H * dqk), ("fsdp", "tp"))
+    ini.mk("wk", (Din, H * dqk), ("fsdp", "tp"))
+    ini.mk("wv", (Din, Din), ("fsdp", "tp"))
+    ini.mk("w_gates", (Din, 2 * H), ("fsdp", None), scale=0.02)
+    ini.mk("b_gates", (2 * H,), (None,), mode="zeros")
+    ini.mk("out_norm", (Din,), (None,), mode="zeros")
+    ini.mk("down", (Din, D), ("tp", "fsdp"),
+           scale=1.0 / math.sqrt(Din * 2 * cfg.n_layers))
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array,
+                  state: Optional[jax.Array] = None):
+    """Depthwise causal conv; x [B,T,C], w [K,C].  Returns (y, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+            for i in range(K))
+    return y, xp[:, -(K - 1):] if K > 1 else jnp.zeros_like(x[:, :0])
+
+
+def mlstm_block(params: Params, x: jax.Array, cfg: ArchConfig,
+                state: Optional[Dict] = None,
+                chunk: int = 128) -> Tuple[jax.Array, Optional[Dict]]:
+    B, T, D = x.shape
+    Din = cfg.ssm_expand * D
+    H = cfg.n_heads
+    dqk = Din // H // 2
+    h = rms_norm(x, params["norm"], cfg.norm_eps)
+    xl = h @ params["up_l"].astype(x.dtype)
+    xr = h @ params["up_r"].astype(x.dtype)
+    xl = shard(xl, "batch", None, "tp")
+    conv_state = None if state is None else state["conv"]
+    c, conv_new = causal_conv1d(xl, params["conv_w"], conv_state)
+    c = jax.nn.silu(c)
+    q = (c @ params["wq"].astype(x.dtype)).reshape(B, T, H, dqk)
+    k = (c @ params["wk"].astype(x.dtype)).reshape(B, T, H, dqk)
+    v = (xl @ params["wv"].astype(x.dtype)).reshape(B, T, H, -1)
+    gates = c @ params["w_gates"].astype(x.dtype) + \
+        params["b_gates"].astype(x.dtype)
+    i_raw = gates[..., :H].astype(jnp.float32)
+    lf = jax.nn.log_sigmoid(gates[..., H:].astype(jnp.float32))
+    cell_state = None if state is None else state["cell"]
+    if T == 1 or (T % chunk) != 0:
+        hout, cell_new = mlstm_sequential(q, k, v, i_raw, lf, cell_state)
+    else:
+        hout, cell_new = mlstm_chunkwise(q, k, v, i_raw, lf, cell_state,
+                                         chunk=chunk)
+    hout = hout.reshape(B, T, Din).astype(x.dtype)
+    hout = rms_norm(hout, params["out_norm"], cfg.norm_eps)
+    y = (hout * jax.nn.silu(xr)) @ params["down"].astype(x.dtype)
+    new_state = None
+    if state is not None:
+        new_state = dict(conv=conv_new, cell=cell_new)
+    return shard(y, "batch", None, None), new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm_block(ini: Init, cfg: ArchConfig) -> None:
+    D, H = cfg.d_model, cfg.n_heads
+    dh = D // H
+    ini.mk("norm", (D,), (None,), mode="zeros")
+    for g in ("z", "i", "f", "o"):
+        ini.mk(f"w{g}", (D, D), ("fsdp", "tp"))
+        ini.mk(f"r{g}", (H, dh, dh), (None, None, None), scale=1.0 / math.sqrt(dh))
+        ini.mk(f"b{g}", (D,), (None,), mode="zeros")
+    ini.mk("out_norm", (D,), (None,), mode="zeros")
+    ini.mk("down", (D, D), ("tp", "fsdp"),
+           scale=1.0 / math.sqrt(D * 2 * cfg.n_layers))
+    # small FFN (factor 4/3, GeGLU) as in the xLSTM paper's sLSTM block
+    dff = int(4 * D / 3 / 64) * 64 or 64
+    ini.mk("ffn_gate", (D, dff), ("fsdp", "tp"))
+    ini.mk("ffn_up", (D, dff), ("fsdp", "tp"))
+    ini.mk("ffn_down", (dff, D), ("tp", "fsdp"),
+           scale=1.0 / math.sqrt(dff * 2 * cfg.n_layers))
+    ini.mk("ffn_norm", (D,), (None,), mode="zeros")
+
+
+def slstm_block(params: Params, x: jax.Array, cfg: ArchConfig,
+                state: Optional[Dict] = None) -> Tuple[jax.Array, Optional[Dict]]:
+    B, T, D = x.shape
+    H = cfg.n_heads
+    dh = D // H
+    xin = rms_norm(x, params["norm"], cfg.norm_eps)
+    pre = {g: (xin @ params[f"w{g}"].astype(x.dtype) +
+               params[f"b{g}"].astype(x.dtype)).astype(jnp.float32)
+           .reshape(B, T, H, dh) for g in ("z", "i", "f", "o")}
+    if state is None:
+        h0 = jnp.zeros((B, H, dh), jnp.float32)
+        c0 = jnp.zeros((B, H, dh), jnp.float32)
+        n0 = jnp.zeros((B, H, dh), jnp.float32)
+        m0 = jnp.full((B, H, dh), -jnp.inf, jnp.float32)
+    else:
+        h0, c0, n0, m0 = state["h"], state["c"], state["n"], state["m"]
+    R = {g: params[f"r{g}"].astype(jnp.float32) for g in ("z", "i", "f", "o")}
+
+    def step(carry, inp):
+        h, c, n, m = carry
+        pz, pi, pf, po = inp
+        rec = lambda g: jnp.einsum("bhd,hde->bhe", h, R[g])
+        z = jnp.tanh(pz + rec("z"))
+        it = pi + rec("i")
+        ft = jax.nn.log_sigmoid(pf + rec("f"))
+        o = jax.nn.sigmoid(po + rec("o"))
+        m_new = jnp.maximum(ft + m, it)
+        m_prev = jnp.where(jnp.isneginf(m), m_new, m)
+        fp = jnp.exp(ft + m_prev - m_new) * (~jnp.isneginf(m))
+        ip = jnp.exp(it - m_new)
+        c = fp * c + ip * z
+        n = fp * n + ip
+        h = o * c / jnp.maximum(n, 1e-6)
+        return (h, c, n, m_new), h
+
+    xs = tuple(pre[g].transpose(1, 0, 2, 3) for g in ("z", "i", "f", "o"))
+    (h, c, n, m), hs = jax.lax.scan(step, (h0, c0, n0, m0), xs)
+    hout = hs.transpose(1, 0, 2, 3).reshape(B, T, D).astype(x.dtype)
+    hout = rms_norm(hout, params["out_norm"], cfg.norm_eps)
+    y = x + hout @ params["down"].astype(x.dtype)
+    # FFN sub-block
+    f = rms_norm(y, params["ffn_norm"], cfg.norm_eps)
+    f = (jax.nn.gelu(f @ params["ffn_gate"].astype(x.dtype))
+         * (f @ params["ffn_up"].astype(x.dtype)))
+    y = y + f @ params["ffn_down"].astype(x.dtype)
+    new_state = None
+    if state is not None:
+        new_state = dict(h=h, c=c, n=n, m=m)
+    return shard(y - x, "batch", None, None), new_state  # residual added by caller
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective diagonal SSM), hymba's parallel branch
+# ---------------------------------------------------------------------------
+
+
+def init_mamba(ini: Init, cfg: ArchConfig, prefix: str = "") -> None:
+    D = cfg.d_model
+    Din = cfg.ssm_expand * D
+    St = cfg.ssm_state
+    dt_rank = max(1, math.ceil(D / 16))
+    ini.mk(prefix + "in_proj", (D, 2 * Din), ("fsdp", "tp"))
+    ini.mk(prefix + "conv_w", (cfg.conv_kernel, Din), (None, "tp"), scale=0.3)
+    ini.mk(prefix + "x_proj", (Din, dt_rank + 2 * St), ("tp", None), scale=0.02)
+    ini.mk(prefix + "dt_proj", (dt_rank, Din), (None, "tp"), scale=0.1)
+    ini.mk(prefix + "dt_bias", (Din,), (None,), mode="zeros")
+    ini.mk(prefix + "A_log", (Din, St), ("tp", None), mode="ones")
+    ini.mk(prefix + "D_skip", (Din,), (None,), mode="ones")
+    ini.mk(prefix + "out_proj", (Din, D), ("tp", "fsdp"),
+           scale=1.0 / math.sqrt(Din * 2 * cfg.n_layers))
+
+
+def mamba(params: Params, x: jax.Array, cfg: ArchConfig,
+          state: Optional[Dict] = None,
+          prefix: str = "") -> Tuple[jax.Array, Optional[Dict]]:
+    B, T, D = x.shape
+    Din = cfg.ssm_expand * D
+    St = cfg.ssm_state
+    dt_rank = max(1, math.ceil(D / 16))
+    xz = x @ params[prefix + "in_proj"].astype(x.dtype)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs = shard(xs, "batch", None, "tp")
+    conv_state = None if state is None else state["conv"]
+    xs, conv_new = causal_conv1d(xs, params[prefix + "conv_w"], conv_state)
+    xs = jax.nn.silu(xs)
+    proj = xs @ params[prefix + "x_proj"].astype(x.dtype)
+    dt = jax.nn.softplus(
+        proj[..., :dt_rank] @ params[prefix + "dt_proj"].astype(x.dtype)
+        + params[prefix + "dt_bias"].astype(x.dtype)).astype(jnp.float32)
+    Bc = proj[..., dt_rank:dt_rank + St].astype(jnp.float32)     # [B,T,St]
+    Cc = proj[..., dt_rank + St:].astype(jnp.float32)            # [B,T,St]
+    A = -jnp.exp(params[prefix + "A_log"].astype(jnp.float32))   # [Din,St]
+
+    if T == 1:
+        a = jnp.exp(dt[..., None] * A[None, None])
+        bx = (dt * xs.astype(jnp.float32))[..., None] * Bc[:, :, None, :]
+        h_prev = (jnp.zeros((B, Din, St), jnp.float32) if state is None
+                  else state["h"])
+        h = a[:, 0] * h_prev + bx[:, 0]
+        y = jnp.einsum("bds,bs->bd", h, Cc[:, 0])[:, None]
+        h_new = h
+    else:
+        # chunked parallel scan: the discretized [B, chunk, Din, St]
+        # tensors are built INSIDE the chunk body (never for the full T --
+        # at T=4k they are ~1.7 GB each per layer), associative_scan runs
+        # log-depth within the chunk, a sequential carry links chunks, and
+        # the body is checkpointed so backward recomputes one chunk at a
+        # time instead of stacking every chunk's scan levels.
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        chunk = min(128, T)
+        while T % chunk:
+            chunk -= 1
+        nc = T // chunk
+        resh = lambda t: t.reshape((B, nc, chunk) + t.shape[2:]) \
+            .transpose((1, 0, 2) + tuple(range(3, t.ndim + 1)))
+        dt_c, xs_c, B_c, C_c = (resh(dt), resh(xs.astype(jnp.float32)),
+                                resh(Bc), resh(Cc))
+        h0 = (jnp.zeros((B, Din, St), jnp.float32) if state is None
+              else state["h"])
+
+        @jax.checkpoint
+        def chunk_body(h_prev, inp):
+            dtj, xsj, bj_in, cj = inp
+            aj = jnp.exp(dtj[..., None] * A[None, None])
+            bj = (dtj * xsj)[..., None] * bj_in[:, :, None, :]
+            bj = bj.at[:, 0].add(aj[:, 0] * h_prev)
+            _, h_all = jax.lax.associative_scan(combine, (aj, bj), axis=1)
+            yj = jnp.einsum("btds,bts->btd", h_all, cj)
+            return h_all[:, -1], yj
+
+        h_new, yc = jax.lax.scan(chunk_body, h0, (dt_c, xs_c, B_c, C_c))
+        y = yc.transpose(1, 0, 2, 3).reshape(B, T, Din)
+    y = y + params[prefix + "D_skip"].astype(jnp.float32) * xs.astype(jnp.float32)
+    y = (y.astype(x.dtype) * jax.nn.silu(z))
+    out = y @ params[prefix + "out_proj"].astype(x.dtype)
+    new_state = None
+    if state is not None:
+        new_state = dict(conv=conv_new, h=h_new)
+    return shard(out, "batch", None, None), new_state

@@ -1,0 +1,2 @@
+from .sharding import (MeshContext, current_mesh, logical_spec, mesh_context,
+                       shard, shard_params)

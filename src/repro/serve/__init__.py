@@ -1,0 +1,3 @@
+from . import cache, engine
+from .cache import cache_spec, sds, shardings, zeros
+from .engine import decode_step, greedy_generate, prefill

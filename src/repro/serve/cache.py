@@ -1,0 +1,167 @@
+"""Per-architecture decode-state (KV cache / SSM state) specifications.
+
+Caches mirror the layer plan: a list with one entry per layer group, each a
+pytree stacked along a leading `repeats` axis.  Leaves are ``TSpec``s carrying
+shape, dtype and *logical* sharding axes, so the same spec tree yields
+  * zeros            (real serving),
+  * ShapeDtypeStruct (dry-run lowering),
+  * NamedSharding    (pjit in/out shardings).
+
+Sizing rules:
+  * full-attention layers:   Smax = max_len           (k/v ring degenerate)
+  * sliding-window layers:   Smax = min(window, max_len)   (ring buffer)
+  * MLA layers:              compressed c_kv [B, Smax, rank] + k_rope
+  * mLSTM / sLSTM / mamba:   O(1) state -- the "KV cache of seq_len" for a
+                             recurrent arch is a constant-size state (the
+                             whole point of running long_500k on SSMs).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from ..models.config import ArchConfig
+from ..models.model import LayerGroup, block_window, encoder_plan, layer_plan
+from ..parallel.sharding import logical_spec
+
+
+@dataclass(frozen=True)
+class TSpec:
+    shape: Tuple[int, ...]
+    dtype: Any
+    axes: Tuple
+
+
+def _is_tspec(x) -> bool:
+    return isinstance(x, TSpec)
+
+
+def tmap(fn, tree):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=_is_tspec)
+
+
+def zeros(tree):
+    def one(s: TSpec):
+        if s.dtype == jnp.int32:   # position ids start unwritten
+            return jnp.full(s.shape, -1, jnp.int32)
+        return jnp.zeros(s.shape, s.dtype)
+    return tmap(one, tree)
+
+
+def sds(tree):
+    return tmap(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), tree)
+
+
+def shardings(tree, mesh: Mesh):
+    return tmap(lambda s: NamedSharding(
+        mesh, logical_spec(s.axes, s.shape, mesh)), tree)
+
+
+# ---------------------------------------------------------------------------
+# per-kind cache specs
+# ---------------------------------------------------------------------------
+
+
+def _attn_spec(cfg: ArchConfig, B: int, smax: int, dtype) -> Dict:
+    KH, Dh = cfg.n_kv_heads, cfg.head_dim
+    return dict(
+        k=TSpec((B, smax, KH, Dh), dtype, ("batch", "kv_seq", None, None)),
+        v=TSpec((B, smax, KH, Dh), dtype, ("batch", "kv_seq", None, None)),
+        pos_ids=TSpec((smax,), jnp.int32, (None,)),
+    )
+
+
+def _mla_spec(cfg: ArchConfig, B: int, smax: int, dtype) -> Dict:
+    return dict(
+        c_kv=TSpec((B, smax, cfg.kv_lora_rank), dtype,
+                   ("batch", "kv_seq", None)),
+        k_rope=TSpec((B, smax, cfg.rope_head_dim), dtype,
+                     ("batch", "kv_seq", None)),
+        pos_ids=TSpec((smax,), jnp.int32, (None,)),
+    )
+
+
+def _mlstm_spec(cfg: ArchConfig, B: int) -> Dict:
+    Din = cfg.ssm_expand * cfg.d_model
+    H = cfg.n_heads
+    dqk = Din // H // 2
+    dv = Din // H
+    K = cfg.conv_kernel
+    return dict(
+        conv=TSpec((B, K - 1, Din), jnp.float32, ("batch", None, "tp")),
+        cell=(TSpec((B, H, dqk, dv), jnp.float32, ("batch", "heads", None, None)),
+              TSpec((B, H, dqk), jnp.float32, ("batch", "heads", None)),
+              TSpec((B, H), jnp.float32, ("batch", "heads"))),
+    )
+
+
+def _slstm_spec(cfg: ArchConfig, B: int) -> Dict:
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    t = lambda: TSpec((B, H, dh), jnp.float32, ("batch", "heads", None))
+    return dict(h=t(), c=t(), n=t(), m=t())
+
+
+def _mamba_spec(cfg: ArchConfig, B: int) -> Dict:
+    Din = cfg.ssm_expand * cfg.d_model
+    return dict(
+        conv=TSpec((B, cfg.conv_kernel - 1, Din), jnp.float32,
+                   ("batch", None, "tp")),
+        h=TSpec((B, Din, cfg.ssm_state), jnp.float32, ("batch", "tp", None)),
+    )
+
+
+def block_cache_spec(cfg: ArchConfig, kind: str, B: int, max_len: int,
+                     enc_len: int = 0, dtype=jnp.bfloat16):
+    window = block_window(cfg, kind)
+    smax = min(window, max_len) if window else max_len
+    if kind in ("attn", "attn_local", "attn_global", "attn_moe"):
+        return _attn_spec(cfg, B, smax, dtype)
+    if kind == "dec_attn":
+        KH, Dh = cfg.n_kv_heads, cfg.head_dim
+        return dict(
+            self=_attn_spec(cfg, B, smax, dtype),
+            cross=dict(
+                k=TSpec((B, enc_len, KH, Dh), dtype,
+                        ("batch", "kv_seq", None, None)),
+                v=TSpec((B, enc_len, KH, Dh), dtype,
+                        ("batch", "kv_seq", None, None))),
+        )
+    if kind in ("mla_dense", "mla_moe"):
+        return _mla_spec(cfg, B, smax, dtype)
+    if kind == "mlstm":
+        return _mlstm_spec(cfg, B)
+    if kind == "slstm":
+        return _slstm_spec(cfg, B)
+    if kind in ("hymba_local", "hymba_global"):
+        return dict(attn=_attn_spec(cfg, B, smax, dtype),
+                    mamba=_mamba_spec(cfg, B))
+    raise ValueError(f"no cache spec for kind {kind!r}")
+
+
+def cache_spec(cfg: ArchConfig, batch_size: int, max_len: int,
+               enc_len: int = 0, dtype=jnp.bfloat16) -> List:
+    """Spec tree for the full decode state, one entry per layer group."""
+    out = []
+    for grp in layer_plan(cfg):
+        unit = {f"b{j}": block_cache_spec(cfg, kind, batch_size, max_len,
+                                          enc_len, dtype)
+                for j, kind in enumerate(grp.kinds)}
+        # stack along the repeats axis
+        stacked = tmap(lambda s: TSpec((grp.repeats,) + s.shape, s.dtype,
+                                       (None,) + s.axes), unit)
+        out.append(stacked)
+    return out
+
+
+def cache_bytes(spec: List) -> int:
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(spec, is_leaf=_is_tspec):
+        total += math.prod(leaf.shape) * np.dtype(leaf.dtype).itemsize
+    return total

@@ -1,0 +1,88 @@
+"""Serving entry points: prefill and decode steps over the layer-group stack.
+
+``prefill`` embeds a prompt batch, writes every layer's KV/state cache and
+returns last-position logits; ``decode_step`` consumes one token per sequence
+against the cache (the function lowered for the decode_32k / long_500k
+dry-run cells).  Both are pure functions of (params, batch, cache) so they
+pjit cleanly; cache buffers should be donated by the caller.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import model as M
+from ..models.config import ArchConfig
+from ..parallel.sharding import shard
+
+
+def _encode(params, cfg: ArchConfig, frames: jax.Array) -> jax.Array:
+    enc_pos = jnp.arange(frames.shape[1])
+    enc_in = shard(frames.astype(jnp.dtype(cfg.dtype)), "batch", None, None)
+    enc_out, _ = M.apply_stack(params, enc_in, cfg, M.encoder_plan(cfg),
+                               "enc_g", positions=enc_pos,
+                               remat_policy="none")
+    return M.rms_norm(enc_out, params["enc_final_norm"], cfg.norm_eps)
+
+
+def prefill(params, cfg: ArchConfig, batch: Dict, cache: List
+            ) -> Tuple[jax.Array, List]:
+    """Run the prompt through the stack, filling caches.
+
+    batch: tokens [B, S] (+ frames / patches for stub frontends).
+    Returns (last-position logits [B, V], new cache).
+    """
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = _encode(params, cfg, batch["frames"])
+    x = M.embed_tokens(params, cfg, batch["tokens"])
+    if cfg.vision_prefix_tokens:
+        vis = shard(batch["patches"].astype(x.dtype), "batch", None, None)
+        x = jnp.concatenate([vis, x], axis=1)
+    positions = jnp.arange(x.shape[1])
+    x, new_cache = M.apply_stack(params, x, cfg, M.layer_plan(cfg), "g",
+                                 positions=positions, caches=cache,
+                                 enc_out=enc_out, remat_policy="none")
+    logits = M.logits_fn(params, cfg, x[:, -1:])[:, 0]
+    return logits, new_cache
+
+
+def decode_step(params, cfg: ArchConfig, tokens: jax.Array,
+                position: jax.Array, cache: List
+                ) -> Tuple[jax.Array, List]:
+    """One decode step: tokens [B, 1], position [] int32 (shared offset).
+
+    The cache already holds `position` tokens of history; returns logits for
+    the next token and the updated cache.
+    """
+    x = M.embed_tokens(params, cfg, tokens)
+    positions = position[None] if position.ndim == 0 else position
+    x, new_cache = M.apply_stack(params, x, cfg, M.layer_plan(cfg), "g",
+                                 positions=positions, caches=cache,
+                                 remat_policy="none")
+    logits = M.logits_fn(params, cfg, x)[:, 0]
+    return logits, new_cache
+
+
+def greedy_generate(params, cfg: ArchConfig, batch: Dict, cache: List,
+                    n_steps: int) -> Tuple[jax.Array, List]:
+    """Prefill + greedy decode loop (example / integration-test path)."""
+    logits, cache = prefill(params, cfg, batch, cache)
+    B = batch["tokens"].shape[0]
+    prompt_len = batch["tokens"].shape[1] + (cfg.vision_prefix_tokens or 0)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out = [tok]
+
+    def body(carry, i):
+        tok, cache = carry
+        logits, cache = decode_step(params, cfg, tok[:, None],
+                                    prompt_len + i, cache)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return (tok, cache), tok
+
+    (tok, cache), toks = jax.lax.scan(body, (tok, cache),
+                                      jnp.arange(n_steps - 1))
+    seq = jnp.concatenate([out[0][:, None], toks.T], axis=1)
+    return seq, cache

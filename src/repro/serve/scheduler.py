@@ -1,0 +1,84 @@
+"""Placement-aware serving scheduler: the paper's technique in the serving
+path.
+
+Each inference service (an architecture + token rate) becomes a VSR; the
+scheduler embeds all active services into the CFN substrate with the MILP
+stand-in and accounts energy per request with the same Eq.(1)/(2) power
+model.  ``route()`` then tells the serving tier (edge | fog | cloud) where
+each service's stages live.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from ..core import embed as cfn_embed
+from ..core import power as cfn_power
+from ..core import vsr as cfn_vsr
+from ..core.topology import CFNTopology
+from ..models.config import ArchConfig
+
+
+@dataclass
+class Service:
+    name: str
+    arch: ArchConfig
+    tokens_per_s: float
+    n_stages: int = 4
+    source_node: int = 0
+
+
+@dataclass
+class Placement:
+    service: str
+    stage_nodes: List[str]
+    layers: List[str]
+    power_w: float
+
+
+class EnergyAwareScheduler:
+    def __init__(self, topo: CFNTopology, method: str = "cfn-milp"):
+        self.topo = topo
+        self.method = method
+        self.services: List[Service] = []
+        self._result = None
+
+    def add_service(self, svc: Service) -> None:
+        self.services.append(svc)
+        self._result = None
+
+    def _vsrs(self) -> cfn_vsr.VSRBatch:
+        batches = [cfn_vsr.from_architecture(
+            s.arch, tokens_per_s=s.tokens_per_s, n_stages=s.n_stages,
+            source_node=s.source_node) for s in self.services]
+        out = batches[0]
+        for b in batches[1:]:
+            out = out.concat(b)
+        return out
+
+    def solve(self) -> List[Placement]:
+        vsrs = self._vsrs()
+        res = cfn_embed.embed(self.topo, vsrs, method=self.method)
+        problem = cfn_power.build_problem(self.topo, vsrs)
+        placements = []
+        for r, svc in enumerate(self.services):
+            nodes = [self.topo.proc_names[p] for p in res.X[r]]
+            layers = [self.topo.proc_layer[p] for p in res.X[r]]
+            placements.append(Placement(
+                service=svc.name, stage_nodes=nodes, layers=layers,
+                power_w=float(res.breakdown.total) / len(self.services)))
+        self._result = res
+        return placements
+
+    def total_power_w(self) -> float:
+        if self._result is None:
+            self.solve()
+        return float(self._result.breakdown.total)
+
+    def savings_vs_cloud(self) -> Dict[str, float]:
+        vsrs = self._vsrs()
+        return {k: v for k, v in cfn_embed.savings_vs_baseline(
+            self.topo, vsrs, baseline="cdc", method=self.method).items()
+            if isinstance(v, float)}

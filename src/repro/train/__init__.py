@@ -1,0 +1,2 @@
+from . import compress, step
+from .step import TrainState, init_state, make_grads_fn, make_train_step

@@ -1,0 +1,68 @@
+"""Error-feedback int8 gradient compression for the cross-pod reduction.
+
+The pod axis is the slow (DCN) axis: the per-step cross-pod gradient
+all-reduce is the dominant inter-pod collective.  We compress it by
+  1. adding the carried error-feedback residual to the local gradient,
+  2. quantizing to int8 with a per-tensor fp32 scale,
+  3. all-gathering the int8 payload over 'pod' (1 byte/element on the wire
+     instead of 2-4) and summing the dequantized shards locally,
+  4. keeping the quantization error as the next step's residual.
+
+Implemented with ``jax.shard_map`` manual over *only* the 'pod' axis
+(`axis_names={'pod'}`): data/model axes stay automatic, so the body is still
+ordinary pjit-style code.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_pod_sum(g: jax.Array, err: jax.Array, n_pods: int
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Inside a shard_map manual over 'pod': returns (mean-grad, new error)."""
+    x = g.astype(jnp.float32) + err
+    q, scale = quantize(x)
+    new_err = x - dequantize(q, scale)
+    qs = jax.lax.all_gather(q, "pod")          # [n_pods, ...] int8 on the wire
+    ss = jax.lax.all_gather(scale, "pod")      # [n_pods] fp32
+    total = jnp.tensordot(ss, qs.astype(jnp.float32), axes=1)
+    return (total / n_pods).astype(g.dtype), new_err
+
+
+def make_compressed_sync(mesh, param_specs):
+    """Build sync(grads, err) -> (grads, err) with int8 pod all-gather.
+
+    ``param_specs``: pytree of PartitionSpecs for the gradient tree (its
+    data/model factors); the pod axis never appears in parameter specs, so
+    grads are pod-local partial means going in and pod-averaged coming out.
+    """
+    n_pods = mesh.shape.get("pod", 1)
+
+    def body(grads, err):
+        out = jax.tree_util.tree_map(
+            lambda g, e: compressed_pod_sum(g, e, n_pods), grads, err)
+        new_g = jax.tree_util.tree_map(lambda _, o: o[0], grads, out)
+        new_e = jax.tree_util.tree_map(lambda _, o: o[1], grads, out)
+        return new_g, new_e
+
+    if n_pods == 1:
+        return lambda grads, err: (grads, err)
+
+    specs = (param_specs, param_specs)
+    return jax.shard_map(body, mesh=mesh, in_specs=specs, out_specs=specs,
+                         axis_names=frozenset({"pod"}), check_vma=False)

@@ -1,0 +1,167 @@
+"""Training step factory: grad accumulation, clipping, AdamW, compression.
+
+``make_train_step`` returns a pure ``step(state, batch) -> (state, metrics)``
+suitable for ``jax.jit`` with donated state.  Gradient accumulation splits
+the (already pod+data-sharded) global batch along the leading axis and
+accumulates fp32 gradients with ``lax.scan`` so peak activation memory is
+one microbatch regardless of global batch size.
+
+With ``compress_pod=True`` the gradient computation is wrapped in a
+``shard_map`` manual over the 'pod' axis only: each pod computes grads on its
+local half of the batch and the cross-pod reduction is the error-feedback
+int8 all-gather from compress.py instead of a bf16 all-reduce.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..models import model as M
+from ..models.config import ArchConfig
+from ..optim import adamw
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.OptState
+    step: jnp.ndarray
+    err: Any = None          # error-feedback residuals (compression only)
+
+
+def init_state(cfg: ArchConfig, key: jax.Array,
+               compress_pod: bool = False) -> Tuple[TrainState, Dict]:
+    params, axes = M.init_model(cfg, key)
+    opt = adamw.init(params)
+    err = (jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        if compress_pod else None)
+    return TrainState(params=params, opt=opt,
+                      step=jnp.zeros((), jnp.int32), err=err), axes
+
+
+def _split_microbatches(batch: Dict, accum: int) -> Dict:
+    def resh(x):
+        b = x.shape[0]
+        assert b % accum == 0, (b, accum)
+        return x.reshape(accum, b // accum, *x.shape[1:])
+    return {k: resh(v) for k, v in batch.items()}
+
+
+def _grad_constrainer(param_axes):
+    """Constrain gradients to the parameter shardings (ZeRO semantics):
+    the per-microbatch gradient reduction lowers to reduce-scatter instead
+    of a full all-reduce, and the fp32 accumulator is stored sharded."""
+    from ..parallel import sharding as sh_mod
+
+    def constrain(grads):
+        mesh = sh_mod.current_mesh()
+        if param_axes is None or mesh is None:
+            return grads
+        shardings = sh_mod.shard_params(grads, param_axes, mesh)
+        return jax.tree_util.tree_map(
+            lambda g, s: (jax.lax.with_sharding_constraint(g, s)
+                          if s is not None else g), grads, shardings)
+
+    return constrain
+
+
+def make_grads_fn(cfg: ArchConfig, accum: int = 1,
+                  compute_dtype=jnp.bfloat16, param_axes=None):
+    """Gradient function with mixed precision + sharded accumulation.
+
+    Parameters stay fp32 masters; a bf16 copy is differentiated so every
+    FSDP gather and gradient reduction moves 2-byte payloads (collective
+    term halved vs fp32 -- §Perf).  compute_dtype=None disables the cast.
+    """
+    constrain = _grad_constrainer(param_axes)
+
+    def cast(params):
+        if compute_dtype is None:
+            return params
+        return jax.tree_util.tree_map(
+            lambda p: p.astype(compute_dtype)
+            if p.dtype == jnp.float32 else p, params)
+
+    def loss_fn(p16, mb):
+        return M.forward_train(p16, cfg, mb)
+
+    if accum == 1:
+        def grads_fn(params, batch):
+            loss, g = jax.value_and_grad(loss_fn)(cast(params), batch)
+            g = constrain(g)
+            return loss, jax.tree_util.tree_map(
+                lambda x: x.astype(jnp.float32), g)
+        return grads_fn
+
+    def grads_fn(params, batch):
+        mbs = _split_microbatches(batch, accum)
+        p16 = cast(params)
+
+        def body(carry, mb):
+            loss_acc, g_acc = carry
+            loss, g = jax.value_and_grad(loss_fn)(p16, mb)
+            g = constrain(g)
+            g_acc = jax.tree_util.tree_map(
+                lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+            return (loss_acc + loss, g_acc), None
+
+        zeros = constrain(jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+        (loss, g), _ = jax.lax.scan(body, (jnp.zeros(()), zeros), mbs)
+        inv = 1.0 / accum
+        g = jax.tree_util.tree_map(lambda x: x * inv, g)
+        return loss * inv, g
+
+    return grads_fn
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
+                    accum: int = 1, compress_pod: bool = False,
+                    mesh=None, compute_dtype=jnp.bfloat16,
+                    param_axes=None):
+    """Returns step(state, batch) -> (state, metrics)."""
+    grads_fn = make_grads_fn(cfg, accum, compute_dtype=compute_dtype,
+                             param_axes=param_axes)
+
+    if not compress_pod:
+        def step(state: TrainState, batch: Dict):
+            loss, grads = grads_fn(state.params, batch)
+            params, opt, metrics = adamw.apply_updates(
+                state.params, grads, state.opt, opt_cfg)
+            metrics["loss"] = loss
+            return TrainState(params, opt, state.step + 1, state.err), metrics
+        return step
+
+    assert mesh is not None, "compress_pod needs the mesh"
+    from .compress import compressed_pod_sum
+    n_pods = mesh.shape.get("pod", 1)
+
+    def pod_body(params, batch, err):
+        loss, g = grads_fn(params, batch)
+        if n_pods > 1:
+            synced = jax.tree_util.tree_map(
+                lambda gi, ei: compressed_pod_sum(gi, ei, n_pods), g, err)
+            g = jax.tree_util.tree_map(lambda _, o: o[0], g, synced)
+            err = jax.tree_util.tree_map(lambda _, o: o[1], g, synced)
+            loss = jax.lax.pmean(loss, "pod")
+        return loss, g, err
+
+    wrapped = jax.shard_map(
+        pod_body, mesh=mesh,
+        in_specs=(P(), P("pod"), P()),
+        out_specs=(P(), P(), P()),
+        axis_names=frozenset({"pod"}), check_vma=False)
+
+    def step(state: TrainState, batch: Dict):
+        loss, grads, err = wrapped(state.params, batch, state.err)
+        params, opt, metrics = adamw.apply_updates(
+            state.params, grads, state.opt, opt_cfg)
+        metrics["loss"] = loss
+        return TrainState(params, opt, state.step + 1, err), metrics
+
+    return step

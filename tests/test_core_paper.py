@@ -1,0 +1,240 @@
+"""Paper-core tests: topology routing, Eq.(1)/(2) power model, solvers.
+
+Property tests (hypothesis) check the system invariants the MILP relies on:
+flow conservation of the path-incidence contraction, placement-pin respect,
+monotonicity of power in workload, and solver optimality against exhaustive
+enumeration on small instances.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import embed, power, solvers, topology, vsr
+
+SETTINGS = dict(deadline=None, max_examples=15)
+
+
+@pytest.fixture(scope="module")
+def topo():
+    return topology.paper_topology()
+
+
+def _problem(topo, n_vsrs=4, seed=0, **kw):
+    vs = vsr.random_vsrs(n_vsrs, rng=seed, source_nodes=[0], **kw)
+    return power.build_problem(topo, vs), vs
+
+
+# ---------------------------------------------------------------------------
+# routing / flow conservation
+# ---------------------------------------------------------------------------
+
+def test_paths_symmetric_and_acyclic(topo):
+    pn = topo.path_nodes
+    assert pn.shape == (topo.P, topo.P, topo.N)
+    np.testing.assert_array_equal(pn, pn.transpose(1, 0, 2))
+    assert np.all(pn.diagonal(axis1=0, axis2=1).T == 0)
+
+
+def test_same_node_traffic_stays_local(topo):
+    # traffic between a node and itself crosses no network node
+    assert float(topo.path_nodes[3, 3].sum()) == 0.0
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 6))
+def test_flow_conservation(seed, n):
+    """lambda_n from the tensor contraction == independent route walk."""
+    topo = topology.paper_topology()
+    prob, vs = _problem(topo, n_vsrs=n, seed=seed)
+    rng = np.random.default_rng(seed)
+    X = rng.integers(0, prob.P, size=(prob.R, prob.V)).astype(np.int32)
+    Xp = np.asarray(power.apply_pins(prob, jnp.asarray(X)))
+    # model's lambda
+    onehot = jax.nn.one_hot(jnp.asarray(Xp), prob.P, dtype=jnp.float32)
+    _, lam, _ = power._loads(prob, onehot)
+    # independent accumulation: for each virtual link, add its bitrate to
+    # every network node on the (unique) route
+    lam_ref = np.zeros(topo.N)
+    ls, ld, lh = vs.links()
+    flatX = Xp.reshape(-1)
+    for s, d, h in zip(ls, ld, lh):
+        b, e = int(flatX[s]), int(flatX[d])
+        if b == e:
+            continue
+        lam_ref += h * topo.path_nodes[b, e]
+    np.testing.assert_allclose(np.asarray(lam), lam_ref, rtol=1e-5,
+                               atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# power model invariants
+# ---------------------------------------------------------------------------
+
+def test_pins_respected(topo):
+    prob, vs = _problem(topo, n_vsrs=3, seed=1)
+    X = np.full((prob.R, prob.V), 5, dtype=np.int32)
+    Xp = np.asarray(power.apply_pins(prob, jnp.asarray(X)))
+    np.testing.assert_array_equal(Xp[np.arange(prob.R), vs.input_vm], vs.src)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 10_000))
+def test_power_monotone_in_workload(seed):
+    """Scaling all demands up never decreases total power."""
+    topo = topology.paper_topology()
+    vs = vsr.random_vsrs(3, rng=seed, source_nodes=[0])
+    prob1 = power.build_problem(topo, vs)
+    vs2 = vsr.VSRBatch(F=vs.F * 1.7, H=vs.H * 1.7, src=vs.src,
+                       input_vm=vs.input_vm)
+    prob2 = power.build_problem(topo, vs2)
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.integers(0, prob1.P, size=(prob1.R, prob1.V)),
+                    jnp.int32)
+    p1 = power.evaluate(prob1, X)
+    p2 = power.evaluate(prob2, X)
+    assert float(p2.total) >= float(p1.total) - 1e-3
+
+
+def test_cdc_only_placement_matches_hand_calc(topo):
+    """One VM at the CDC: per-server idle + proportional + route power."""
+    vs = vsr.VSRBatch(
+        F=np.array([[0.5, 8.0]], np.float32),
+        H=np.zeros((1, 2, 2), np.float32),
+        src=np.array([0], np.int32), input_vm=np.array([0], np.int32))
+    vs.H[0, 0, 1] = 20.0  # Mbps input->compute
+    prob = power.build_problem(topo, vs)
+    cdc = topo.proc_index("cdc0")
+    X = jnp.asarray([[0, cdc]], jnp.int32)
+    bd = power.evaluate(prob, X)
+    # processing: iot server idle+prop for input VM, cdc server idle+prop
+    iot, cdch = topo.proc_hw[0], topo.proc_hw[cdc]
+    exp_proc = (1.0 * (iot.idle_w + iot.eps_w_per_gflops * 0.5)
+                + 1.12 * (cdch.idle_w + cdch.eps_w_per_gflops * 8.0
+                          + cdch.lan_idle_share * cdch_lan_idle(topo, cdc)
+                          + cdch.lan_eps_w_per_gbps * 20.0 / 1e3))
+    assert abs(float(bd.proc) - exp_proc) < 1.0
+    assert float(bd.net) > 0.0       # route crosses onu/olt/metro/core
+    assert float(bd.violation) == 0.0
+
+
+def cdch_lan_idle(topo, p):
+    return topo.proc_hw[p].lan_idle_w
+
+
+# ---------------------------------------------------------------------------
+# solvers
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=6)
+@given(seed=st.integers(0, 1000))
+def test_exhaustive_is_lower_bound(seed):
+    """No solver beats exhaustive enumeration (tiny instance)."""
+    topo = topology.paper_topology(n_iot=4, n_zones=2)
+    vs = vsr.random_vsrs(2, rng=seed, n_vms=2, source_nodes=[0])
+    prob = power.build_problem(topo, vs)
+    best = solvers.exhaustive(prob).objective
+    for method in ("cdc", "af", "mf", "iot", "coordinate"):
+        res = embed.embed(topo, vs, method, problem=prob)
+        assert res.objective >= best - 1e-4
+
+
+def test_portfolio_matches_exhaustive_small():
+    topo = topology.paper_topology(n_iot=4, n_zones=2)
+    vs = vsr.random_vsrs(2, rng=7, n_vms=2, source_nodes=[0])
+    prob = power.build_problem(topo, vs)
+    best = solvers.exhaustive(prob).objective
+    res = solvers.solve_cfn(prob, topo, jax.random.PRNGKey(0))
+    assert res.objective <= best * 1.001
+
+
+def test_coordinate_descent_monotone(topo):
+    prob, vs = _problem(topo, n_vsrs=5, seed=3)
+    cdc = topo.layer_indices("cdc")[0]
+    X0 = np.full((prob.R, prob.V), cdc, dtype=np.int32)
+    res = solvers.coordinate(prob, X0)
+    hist = res.history
+    assert all(hist[i + 1] <= hist[i] + 1e-6 for i in range(len(hist) - 1))
+
+
+def test_anneal_improves_over_random(topo):
+    prob, vs = _problem(topo, n_vsrs=5, seed=4)
+    rng = np.random.default_rng(0)
+    X0 = rng.integers(0, prob.P, size=(prob.R, prob.V)).astype(np.int32)
+    start = float(power.objective(prob, jnp.asarray(X0)))
+    res = solvers.anneal(prob, jax.random.PRNGKey(1), X0, n_chains=8,
+                         n_steps=500)
+    assert res.objective <= start
+
+
+def test_fixed_layer_spills_on_overflow():
+    """IoT layer saturates -> first-fit spills to the CDC (paper's 20-VSR
+    spike)."""
+    topo = topology.paper_topology(n_iot=2)
+    vs = vsr.random_vsrs(20, rng=0, source_nodes=[0],
+                         vm_gflops=(8.0, 10.0))
+    prob = power.build_problem(topo, vs)
+    res = solvers.fixed_layer(prob, topo, "iot")
+    layers_used = {topo.proc_layer[p] for p in res.X.reshape(-1)}
+    assert "cdc" in layers_used
+    assert res.feasible
+
+
+# ---------------------------------------------------------------------------
+# paper headline (fast version; benchmarks reproduce the full figure)
+# ---------------------------------------------------------------------------
+
+def test_cfn_beats_cdc_baseline(topo):
+    vs = vsr.random_vsrs(8, rng=0, source_nodes=[0])
+    out = embed.savings_vs_baseline(topo, vs, baseline="cdc",
+                                    method="cfn-milp")
+    assert out["saving_frac"] > 0.15          # paper worst case is 19%
+    assert out["optimized"].feasible
+
+
+def test_af_mf_never_selected_by_optimizer(topo):
+    """Paper finding: AF/MF bypassed (inefficient W/GFLOPS + PUE)."""
+    vs = vsr.random_vsrs(6, rng=2, source_nodes=[0])
+    res = embed.embed(topo, vs, "cfn-milp")
+    layers_used = {topo.proc_layer[p] for p in res.X.reshape(-1)}
+    assert "af" not in layers_used and "mf" not in layers_used
+
+
+# ---------------------------------------------------------------------------
+# beyond-paper: meshed NSFNET core + latency-bounded embedding (paper §4)
+# ---------------------------------------------------------------------------
+
+def test_nsfnet_flow_conservation():
+    """The meshed core breaks route uniqueness but not conservation: the
+    path tensor still routes every unit of traffic along one connected
+    shortest path (symmetric, CDC reachable, sane hop counts)."""
+    t = topology.nsfnet_topology()
+    pn, hops = t.path_nodes, t.path_hops
+    np.testing.assert_array_equal(pn, pn.transpose(1, 0, 2))
+    cdc = t.proc_index("cdc0")
+    # iot -> cdc crosses access + metro + several core nodes
+    assert 5 <= hops[0, cdc] <= 14
+    # per-pair: number of network nodes on the route == recorded hops
+    np.testing.assert_array_equal(pn.sum(-1), hops)
+
+
+def test_nsfnet_savings_band():
+    t = topology.nsfnet_topology()
+    vs = vsr.random_vsrs(6, rng=0, source_nodes=[0])
+    out = embed.savings_vs_baseline(t, vs, method="cfn-milp")
+    # deeper core => CDC costs more => savings at least as large as tree
+    assert out["saving_frac"] > 0.3
+
+
+def test_latency_bounded_embedding(topo):
+    vs = vsr.random_vsrs(5, rng=1, source_nodes=[0])
+    res = embed.embed_latency_bounded(topo, vs, max_hops=2)
+    hops = topo.path_hops
+    for r in range(res.X.shape[0]):
+        src = int(vs.src[r])
+        for v in range(res.X.shape[1]):
+            assert hops[src, res.X[r, v]] <= 2
+    # with a 2-hop budget the CDC (5+ hops away) is unreachable
+    cdc = topo.proc_index("cdc0")
+    assert cdc not in set(res.X.reshape(-1))

@@ -1,0 +1,170 @@
+"""Per-architecture model tests: smoke forward/train, decode==forward,
+recurrence equivalences, MoE dispatch equivalence, loss chunking."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import layers as L
+from repro.models import model as M
+from repro.models import ssm
+from repro.optim import adamw
+from repro.serve import cache as C
+from repro.serve import engine
+from repro.train.step import init_state, make_train_step
+
+
+def _batch(cfg, B=2, S=32, seed=7):
+    rng = np.random.default_rng(seed)
+    out = {}
+    text = S - (cfg.vision_prefix_tokens or 0)
+    if cfg.is_encoder_decoder:
+        out["frames"] = jnp.asarray(
+            0.1 * rng.standard_normal((B, S, cfg.d_model)), jnp.float32)
+    if cfg.vision_prefix_tokens:
+        out["patches"] = jnp.asarray(
+            0.1 * rng.standard_normal((B, cfg.vision_prefix_tokens,
+                                       cfg.d_model)), jnp.float32)
+    toks = rng.integers(0, cfg.vocab, (B, text + 1))
+    out["tokens"] = jnp.asarray(toks[:, :-1], jnp.int32)
+    out["labels"] = jnp.asarray(toks[:, 1:], jnp.int32)
+    return out
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_smoke_forward_and_shapes(arch):
+    cfg = configs.get_smoke(arch)
+    params, axes = M.init_model(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    loss = M.forward_train(params, cfg, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss))
+    h = M.forward_hidden(params, cfg, batch)
+    S_total = batch["tokens"].shape[1] + (cfg.vision_prefix_tokens or 0)
+    assert h.shape == (2, S_total, cfg.d_model)
+    assert bool(jnp.isfinite(h).all())
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_smoke_train_step_improves(arch):
+    cfg = configs.get_smoke(arch)
+    state, _ = init_state(cfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, adamw.AdamWConfig(lr=5e-3)),
+                   donate_argnums=(0,))
+    batch = _batch(cfg, B=4, S=32)
+    losses = []
+    for _ in range(8):    # same batch: loss must fall if grads flow
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+    assert np.isfinite(losses).all()
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_decode_matches_forward(arch):
+    # fp32 so near-tie MoE routing decisions can't flip between the cached
+    # and uncached paths (a bf16 rounding effect, not a cache bug)
+    cfg = dataclasses.replace(configs.get_smoke(arch), dtype="float32")
+    if cfg.moe:
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)  # lossless
+    params, _ = M.init_model(cfg, jax.random.PRNGKey(1))
+    B, S = 2, 17
+    batch = _batch(cfg, B=B, S=S)
+    h = M.forward_hidden(params, cfg, batch)
+    ref = M.logits_fn(params, cfg, h[:, -1:])[:, 0]
+    enc_len = S if cfg.is_encoder_decoder else 0
+    cache = C.zeros(C.cache_spec(cfg, B, 64, enc_len=enc_len))
+    pre = dict(batch)
+    pre.pop("labels")
+    toks = pre.pop("tokens")
+    _, cache = engine.prefill(params, cfg, {"tokens": toks[:, :-1], **pre},
+                              cache)
+    pos = jnp.asarray(toks.shape[1] - 1 + (cfg.vision_prefix_tokens or 0),
+                      jnp.int32)
+    got, _ = engine.decode_step(params, cfg, toks[:, -1:], pos, cache)
+    rel = float(jnp.max(jnp.abs(got - ref))) / \
+        (float(jnp.max(jnp.abs(ref))) + 1e-9)
+    assert rel < 3e-2, f"{arch}: cached decode diverges ({rel:.3e})"
+
+
+def test_mlstm_chunkwise_matches_sequential():
+    B, T, H, dk, dv = 2, 256, 4, 16, 32
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    q = jax.random.normal(ks[0], (B, T, H, dk))
+    k = jax.random.normal(ks[1], (B, T, H, dk))
+    v = jax.random.normal(ks[2], (B, T, H, dv))
+    i_raw = jax.random.normal(ks[3], (B, T, H))
+    lf = jax.nn.log_sigmoid(jax.random.normal(ks[4], (B, T, H)))
+    h1, s1 = ssm.mlstm_sequential(q, k, v, i_raw, lf)
+    h2, s2 = ssm.mlstm_chunkwise(q, k, v, i_raw, lf, chunk=64)
+    np.testing.assert_allclose(h1, h2, atol=2e-4)
+    np.testing.assert_allclose(s1[0], s2[0], atol=2e-4)
+
+
+def test_mamba_chunked_scan_matches_stepwise():
+    cfg = configs.get_smoke("hymba-1.5b")
+    ini = L.Init(jax.random.PRNGKey(0))
+    ssm.init_mamba(ini, cfg, prefix="m_")
+    x = 0.3 * jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model))
+    y_par, _ = ssm.mamba(ini.params, x, cfg, state=None, prefix="m_")
+    # stepwise decode over the same sequence
+    state = dict(conv=jnp.zeros((2, cfg.conv_kernel - 1,
+                                 cfg.ssm_expand * cfg.d_model)),
+                 h=jnp.zeros((2, cfg.ssm_expand * cfg.d_model,
+                              cfg.ssm_state)))
+    outs = []
+    for t in range(64):
+        y, state = ssm.mamba(ini.params, x[:, t:t + 1], cfg, state=state,
+                             prefix="m_")
+        outs.append(y)
+    y_seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_seq),
+                               atol=3e-3)
+
+
+def test_moe_impls_agree_lossless():
+    cfg = dataclasses.replace(configs.get_smoke("olmoe-1b-7b"),
+                              capacity_factor=8.0)
+    params, _ = M.init_model(cfg, jax.random.PRNGKey(0))
+    unit = jax.tree_util.tree_map(lambda a: a[0], params["g0"])["b0"]
+    x = 0.3 * jax.random.normal(jax.random.PRNGKey(5), (2, 16, cfg.d_model))
+    y_onehot = L.moe(unit, x, cfg, impl="onehot")
+    y_sort = L.moe(unit, x, cfg, impl="sort")
+    y_ep = L.moe(unit, x, cfg, impl="ep_sort")
+    np.testing.assert_allclose(y_onehot, y_sort, atol=1e-5)
+    np.testing.assert_allclose(y_onehot, y_ep, atol=1e-5)
+
+
+def test_chunked_xent_matches_direct():
+    cfg = configs.get_smoke("qwen3-4b")
+    params, _ = M.init_model(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg, B=2, S=32)
+    h = M.forward_hidden(params, cfg, batch)
+    chunked = M.xent_loss(params, cfg, h, batch["labels"], n_chunks=8)
+    direct = M.xent_loss(params, cfg, h, batch["labels"], n_chunks=1)
+    np.testing.assert_allclose(float(chunked), float(direct), rtol=1e-5)
+
+
+def test_layer_plan_covers_all_layers():
+    for arch in configs.ARCH_IDS:
+        cfg = configs.get(arch)
+        plan = M.layer_plan(cfg)
+        total = sum(len(g.kinds) * g.repeats for g in plan)
+        assert total == cfg.n_layers, (arch, total)
+
+
+def test_param_counts_match_published():
+    # +-15% of the advertised sizes (embeddings / stubs explain the slack)
+    expected = {
+        "xlstm-1.3b": 1.3e9, "qwen3-4b": 4.0e9, "h2o-danube-3-4b": 4.0e9,
+        "gemma2-27b": 27.2e9, "command-r-plus-104b": 104e9,
+        "deepseek-v2-236b": 236e9, "olmoe-1b-7b": 6.9e9,
+        "hymba-1.5b": 1.5e9, "internvl2-2b": 1.9e9,
+    }
+    from repro.models import costs
+    for arch, n in expected.items():
+        got = costs.param_breakdown(configs.get(arch))["total"]
+        assert abs(got - n) / n < 0.16, (arch, got, n)
