@@ -1,14 +1,21 @@
 """Kernel micro-benchmarks: Pallas (interpret on CPU) vs the jnp oracle,
-plus the solver-throughput benchmark (candidate evaluations / second) that
-quantifies the batched-objective speedup over per-candidate evaluation.
+plus the solver-throughput benchmarks.
+
+``solver_moves`` is the headline: it measures Metropolis/coordinate solver
+moves per second through three evaluation paths -- legacy full
+``objective_batch`` per proposal, the incremental delta engine
+(core.power), and the fused Pallas annealing kernel -- at paper scale
+(R=10 VSRs on the paper topology), and writes the machine-readable
+``BENCH_solver.json`` so later PRs can track the trajectory.
 
 On CPU the Pallas timings measure the interpreter (not TPU perf); the
-numbers that matter here are (a) correctness-at-scale and (b) the jnp
-batched-vs-loop factor, which carries to TPU.
+numbers that matter here are (a) correctness-at-scale and (b) the
+delta-vs-full factor, which carries to TPU.
 """
 from __future__ import annotations
 
 import csv
+import json
 import time
 from pathlib import Path
 from typing import Dict, List
@@ -17,10 +24,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import power, topology, vsr
+from repro.core import power, solvers, topology, vsr
 from repro.kernels import ops, ref
 
 OUT = Path("experiments/benchmarks")
+BENCH_SOLVER_JSON = Path("BENCH_solver.json")
 
 
 def _write(name: str, rows: List[Dict]) -> None:
@@ -65,6 +73,119 @@ def placement_throughput() -> List[Dict]:
                                            if t_loop == t_loop else "n/a")))
     _write("placement_throughput", rows)
     return rows
+
+
+def _best_time(fn, reps: int = 5) -> float:
+    """Min-of-reps wall time (compile excluded); robust to a noisy box."""
+    jax.block_until_ready(fn())
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.time()
+        jax.block_until_ready(fn())
+        best = min(best, time.time() - t0)
+    return best
+
+
+def solver_moves(n_vsrs: int = 10, n_steps: int = 300,
+                 chains_full: int = 4096, chains_delta: int = 16384,
+                 chains_fused: int = 64) -> Dict:
+    """Solver moves/second: full objective_batch vs delta vs fused kernel.
+
+    Paper scale: R=10 VSRs, paper topology.  Each path runs the identical
+    Metropolis proposal stream at its own best chain count (the full path
+    saturates its flops around 4k chains; the delta path, which carries only
+    [P]+[N] state per chain, keeps scaling); the coordinate sweep comparison
+    scores the same (position, destination) move set through
+    `objective_batch` broadcasting vs `delta_sweep`.  Writes
+    BENCH_solver.json.
+    """
+    topo = topology.paper_topology()
+    vs = vsr.random_vsrs(n_vsrs, rng=0, source_nodes=[0])
+    prob = power.build_problem(topo, vs)
+    aux = power.build_aux(prob)
+    key = jax.random.PRNGKey(0)
+    rng = np.random.default_rng(0)
+    temps = jnp.asarray(
+        50.0 * (0.05 / 50.0) ** (np.arange(n_steps) / (n_steps - 1)),
+        jnp.float32)
+
+    def chain_inputs(C):
+        X0 = jnp.asarray(rng.integers(0, prob.P, size=(C, prob.R, prob.V)),
+                         jnp.int32)
+        Xc = jax.vmap(lambda x: power.apply_pins(prob, x))(X0)
+        fi, p_prop, u_prop = solvers._anneal_proposals(
+            key, aux, n_steps, C, prob.P)
+        return Xc, aux.free_flat[fi], p_prop, u_prop
+
+    # -- annealing hot loop ------------------------------------------------
+    Xc, jp, pp_, u_ = chain_inputs(chains_full)
+    t_full = _best_time(
+        lambda: solvers._anneal_scan_full(prob, Xc, jp, pp_, u_, temps))
+    full_mps = chains_full * n_steps / t_full
+
+    Xc, jp, pp_, u_ = chain_inputs(chains_delta)
+    t_delta = _best_time(
+        lambda: solvers._anneal_scan_delta(prob, aux, Xc, jp, pp_, u_, temps))
+    delta_mps = chains_delta * n_steps / t_delta
+
+    Xc, jp, pp_, u_ = chain_inputs(chains_fused)
+    t_fused = _best_time(
+        lambda: ops.fused_anneal(prob, aux, Xc, jp.T, pp_.T, u_.T, temps))
+    fused_mps = chains_fused * n_steps / t_fused
+
+    # -- coordinate sweep: score every (free VM, destination) move ---------
+    X0 = jnp.asarray(rng.integers(0, prob.P, size=(prob.R, prob.V)),
+                     jnp.int32)
+    positions = jnp.asarray(np.asarray(aux.free_pos))
+    M, P = positions.shape[0], prob.P
+    state = power.init_state(prob, X0)
+
+    @jax.jit
+    def legacy_sweep(problem, X, positions):
+        def body(X, pos):
+            r, v = pos[0], pos[1]
+            cand = jnp.broadcast_to(X, (P,) + X.shape)
+            cand = cand.at[:, r, v].set(jnp.arange(P, dtype=X.dtype))
+            obj = power.objective_batch(problem, cand)
+            best = jnp.argmin(obj)
+            return X.at[r, v].set(best.astype(X.dtype)), obj[best]
+        return jax.lax.scan(body, X, positions)
+
+    t_sw_old = _best_time(lambda: legacy_sweep(prob, X0, positions))
+    t_sw_new = _best_time(lambda: solvers._sweep(prob, aux, state, positions))
+    sweep_old_sps = M * P / t_sw_old
+    sweep_new_sps = M * P / t_sw_new
+
+    backend = jax.default_backend()
+    out = dict(
+        scenario=dict(topology="paper", n_vsrs=n_vsrs, P=int(prob.P),
+                      N=int(prob.N), R=int(prob.R), V=int(prob.V),
+                      n_steps=n_steps, backend=backend),
+        anneal=dict(
+            full_moves_per_s=round(full_mps, 1),
+            delta_moves_per_s=round(delta_mps, 1),
+            fused_moves_per_s=round(fused_mps, 1),
+            chains=dict(full=chains_full, delta=chains_delta,
+                        fused=chains_fused),
+            speedup_delta_vs_full=round(delta_mps / full_mps, 2),
+            speedup_fused_vs_full=round(fused_mps / full_mps, 2),
+            note=("fused kernel runs in Pallas interpret mode on non-TPU "
+                  "backends; its CPU number measures the interpreter"
+                  if backend != "tpu" else "fused kernel compiled via Mosaic"),
+        ),
+        coordinate_sweep=dict(
+            legacy_scores_per_s=round(sweep_old_sps, 1),
+            delta_scores_per_s=round(sweep_new_sps, 1),
+            speedup_delta_vs_full=round(t_sw_old / t_sw_new, 2),
+        ),
+    )
+    out["max_delta_speedup_vs_full"] = max(
+        out["anneal"]["speedup_delta_vs_full"],
+        out["coordinate_sweep"]["speedup_delta_vs_full"])
+    BENCH_SOLVER_JSON.write_text(json.dumps(out, indent=2) + "\n")
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / "BENCH_solver.json").write_text(json.dumps(out, indent=2) + "\n")
+    return out
 
 
 def flash_cases() -> List[Dict]:

@@ -53,6 +53,18 @@ def run_placement():
               f"loop={r['loop_evals_per_s']}/s")
 
 
+def run_solver():
+    out = kernel_bench.solver_moves()
+    a, c = out["anneal"], out["coordinate_sweep"]
+    print(f"solver-moves: anneal full={a['full_moves_per_s']:,.0f}/s "
+          f"delta={a['delta_moves_per_s']:,.0f}/s "
+          f"fused={a['fused_moves_per_s']:,.0f}/s "
+          f"(delta {a['speedup_delta_vs_full']}x)")
+    print(f"solver-moves: sweep legacy={c['legacy_scores_per_s']:,.0f}/s "
+          f"delta={c['delta_scores_per_s']:,.0f}/s "
+          f"({c['speedup_delta_vs_full']}x) -> BENCH_solver.json")
+
+
 def run_flash():
     rows = kernel_bench.flash_cases()
     for r in rows:
@@ -72,7 +84,7 @@ def run_roofline():
 
 
 BENCHES = dict(fig3=run_fig3, fig4=run_fig4, gap=run_gap,
-               placement=run_placement, flash=run_flash,
+               placement=run_placement, solver=run_solver, flash=run_flash,
                roofline=run_roofline)
 
 

@@ -1,7 +1,9 @@
 """Paper core: CFN topology, power model (Eq. 1/2), VSRs, placement solvers."""
 from . import embed, hardware, power, solvers, topology, vsr
 from .embed import embed as embed_vsrs, savings_vs_baseline
-from .power import PlacementProblem, build_problem, evaluate, objective
+from .power import (PlacementAux, PlacementProblem, PlacementState,
+                    apply_move, build_aux, build_problem, delta_move,
+                    delta_sweep, evaluate, init_state, objective)
 from .topology import (CFNTopology, datacenter_topology, nsfnet_topology,
                        paper_topology)
 from .vsr import VSRBatch, from_layer_costs, random_vsrs
@@ -9,7 +11,8 @@ from .vsr import VSRBatch, from_layer_costs, random_vsrs
 __all__ = [
     "embed", "hardware", "power", "solvers", "topology", "vsr",
     "embed_vsrs", "savings_vs_baseline", "PlacementProblem", "build_problem",
-    "evaluate", "objective", "CFNTopology", "datacenter_topology",
-    "paper_topology", "nsfnet_topology", "VSRBatch", "from_layer_costs",
-    "random_vsrs",
+    "evaluate", "objective", "PlacementAux", "PlacementState", "apply_move",
+    "build_aux", "delta_move", "delta_sweep", "init_state", "CFNTopology",
+    "datacenter_topology", "paper_topology", "nsfnet_topology", "VSRBatch",
+    "from_layer_costs", "random_vsrs",
 ]

@@ -1,4 +1,4 @@
-"""The CFN power model: paper Eq. (1) + Eq. (2), batched in JAX.
+"""The CFN power model: paper Eq. (1) + Eq. (2), full and *incremental*.
 
 Given a placement ``X[r, v]`` (processing-node index per VM), total power is
 
@@ -7,10 +7,32 @@ Given a placement ``X[r, v]`` (processing-node index per VM), total power is
                            + EL_p * theta_p + Phi_p * share_p * pi_p^LAN )   (2)
 
 with lambda_n obtained by contracting the per-candidate traffic matrix with the
-precomputed path-incidence tensor (topology.py).  Everything is expressed as
-dense tensor algebra so the objective vmaps over thousands of candidate
-placements -- this is the "solver hot loop" that kernels/placement_power
-implements as a Pallas TPU kernel.
+precomputed path-incidence tensor (topology.py).
+
+Two evaluation regimes coexist:
+
+  * **Full evaluation** (`evaluate` / `objective_batch`): dense tensor algebra
+    over one-hot placements, O(R*V*P + L*P^2 + P^2*N) per candidate, vmapped
+    over candidate batches.  This is the oracle and the right tool when a
+    whole placement changes (genetic crossover, exhaustive enumeration).
+
+  * **Delta evaluation** (the state engine): the solver hot loop (annealing,
+    coordinate descent) mutates exactly ONE VM per proposal, so the load
+    tensors change on a handful of entries.  ``PlacementState`` carries the
+    live loads (omega[P], traffic matrix tm[P, P], theta[P], lam[N]) and a
+    cached objective; ``PlacementAux`` precomputes, per VM, the incident
+    virtual links (other endpoint, bitrate, direction).  ``delta_move``
+    returns the exact objective change of a single-VM move in
+    O(deg * N + P) -- the processing terms change only at the source and
+    destination node, the network terms only along the two routes touched --
+    and ``apply_move`` commits it.  ``delta_sweep`` scores all P destinations
+    of one VM at once in O(P * (P + N + deg * N)), which is what coordinate
+    descent consumes.  Tiny residuals left by float32 +/- updates are snapped
+    to zero (SNAP_*) so the beta/phi activation indicators stay exact.
+
+The same delta math runs fused inside kernels/placement_power.py's annealing
+kernel (state resident in VMEM across Metropolis steps); kernels/ref.py holds
+a float64 oracle asserting delta == objective(X') - objective(X).
 
 Units: W, GFLOPS, Mbps (converted to Gbps where eps/EL are W per Gbps).
 """
@@ -32,6 +54,13 @@ from .vsr import VSRBatch
 PENALTY = 1.0e4
 # lambda_n > ACTIVE_EPS Mbps counts a network node as activated.
 ACTIVE_EPS = 1.0e-6
+# Incremental-state snapping: after a +/- float32 update, magnitudes below
+# these are residue of exact cancellation, not real load (smallest true
+# demands are ~0.1 GFLOPS / ~5 Mbps).  Snapping keeps the beta/phi activation
+# indicators identical to a from-scratch evaluation.  Mirrored in
+# kernels/placement_power.py.
+SNAP_GFLOPS = 1.0e-3
+SNAP_MBPS = 1.0e-2
 
 
 class PowerBreakdown(NamedTuple):
@@ -134,7 +163,10 @@ def apply_pins(problem: PlacementProblem, X: jnp.ndarray) -> jnp.ndarray:
 
 
 def _loads(problem: PlacementProblem, onehot: jnp.ndarray):
-    """Shared load computation given one-hot placements [R, V, P]."""
+    """Shared load computation given one-hot placements [R, V, P].
+
+    Returns ``(omega[P], tm[P, P], lam[N], theta[P])``.
+    """
     p = problem
     omega = jnp.einsum("rvp,rv->p", onehot, p.F)                    # [P]
     flat = onehot.reshape(-1, p.P)
@@ -144,7 +176,32 @@ def _loads(problem: PlacementProblem, onehot: jnp.ndarray):
     intra = jnp.einsum("l,lp,lp->p", p.link_h, u, w)                # [P]
     lam = jnp.einsum("pq,pqn->n", tm, p.path_nodes)                 # [N] Mbps
     theta = (u.T @ p.link_h) + (w.T @ p.link_h) - intra             # [P] Mbps
-    return omega, lam, theta
+    return omega, tm, lam, theta
+
+
+def _assemble_terms(p: PlacementProblem, omega, lam, theta, n_srv, beta, phi):
+    """Eq.(1)/(2) term assembly shared by the hard and smooth branches."""
+    per_net = p.pue_net * (p.eps * lam / 1e3 + beta * p.idle_share * p.pi_net)
+    per_proc = p.pue_pr * (p.E * omega + n_srv * p.pi_pr
+                           + p.EL * theta / 1e3
+                           + phi * p.lan_share * p.pi_lan)
+    violation = (jnp.sum(jax.nn.relu(omega - p.NS * p.C_pr), axis=-1)
+                 + jnp.sum(jax.nn.relu(lam / 1e3 - p.C_net), axis=-1)
+                 + jnp.sum(jax.nn.relu(theta / 1e3 - p.C_lan), axis=-1))
+    return per_net, per_proc, violation
+
+
+def _hard_terms(problem: PlacementProblem, omega, lam, theta):
+    """Eq.(1)/(2) terms for hard placements; broadcasts over leading dims.
+
+    omega/theta [..., P], lam [..., N] -> (per_net [..., N], per_proc [..., P],
+    violation [...]).
+    """
+    p = problem
+    n_srv = jnp.ceil(omega / p.C_pr)
+    beta = (lam > ACTIVE_EPS).astype(jnp.float32)
+    phi = ((omega > ACTIVE_EPS) | (theta > ACTIVE_EPS)).astype(jnp.float32)
+    return _assemble_terms(p, omega, lam, theta, n_srv, beta, phi)
 
 
 def evaluate(problem: PlacementProblem, X: jnp.ndarray,
@@ -162,25 +219,17 @@ def evaluate(problem: PlacementProblem, X: jnp.ndarray,
     else:
         pin_oh = jax.nn.one_hot(p.fixed_node, p.P, dtype=jnp.float32)
         onehot = jnp.where(p.fixed_mask[..., None], pin_oh, X)
-    omega, lam, theta = _loads(p, onehot)
+    omega, _, lam, theta = _loads(p, onehot)
 
     if hard:
-        n_srv = jnp.ceil(omega / p.C_pr)
-        beta = (lam > ACTIVE_EPS).astype(jnp.float32)
-        phi = ((omega > ACTIVE_EPS) | (theta > ACTIVE_EPS)).astype(jnp.float32)
+        per_net, per_proc, violation = _hard_terms(p, omega, lam, theta)
     else:
         # smooth surrogates (upper-bounding ceil by x/C + sigmoid gate)
         n_srv = omega / p.C_pr + jax.nn.sigmoid(omega / temp)
         beta = 1.0 - jnp.exp(-lam / temp)
         phi = 1.0 - jnp.exp(-(omega + theta) / temp)
-
-    per_net = p.pue_net * (p.eps * lam / 1e3 + beta * p.idle_share * p.pi_net)
-    per_proc = p.pue_pr * (p.E * omega + n_srv * p.pi_pr
-                           + p.EL * theta / 1e3
-                           + phi * p.lan_share * p.pi_lan)
-    violation = (jnp.sum(jax.nn.relu(omega - p.NS * p.C_pr))
-                 + jnp.sum(jax.nn.relu(lam / 1e3 - p.C_net))
-                 + jnp.sum(jax.nn.relu(theta / 1e3 - p.C_lan)))
+        per_net, per_proc, violation = _assemble_terms(
+            p, omega, lam, theta, n_srv, beta, phi)
     net = per_net.sum()
     proc = per_proc.sum()
     return PowerBreakdown(total=net + proc, net=net, proc=proc,
@@ -196,6 +245,272 @@ def objective(problem: PlacementProblem, X: jnp.ndarray) -> jnp.ndarray:
 
 evaluate_batch = jax.jit(jax.vmap(evaluate, in_axes=(None, 0)))
 objective_batch = jax.jit(jax.vmap(objective, in_axes=(None, 0)))
+
+
+# ---------------------------------------------------------------------------
+# Incremental delta evaluation
+# ---------------------------------------------------------------------------
+
+class PlacementAux(NamedTuple):
+    """Static per-problem precomputation for the delta engine.
+
+    Per flattened VM ``j = r*V + v``, the incident virtual links padded to the
+    max degree D (padding rows have ``inc_h == 0`` and ``inc_other == j``):
+      * ``inc_other[J, D]`` -- flat index of the link's other endpoint VM
+      * ``inc_h[J, D]``     -- bitrate (Mbps); 0 marks padding
+      * ``inc_src[J, D]``   -- True where VM j is the link's source
+    plus ``free_pos[M, 2]`` -- the (r, v) positions NOT pinned by Eq.(4),
+    i.e. the only positions a solver move may touch -- and ``free_flat[M]``,
+    the same positions as flat indices (``r*V + v``, the convention every
+    per-VM table above uses).
+    """
+    inc_other: jnp.ndarray
+    inc_h: jnp.ndarray
+    inc_src: jnp.ndarray
+    free_pos: jnp.ndarray
+    free_flat: jnp.ndarray
+
+
+class PlacementState(NamedTuple):
+    """Live placement + load tensors, kept consistent by ``apply_move``."""
+    X: jnp.ndarray        # [R, V] int32, pins applied
+    omega: jnp.ndarray    # [P] GFLOPS
+    tm: jnp.ndarray       # [P, P] Mbps inter-node traffic matrix
+    theta: jnp.ndarray    # [P] Mbps LAN traffic
+    lam: jnp.ndarray      # [N] Mbps network-node traffic
+    obj: jnp.ndarray      # [] cached objective (power + penalty)
+
+
+def build_aux(problem: PlacementProblem) -> PlacementAux:
+    """Precompute per-VM incident-link lists (numpy; once per problem)."""
+    src = np.asarray(problem.link_src)
+    dst = np.asarray(problem.link_dst)
+    h = np.asarray(problem.link_h)
+    J = problem.R * problem.V
+    per_vm: list = [[] for _ in range(J)]
+    for l in range(len(src)):
+        s, d = int(src[l]), int(dst[l])
+        if s == d:
+            # self-loop: one entry; its `other` endpoint moves with the VM
+            per_vm[s].append((s, float(h[l]), True))
+        else:
+            per_vm[s].append((d, float(h[l]), True))
+            per_vm[d].append((s, float(h[l]), False))
+    D = max(1, max((len(e) for e in per_vm), default=1))
+    inc_other = np.empty((J, D), dtype=np.int32)
+    inc_other[:] = np.arange(J, dtype=np.int32)[:, None]
+    inc_h = np.zeros((J, D), dtype=np.float32)
+    inc_src = np.zeros((J, D), dtype=bool)
+    for j, entries in enumerate(per_vm):
+        for k, (o, hh, is_src) in enumerate(entries):
+            inc_other[j, k] = o
+            inc_h[j, k] = hh
+            inc_src[j, k] = is_src
+    free_pos = np.argwhere(~np.asarray(problem.fixed_mask)).astype(np.int32)
+    free_flat = (free_pos[:, 0] * problem.V + free_pos[:, 1]).astype(np.int32)
+    return PlacementAux(inc_other=jnp.asarray(inc_other),
+                        inc_h=jnp.asarray(inc_h),
+                        inc_src=jnp.asarray(inc_src),
+                        free_pos=jnp.asarray(free_pos),
+                        free_flat=jnp.asarray(free_flat))
+
+
+def _snap(x: jnp.ndarray, eps: float) -> jnp.ndarray:
+    return jnp.where(jnp.abs(x) < eps, 0.0, x)
+
+
+def _objective_from_loads(problem, omega, lam, theta) -> jnp.ndarray:
+    per_net, per_proc, viol = _hard_terms(problem, omega, lam, theta)
+    return per_net.sum(-1) + per_proc.sum(-1) + PENALTY * viol
+
+
+def init_state(problem: PlacementProblem, X: jnp.ndarray) -> PlacementState:
+    """Full from-scratch state build (also the drift-killing `refresh`)."""
+    X = apply_pins(problem, jnp.asarray(X, jnp.int32))
+    onehot = jax.nn.one_hot(X, problem.P, dtype=jnp.float32)
+    omega, tm, lam, theta = _loads(problem, onehot)
+    obj = _objective_from_loads(problem, omega, lam, theta)
+    return PlacementState(X=X, omega=omega, tm=tm, theta=theta, lam=lam,
+                          obj=obj)
+
+
+def _move_core(problem: PlacementProblem, aux: PlacementAux, X_flat,
+               omega, theta, lam, j, p_new):
+    """Entry-wise effect of moving flat VM ``j`` to ``p_new``.
+
+    The theta/omega deltas are supported on {p_old, p_new} ONLY (the q-side
+    contributions of removal and insertion cancel algebraically for non-self
+    links), so the move reduces to two per-node scalars plus the [N] route
+    delta -- no [P]-wide temporaries.  Returns
+    ``(p_old, sm, om2, th2, lam2, link_info)`` where ``om2``/``th2`` are the
+    NEW (snapped) omega/theta values at [p_old, p_new] and ``sm`` flags the
+    degenerate p_old == p_new move.
+    """
+    p = problem
+    P = p.P
+    p_old = X_flat[j]
+    F_j = p.F.reshape(-1)[j]
+    h = aux.inc_h[j]                                   # [D]
+    is_src = aux.inc_src[j]                            # [D]
+    other = aux.inc_other[j]                           # [D]
+    is_self = other == j
+    q = X_flat[other]                                  # [D]
+    q_rm = jnp.where(is_self, p_old, q)
+    q_in = jnp.where(is_self, p_new, q)
+    # signed bitrates: -h for the removal leg, +h for the insertion leg
+    hh = jnp.concatenate([-h, h])                       # [2D]
+    q2 = jnp.concatenate([q_rm, q_in])                  # [2D]
+    H_tot = h.sum()
+    sr = (h * (q_rm == p_old)).sum()
+    si = (h * (q_in == p_new)).sum()
+    # theta delta at p_old / p_new (all other entries cancel exactly)
+    alpha = -(H_tot - sr) + (hh * (q2 == p_old)).sum()
+    beta = (H_tot - si) + (hh * (q2 == p_new)).sum()
+    # lam: the two touched routes per link (ordered pair respects direction)
+    path_flat = p.path_nodes.reshape(P * P, p.N)
+    idx_rm = jnp.where(is_src, p_old * P + q_rm, q_rm * P + p_old)
+    idx_in = jnp.where(is_src, p_new * P + q_in, q_in * P + p_new)
+    d_lam = hh @ path_flat[jnp.concatenate([idx_rm, idx_in])]
+    lam2 = _snap(lam + d_lam, SNAP_MBPS)
+
+    idx = jnp.stack([p_old, p_new])
+    sm = (p_old == p_new).astype(jnp.float32)
+    # degenerate move: fold the (exactly cancelling) deltas together so both
+    # entries see "no change"
+    d_om = jnp.stack([-F_j + sm * F_j, F_j - sm * F_j])
+    d_th = jnp.stack([alpha + sm * beta, beta + sm * alpha])
+    om2 = _snap(omega[idx] + d_om, SNAP_GFLOPS)         # [2]
+    th2 = _snap(theta[idx] + d_th, SNAP_MBPS)
+    return p_old, idx, om2, th2, lam2, (h, is_src, q_rm, q_in)
+
+
+def _delta_objective(p: PlacementProblem, omega, theta, lam,
+                     idx, om2, th2, lam2):
+    """Objective change, summing only changed terms (no large-sum
+    cancellation): processing terms move at the two entries ``idx``;
+    network terms are differenced full-width where untouched entries give
+    exact zeros.  The endpoints share stacked gathers to stay cheap under
+    vmap (XLA CPU serializes vmapped gathers per row)."""
+    om, th = omega[idx], theta[idx]                    # [2]
+    pk = jnp.stack([p.E, p.C_pr, p.pi_pr, p.pue_pr, p.EL,
+                    p.lan_share * p.pi_lan, p.NS * p.C_pr, p.C_lan])
+    E, Cpr, pi, pue, EL, share_pi, cap_pr, C_lan = pk[:, idx]
+    relu = jax.nn.relu
+
+    def proc(o, t):
+        phi = ((o > ACTIVE_EPS) | (t > ACTIVE_EPS)).astype(jnp.float32)
+        return pue * (E * o + jnp.ceil(o / Cpr) * pi + EL * t / 1e3
+                      + phi * share_pi)
+
+    d_proc = (proc(om2, th2) - proc(om, th)).sum()
+    d_viol = (relu(om2 - cap_pr) - relu(om - cap_pr)
+              + relu(th2 / 1e3 - C_lan) - relu(th / 1e3 - C_lan)).sum()
+    beta = (lam > ACTIVE_EPS).astype(jnp.float32)
+    beta2 = (lam2 > ACTIVE_EPS).astype(jnp.float32)
+    d_net = (p.pue_net * (p.eps * (lam2 - lam) / 1e3
+                          + (beta2 - beta) * p.idle_share * p.pi_net)).sum()
+    d_viol += (relu(lam2 / 1e3 - p.C_net) - relu(lam / 1e3 - p.C_net)).sum()
+    return d_proc + d_net + PENALTY * d_viol
+
+
+def _commit_entries(vec, idx, new_vals):
+    """vec with vec[idx[0]] = new_vals[0], then vec[idx[1]] = new_vals[1],
+    as iota-compare selects (vmapped scalar scatters serialize on CPU)."""
+    iota = jnp.arange(vec.shape[0])
+    vec = jnp.where(iota == idx[0], new_vals[0], vec)
+    return jnp.where(iota == idx[1], new_vals[1], vec)
+
+
+def delta_move(problem: PlacementProblem, aux: PlacementAux,
+               state: PlacementState, r, v, p_new) -> jnp.ndarray:
+    """Exact objective change of moving VM (r, v) to node ``p_new``.
+
+    O(deg * N + P) -- no full re-evaluation.  (r, v) must be a free
+    (non-pinned) position; see ``PlacementAux.free_pos``.
+    """
+    j = r * problem.V + v
+    X_flat = state.X.reshape(-1)
+    _, idx, om2, th2, lm2, _ = _move_core(
+        problem, aux, X_flat, state.omega, state.theta, state.lam, j, p_new)
+    return _delta_objective(problem, state.omega, state.theta, state.lam,
+                            idx, om2, th2, lm2)
+
+
+def apply_move(problem: PlacementProblem, aux: PlacementAux,
+               state: PlacementState, r, v, p_new) -> PlacementState:
+    """Commit a single-VM move, updating every load tensor incrementally."""
+    p_new = jnp.asarray(p_new, state.X.dtype)
+    j = r * problem.V + v
+    X_flat = state.X.reshape(-1)
+    p_old, idx, om2, th2, lm2, (h, is_src, q_rm, q_in) = _move_core(
+        problem, aux, X_flat, state.omega, state.theta, state.lam, j, p_new)
+    delta = _delta_objective(problem, state.omega, state.theta, state.lam,
+                             idx, om2, th2, lm2)
+    rows = jnp.concatenate([jnp.where(is_src, p_old, q_rm),
+                            jnp.where(is_src, p_new, q_in)])
+    cols = jnp.concatenate([jnp.where(is_src, q_rm, p_old),
+                            jnp.where(is_src, q_in, p_new)])
+    vals = jnp.concatenate([-h, h])
+    tm2 = _snap(state.tm.at[rows, cols].add(vals), SNAP_MBPS)
+    X2 = state.X.at[r, v].set(p_new)
+    return PlacementState(X=X2,
+                          omega=_commit_entries(state.omega, idx, om2),
+                          tm=tm2,
+                          theta=_commit_entries(state.theta, idx, th2),
+                          lam=lm2, obj=state.obj + delta)
+
+
+def delta_sweep(problem: PlacementProblem, aux: PlacementAux,
+                state: PlacementState, r, v) -> jnp.ndarray:
+    """Absolute objective of moving VM (r, v) to EVERY node: [P].
+
+    Removal once, then a vectorized insertion across all P candidates --
+    O(P * (P + N + deg * N)) instead of P full evaluations.  Entry ``p_old``
+    reproduces the current objective, so ``argmin`` never worsens the state.
+    """
+    p = problem
+    P, N = p.P, p.N
+    j = r * p.V + v
+    X_flat = state.X.reshape(-1)
+    p_old = X_flat[j]
+    F_j = p.F.reshape(-1)[j]
+    h = aux.inc_h[j]
+    is_src = aux.inc_src[j]
+    other = aux.inc_other[j]
+    is_self = other == j
+    q = X_flat[other]
+    q_rm = jnp.where(is_self, p_old, q)
+    h_ns = jnp.where(is_self, 0.0, h)      # non-self bitrates
+    h_s = jnp.where(is_self, h, 0.0)
+
+    # ---- removal (exact state with VM j taken out) ----------------------
+    e_po = jax.nn.one_hot(p_old, P, dtype=jnp.float32)
+    oh_qr = jax.nn.one_hot(q_rm, P, dtype=jnp.float32)          # [D, P]
+    same_r = (q_rm == p_old).astype(jnp.float32)
+    omega_r = state.omega - F_j * e_po
+    theta_r = state.theta - (h.sum() - (h * same_r).sum()) * e_po \
+        - (h[:, None] * oh_qr).sum(0)
+    path_flat = p.path_nodes.reshape(P * P, N)
+    idx_rm = jnp.where(is_src, p_old * P + q_rm, q_rm * P + p_old)
+    lam_r = state.lam - (h[:, None] * path_flat[idx_rm]).sum(0)
+
+    # ---- vectorized insertion at every candidate ------------------------
+    eye = jnp.eye(P, dtype=jnp.float32)
+    omega_c = omega_r[None, :] + F_j * eye                      # [P, P]
+    # at candidate a: + (sum_k h_ns_k (1 - [a==q_k]) + sum h_s) on entry a,
+    # + h_ns_k on each entry q_k
+    add_q = (h_ns[:, None] * jax.nn.one_hot(q, P, dtype=jnp.float32)).sum(0)
+    diag_add = h_ns.sum() - add_q + h_s.sum()                   # [P]
+    theta_c = theta_r[None, :] + add_q[None, :] + eye * diag_add[:, None]
+    rt_src = p.path_nodes[:, q, :]                              # [P, D, N]
+    rt_dst = jnp.swapaxes(p.path_nodes[q, :, :], 0, 1)          # [P, D, N]
+    rt = jnp.where(is_src[None, :, None], rt_src, rt_dst)
+    lam_c = lam_r[None, :] + jnp.einsum("d,pdn->pn", h_ns, rt)  # [P, N]
+
+    omega_c = _snap(omega_c, SNAP_GFLOPS)
+    theta_c = _snap(theta_c, SNAP_MBPS)
+    lam_c = _snap(lam_c, SNAP_MBPS)
+    return _objective_from_loads(p, omega_c, lam_c, theta_c)
 
 
 def summarize(problem: PlacementProblem, topo: CFNTopology,

@@ -5,21 +5,25 @@ available offline, and the contribution we reproduce is the *formulation* and
 its energy trade-offs, so we provide a solver suite whose strongest member
 (`solve_cfn`, coordinate-descent restarts x batched simulated annealing,
 cross-validated by exhaustive enumeration on small instances) acts as the
-CPLEX stand-in.  All heavy evaluation is the batched tensor objective in
-power.py (optionally the Pallas kernel in kernels/placement_power).
+CPLEX stand-in.  The hot solvers (coordinate, anneal) run on power.py's
+incremental delta-evaluation engine -- a proposal changes one VM, so only
+the touched load-tensor entries are re-scored; whole-placement evaluation
+(exhaustive, genetic) stays on the batched tensor objective (optionally the
+Pallas kernel in kernels/placement_power, which also provides a fused
+annealing kernel keeping chain state resident in VMEM).
 
 Solvers:
   fixed_layer   -- the paper's CDC / AF / MF baselines (+ IoT first-fit).
-  coordinate    -- exact best-single-move sweeps (monotone descent).
+  coordinate    -- exact best-single-move sweeps via delta_sweep (monotone).
   exhaustive    -- provably optimal joint enumeration (small instances).
-  anneal        -- batched Metropolis chains (jax.lax.scan over steps).
+  anneal        -- Metropolis chains on incremental state (delta / fused
+                   Pallas / legacy full-objective backends).
   genetic       -- population crossover/mutation search.
   relax         -- differentiable soft-placement + rounding (beyond-paper).
   solve_cfn     -- portfolio = best of the above; the "CFN MILP" curve.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -27,8 +31,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .power import (PlacementProblem, PowerBreakdown, apply_pins, evaluate,
-                    objective, objective_batch)
+from .power import (PENALTY, PlacementAux, PlacementProblem, PlacementState,
+                    PowerBreakdown, apply_move, apply_pins, build_aux,
+                    delta_sweep, evaluate, init_state, objective,
+                    objective_batch, _commit_entries, _delta_objective,
+                    _hard_terms, _loads, _move_core)
 from .topology import CFNTopology
 
 
@@ -109,41 +116,51 @@ def fixed_layer(problem: PlacementProblem, topo: CFNTopology,
 
 
 # ---------------------------------------------------------------------------
-# Coordinate descent (exact single-VM moves)
+# Coordinate descent (exact single-VM moves, scored by the delta engine)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=())
-def _sweep(problem: PlacementProblem, X: jnp.ndarray, positions: jnp.ndarray):
-    """One pass over all VM positions; each VM moved to its best node."""
-    P = problem.P
+@jax.jit
+def _sweep(problem: PlacementProblem, aux: PlacementAux,
+           state: PlacementState, positions: jnp.ndarray):
+    """One pass over all free VM positions; each VM moved to its best node.
 
-    def body(X, pos):
+    Destinations are scored by ``delta_sweep`` (one removal + vectorized
+    insertion) instead of broadcasting P full candidate placements."""
+
+    def body(state, pos):
         r, v = pos[0], pos[1]
-        cand = jnp.broadcast_to(X, (P,) + X.shape)
-        cand = cand.at[:, r, v].set(jnp.arange(P, dtype=X.dtype))
-        obj = objective_batch(problem, cand)
-        best = jnp.argmin(obj)
-        return X.at[r, v].set(best.astype(X.dtype)), obj[best]
+        obj_all = delta_sweep(problem, aux, state, r, v)
+        best = jnp.argmin(obj_all)
+        state = apply_move(problem, aux, state, r, v,
+                           best.astype(state.X.dtype))
+        return state, obj_all[best]
 
-    X, objs = jax.lax.scan(body, X, positions)
-    return X, objs[-1]
+    state, objs = jax.lax.scan(body, state, positions)
+    return state, objs[-1]
 
 
 def coordinate(problem: PlacementProblem, X0: np.ndarray,
                max_sweeps: int = 12, tol: float = 1e-6) -> SolveResult:
-    fixed_mask = np.asarray(problem.fixed_mask)
-    positions = np.argwhere(~fixed_mask).astype(np.int32)
-    X = jnp.asarray(X0, jnp.int32)
-    prev = float("inf")
+    aux = build_aux(problem)
+    positions = jnp.asarray(np.asarray(aux.free_pos))
+    if positions.shape[0] == 0:  # every VM pinned: nothing to move
+        return _result(problem, jnp.asarray(X0, jnp.int32), "coordinate")
+    state = init_state(problem, jnp.asarray(X0, jnp.int32))
+    best_obj = float(state.obj)
+    best_X = state.X
     history: List[float] = []
     for _ in range(max_sweeps):
-        X, obj = _sweep(problem, X, jnp.asarray(positions))
-        obj = float(obj)
-        history.append(obj)
-        if prev - obj < tol:
+        state, _ = _sweep(problem, aux, state, positions)
+        # exact refresh once per sweep: kills float32 drift and yields an
+        # exact (incumbent-best, hence monotone) history
+        state = init_state(problem, state.X)
+        obj = float(state.obj)
+        if obj < best_obj:
+            best_obj, best_X = obj, state.X
+        history.append(best_obj)
+        if len(history) > 1 and history[-2] - obj < tol:
             break
-        prev = obj
-    return _result(problem, X, "coordinate", history)
+    return _result(problem, best_X, "coordinate", history)
 
 
 # ---------------------------------------------------------------------------
@@ -182,51 +199,161 @@ def exhaustive(problem: PlacementProblem, max_combos: int = 2_000_000,
 # Batched simulated annealing
 # ---------------------------------------------------------------------------
 
+def _chain_step(problem: PlacementProblem, aux: PlacementAux,
+                Xf, omega, theta, lam, obj, j, p_new):
+    """One Metropolis proposal on ONE chain's incremental state.
+
+    Returns the candidate state + exact objective delta; the caller decides
+    acceptance.  vmapped over chains inside the anneal scan.  All updates
+    are entry-wise (iota-compare selects, no [P]-wide temporaries and no
+    vmapped scalar scatters, which serialize on XLA CPU)."""
+    _, idx, om2, th2, lm2, _ = _move_core(problem, aux, Xf, omega, theta,
+                                          lam, j, p_new)
+    delta = _delta_objective(problem, omega, theta, lam, idx, om2, th2, lm2)
+    Xf2 = jnp.where(jnp.arange(Xf.shape[0]) == j, p_new, Xf)
+    omega2 = _commit_entries(omega, idx, om2)
+    theta2 = _commit_entries(theta, idx, th2)
+    return Xf2, omega2, theta2, lm2, obj + delta, delta
+
+
+def _anneal_proposals(key: jax.Array, aux: PlacementAux, n_steps: int,
+                      n_chains: int, P: int):
+    """Free-position Metropolis proposals: flat VM index, destination, u.
+
+    Pinned input VMs are never proposed (their placement is fixed by
+    Eq. 4), so every step is a real move."""
+    kf, kp, ka = jax.random.split(key, 3)
+    M = aux.free_pos.shape[0]
+    fi = jax.random.randint(kf, (n_steps, n_chains), 0, M)
+    p_prop = jax.random.randint(kp, (n_steps, n_chains), 0, P, jnp.int32)
+    u = jax.random.uniform(ka, (n_steps, n_chains))
+    return fi, p_prop, u
+
+
 def anneal(problem: PlacementProblem, key: jax.Array, X0: np.ndarray,
            n_chains: int = 32, n_steps: int = 4000,
-           t0: float = 50.0, t1: float = 0.05) -> SolveResult:
+           t0: float = 50.0, t1: float = 0.05,
+           backend: str = "auto") -> SolveResult:
+    """Batched Metropolis chains on incremental (delta-evaluated) state.
+
+    backend:
+      * ``"delta"`` -- pure-JAX scan; per-chain loads updated in
+        O(deg*N + P) per step (no full objective per proposal).
+      * ``"fused"`` -- the Pallas kernel in kernels/placement_power: chain
+        state stays resident in VMEM and proposal -> delta-eval -> accept is
+        fused across all steps in ONE kernel launch.
+      * ``"full"``  -- legacy full `objective_batch` per step (kept as the
+        benchmark baseline).
+      * ``"auto"``  -- fused on TPU, delta elsewhere.
+    """
     R, V, P = problem.R, problem.V, problem.P
-    k_init, k_scan = jax.random.split(key)
-    X = jnp.asarray(X0, jnp.int32)
+    if backend == "auto":
+        backend = "fused" if jax.default_backend() == "tpu" else "delta"
+    if backend not in ("delta", "fused", "full"):
+        raise ValueError(f"unknown anneal backend {backend!r}")
+    aux = build_aux(problem)
+    if aux.free_pos.shape[0] == 0:
+        # every VM is pinned (e.g. single-VM VSRs): nothing to anneal
+        return _result(problem, jnp.asarray(X0, jnp.int32), "anneal")
+    k_init, k_prop = jax.random.split(key)
+    X = apply_pins(problem, jnp.asarray(X0, jnp.int32))
     Xc = jnp.broadcast_to(X, (n_chains, R, V)).copy()
     # randomize all but chain 0 (keep one chain at the warm start)
     rand = jax.random.randint(k_init, (n_chains, R, V), 0, P, jnp.int32)
     keep = (jnp.arange(n_chains) == 0)[:, None, None]
-    Xc = jnp.where(keep, Xc, rand)
-    obj0 = objective_batch(problem, Xc)
+    Xc = jax.vmap(lambda x: apply_pins(problem, x))(jnp.where(keep, Xc, rand))
 
     temps = t0 * (t1 / t0) ** (jnp.arange(n_steps) / max(1, n_steps - 1))
-    keys = jax.random.split(k_scan, n_steps)
+    fi, p_prop, u_prop = _anneal_proposals(k_prop, aux, n_steps, n_chains, P)
+    j_prop = aux.free_flat[fi]                            # [n_steps, n_chains]
 
-    @jax.jit
-    def run(Xc, obj0, keys, temps):
-        def step(carry, inp):
-            Xc, obj, bX, bobj = carry
-            k, T = inp
-            kr, kv, kp, ka = jax.random.split(k, 4)
-            r = jax.random.randint(kr, (n_chains,), 0, R)
-            v = jax.random.randint(kv, (n_chains,), 0, V)
-            p = jax.random.randint(kp, (n_chains,), 0, P)
-            ci = jnp.arange(n_chains)
-            Xp = Xc.at[ci, r, v].set(p)
-            objp = objective_batch(problem, Xp)
-            u = jax.random.uniform(ka, (n_chains,))
-            acc = (objp < obj) | (u < jnp.exp(-(objp - obj) / T))
-            Xc = jnp.where(acc[:, None, None], Xp, Xc)
-            obj = jnp.where(acc, objp, obj)
-            better = obj < bobj
-            bX = jnp.where(better[:, None, None], Xc, bX)
-            bobj = jnp.where(better, obj, bobj)
-            return (Xc, obj, bX, bobj), bobj.min()
-
-        init = (Xc, obj0, Xc, obj0)
-        (_, _, bX, bobj), hist = jax.lax.scan(step, init, (keys, temps))
-        k = jnp.argmin(bobj)
-        return bX[k], bobj[k], hist
-
-    bX, bobj, hist = run(Xc, obj0, keys, temps)
-    return _result(problem, np.asarray(bX), "anneal",
+    if backend == "fused":
+        from ..kernels import ops as kops
+        bXc, stats = kops.fused_anneal(problem, aux, Xc, j_prop.T, p_prop.T,
+                                       u_prop.T, temps)
+        k = int(jnp.argmin(stats[:, 0]))
+        return _result(problem, np.asarray(bXc[k]), "anneal(fused)",
+                       [float(stats[k, 0])])
+    if backend == "full":
+        bX, bobj, hist = _anneal_scan_full(problem, Xc, j_prop, p_prop,
+                                           u_prop, temps)
+    else:
+        bX, bobj, hist = _anneal_scan_delta(problem, aux, Xc, j_prop, p_prop,
+                                            u_prop, temps)
+    tag = "anneal" if backend == "delta" else f"anneal({backend})"
+    return _result(problem, np.asarray(bX), tag,
                    [float(h) for h in np.asarray(hist[:: max(1, n_steps // 50)])])
+
+
+@jax.jit
+def _anneal_scan_delta(problem: PlacementProblem, aux: PlacementAux,
+                       Xc, j_prop, p_prop, u_prop, temps):
+    """Metropolis chains on incremental per-chain load state (module-level
+    jit: compiles once per problem/chain/step shape, not per solve)."""
+    n_chains, R, V = Xc.shape
+    Xf = Xc.reshape(n_chains, -1)
+    onehot = jax.nn.one_hot(Xc, problem.P, dtype=jnp.float32)
+    omega, _, lam, theta = jax.vmap(lambda oh: _loads(problem, oh))(onehot)
+    per_net, per_proc, viol = _hard_terms(problem, omega, lam, theta)
+    obj = per_net.sum(-1) + per_proc.sum(-1) + PENALTY * viol
+
+    step_fn = jax.vmap(
+        lambda Xf, om, th, lm, ob, j, pn: _chain_step(
+            problem, aux, Xf, om, th, lm, ob, j, pn))
+
+    def step(carry, inp):
+        Xf, omega, theta, lam, obj, bX, bobj = carry
+        j, pn, u, T = inp
+        Xf2, om2, th2, lm2, obj2, delta = step_fn(
+            Xf, omega, theta, lam, obj, j, pn)
+        acc = (delta < 0) | (u < jnp.exp(-jnp.maximum(delta, 0.0) / T))
+        a1 = acc[:, None]
+        Xf = jnp.where(a1, Xf2, Xf)
+        omega = jnp.where(a1, om2, omega)
+        theta = jnp.where(a1, th2, theta)
+        lam = jnp.where(a1, lm2, lam)
+        obj = jnp.where(acc, obj2, obj)
+        better = obj < bobj
+        bX = jnp.where(better[:, None], Xf, bX)
+        bobj = jnp.where(better, obj, bobj)
+        return (Xf, omega, theta, lam, obj, bX, bobj), bobj.min()
+
+    init = (Xf, omega, theta, lam, obj, Xf, obj)
+    (_, _, _, _, _, bX, bobj), hist = jax.lax.scan(
+        step, init, (j_prop, p_prop, u_prop, temps))
+    k = jnp.argmin(bobj)
+    return bX[k].reshape(R, V), bobj[k], hist
+
+
+@jax.jit
+def _anneal_scan_full(problem: PlacementProblem, Xc, j_prop, p_prop,
+                      u_prop, temps):
+    """Legacy annealing: one full batched objective per Metropolis step.
+
+    Kept as the benchmark baseline the delta/fused paths are measured
+    against (benchmarks/kernel_bench.py)."""
+    n_chains, R, V = Xc.shape
+    obj0 = objective_batch(problem, Xc)
+
+    def step(carry, inp):
+        Xc, obj, bX, bobj = carry
+        j, p, u, T = inp
+        ci = jnp.arange(n_chains)
+        Xp = Xc.reshape(n_chains, -1).at[ci, j].set(p).reshape(Xc.shape)
+        objp = objective_batch(problem, Xp)
+        acc = (objp < obj) | (u < jnp.exp(-(objp - obj) / T))
+        Xc = jnp.where(acc[:, None, None], Xp, Xc)
+        obj = jnp.where(acc, objp, obj)
+        better = obj < bobj
+        bX = jnp.where(better[:, None, None], Xc, bX)
+        bobj = jnp.where(better, obj, bobj)
+        return (Xc, obj, bX, bobj), bobj.min()
+
+    init = (Xc, obj0, Xc, obj0)
+    (_, _, bX, bobj), hist = jax.lax.scan(
+        step, init, (j_prop, p_prop, u_prop, temps))
+    k = jnp.argmin(bobj)
+    return bX[k], bobj[k], hist
 
 
 # ---------------------------------------------------------------------------

@@ -49,3 +49,27 @@ def placement_objective(problem: PlacementProblem, Xb: jax.Array, *,
     Xflat = Xp.reshape(B, -1).astype(jnp.int32)
     operands = pp.pack_problem(problem)
     return pp.placement_power_tpu(Xflat, *operands, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_anneal(problem: PlacementProblem, aux, Xc: jax.Array,
+                 j_prop: jax.Array, p_prop: jax.Array, u_prop: jax.Array,
+                 temps: jax.Array, *,
+                 interpret: Optional[bool] = None):
+    """Fused Metropolis annealing: whole chains in ONE kernel launch.
+
+    Xc [C, R, V] int32 starting placements (pins applied by the caller);
+    j_prop/p_prop/u_prop [C, T] proposals (flat free-VM index, destination
+    node, uniform draw); temps [T]; aux = core.power.build_aux(problem).
+    Returns (best_X [C, R, V], stats [C, 2] = (best obj, final obj)).
+    Chain state (placement + live load tensors) stays resident in VMEM
+    across all T steps -- no per-step objective launch.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    C, R, V = Xc.shape
+    Xflat = Xc.reshape(C, -1).astype(jnp.int32)
+    operands = pp.pack_problem(problem)
+    bX, stats = pp.fused_anneal_tpu(
+        Xflat, j_prop.astype(jnp.int32), p_prop.astype(jnp.int32), u_prop,
+        temps, *pp.pack_aux(aux), *operands, interpret=interpret)
+    return bX.reshape(C, R, V), stats

@@ -1,10 +1,16 @@
-"""Pure-jnp oracles for the Pallas kernels (tests assert_allclose vs these).
+"""Pure-jnp / numpy oracles for the Pallas kernels (tests assert vs these).
 
   * flash_attention_ref: chunked online-softmax attention -- the same code
     path the model stack uses (models.layers.flash_attention), re-exposed in
     the [B, H, S, D] kernel layout.
   * placement_objective_ref: the paper's Eq.(1)+(2) objective from
     core.power, evaluated with vmap -- the "CPLEX objective" ground truth.
+  * placement_objective_f64 / placement_delta_ref: float64 numpy
+    re-implementation of Eq.(1)+(2).  The delta oracle computes
+    objective(X') - objective(X) at float64, where the subtraction is exact
+    to ~1e-10 -- the yardstick for the incremental delta engine
+    (core.power.delta_move) and the fused annealing kernel, whose float32
+    deltas must agree to fp32 tolerance.
 """
 from __future__ import annotations
 
@@ -12,8 +18,10 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from ..core.power import PlacementProblem, apply_pins, evaluate
+from ..core.power import (ACTIVE_EPS, PENALTY, PlacementProblem, apply_pins,
+                          evaluate)
 from ..models.layers import flash_attention
 
 
@@ -40,3 +48,47 @@ def placement_objective_ref(problem: PlacementProblem,
         bd = evaluate(problem, X)
         return jnp.stack([bd.objective, bd.net, bd.proc, bd.violation])
     return jax.vmap(one)(Xb)
+
+
+def placement_objective_f64(problem: PlacementProblem, X) -> float:
+    """Eq.(1)+(2) objective of one placement at float64 (numpy)."""
+    p = problem
+    P = p.P
+    X = np.where(np.asarray(p.fixed_mask), np.asarray(p.fixed_node),
+                 np.asarray(X))
+    onehot = np.eye(P, dtype=np.float64)[X]                   # [R, V, P]
+    F = np.asarray(p.F, np.float64)
+    h = np.asarray(p.link_h, np.float64)
+    flat = onehot.reshape(-1, P)
+    u = flat[np.asarray(p.link_src)]                          # [L, P]
+    w = flat[np.asarray(p.link_dst)]
+    omega = np.einsum("rvp,rv->p", onehot, F)
+    tm = np.einsum("l,lp,lq->pq", h, u, w)
+    intra = np.einsum("l,lp,lp->p", h, u, w)
+    lam = np.einsum("pq,pqn->n", tm, np.asarray(p.path_nodes, np.float64))
+    theta = (u.T @ h) + (w.T @ h) - intra
+
+    g = lambda a: np.asarray(a, np.float64)
+    n_srv = np.ceil(omega / g(p.C_pr))
+    beta = (lam > ACTIVE_EPS).astype(np.float64)
+    phi = ((omega > ACTIVE_EPS) | (theta > ACTIVE_EPS)).astype(np.float64)
+    per_net = g(p.pue_net) * (g(p.eps) * lam / 1e3
+                              + beta * g(p.idle_share) * g(p.pi_net))
+    per_proc = g(p.pue_pr) * (g(p.E) * omega + n_srv * g(p.pi_pr)
+                              + g(p.EL) * theta / 1e3
+                              + phi * g(p.lan_share) * g(p.pi_lan))
+    relu = lambda x: np.maximum(x, 0.0)
+    violation = (relu(omega - g(p.NS) * g(p.C_pr)).sum()
+                 + relu(lam / 1e3 - g(p.C_net)).sum()
+                 + relu(theta / 1e3 - g(p.C_lan)).sum())
+    return float(per_net.sum() + per_proc.sum() + PENALTY * violation)
+
+
+def placement_delta_ref(problem: PlacementProblem, X, r: int, v: int,
+                        p_new: int) -> float:
+    """Float64 oracle for a single-VM move: objective(X') - objective(X)."""
+    X = np.asarray(X)
+    X2 = X.copy()
+    X2[r, v] = p_new
+    return (placement_objective_f64(problem, X2)
+            - placement_objective_f64(problem, X))

@@ -12,17 +12,24 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes):
+    # jax.sharding.AxisType landed after 0.4.x; older jax defaults to Auto.
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(tuple(shape), tuple(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=types)
+    return _make_mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh (tests, smoke dry-runs on few host devices)."""
-    types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(tuple(shape), tuple(axes), axis_types=types)
+    return _make_mesh(shape, axes)
 
 
 # TPU v5e-class hardware constants (roofline denominators).

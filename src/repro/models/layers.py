@@ -15,7 +15,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..parallel.sharding import shard
+from ..parallel.sharding import shard, shard_map_compat
 from .config import ArchConfig
 
 Params = Dict[str, Any]
@@ -742,11 +742,11 @@ def moe_ep(params: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
     # cotangent is a reduce-scatter -- was tried and REFUTED: the in-body
     # gather cannot be hoisted and re-runs per layer x microbatch
     # (deepseek train wire 7.1 -> 33.3 TB/dev; EXPERIMENTS.md §Perf #2).
-    wrapped = jax.shard_map(
-        body, mesh=mesh,
+    wrapped = shard_map_compat(
+        body, mesh,
         in_specs=(P(), P(), P(), P(), tuple(P() for _ in shared), P(manual)),
         out_specs=P(manual),
-        axis_names=frozenset(manual), check_vma=False)
+        axis_names=frozenset(manual))
     y = wrapped(params["router"], params["we_gate"], params["we_up"],
                 params["we_down"], shared, x)
     return shard(y, "batch", None, None)

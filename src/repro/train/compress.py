@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..parallel.sharding import shard_map_compat
+
 
 def quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
     scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
@@ -64,5 +66,5 @@ def make_compressed_sync(mesh, param_specs):
         return lambda grads, err: (grads, err)
 
     specs = (param_specs, param_specs)
-    return jax.shard_map(body, mesh=mesh, in_specs=specs, out_specs=specs,
-                         axis_names=frozenset({"pod"}), check_vma=False)
+    return shard_map_compat(body, mesh, in_specs=specs, out_specs=specs,
+                            axis_names={"pod"})

@@ -24,6 +24,7 @@ from jax.sharding import PartitionSpec as P
 from ..models import model as M
 from ..models.config import ArchConfig
 from ..optim import adamw
+from ..parallel.sharding import shard_map_compat
 
 
 class TrainState(NamedTuple):
@@ -151,11 +152,11 @@ def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
             loss = jax.lax.pmean(loss, "pod")
         return loss, g, err
 
-    wrapped = jax.shard_map(
-        pod_body, mesh=mesh,
+    wrapped = shard_map_compat(
+        pod_body, mesh,
         in_specs=(P(), P("pod"), P()),
         out_specs=(P(), P(), P()),
-        axis_names=frozenset({"pod"}), check_vma=False)
+        axis_names={"pod"})
 
     def step(state: TrainState, batch: Dict):
         loss, grads, err = wrapped(state.params, batch, state.err)

@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import embed, power, solvers, topology, vsr
 
@@ -53,7 +53,7 @@ def test_flow_conservation(seed, n):
     Xp = np.asarray(power.apply_pins(prob, jnp.asarray(X)))
     # model's lambda
     onehot = jax.nn.one_hot(jnp.asarray(Xp), prob.P, dtype=jnp.float32)
-    _, lam, _ = power._loads(prob, onehot)
+    _, _, lam, _ = power._loads(prob, onehot)
     # independent accumulation: for each virtual link, add its bitrate to
     # every network node on the (unique) route
     lam_ref = np.zeros(topo.N)
