@@ -3,7 +3,9 @@
   PYTHONPATH=src python -m benchmarks.run            # all
   PYTHONPATH=src python -m benchmarks.run fig3 gap   # subset
 
-Outputs CSVs under experiments/benchmarks/ and prints name,value summaries.
+Outputs CSVs under experiments/benchmarks/, machine-readable BENCH_*.json
+at the repo root (the single canonical location), and prints name,value
+summaries.
 """
 from __future__ import annotations
 
@@ -65,6 +67,19 @@ def run_solver():
           f"({c['speedup_delta_vs_full']}x) -> BENCH_solver.json")
 
 
+def run_online():
+    out = kernel_bench.online_resolve()
+    s = out["summary"]
+    print(f"online-resolve: incremental={s['median_incremental_s']*1e3:.1f}ms"
+          f"/event scratch={s['median_scratch_s']*1e3:.1f}ms/event "
+          f"({s['speedup_vs_scratch']}x) gap mean={s['mean_gap']:.3%} "
+          f"max={s['max_gap']:.3%}")
+    for d in out["defrag_sweep"]:
+        print(f"online-resolve: defrag_every={d['defrag_every']:2d} "
+              f"mean_gap={d['mean_gap']:.3%} max_gap={d['max_gap']:.3%} "
+              f"mean_event={d['mean_event_s']*1e3:.1f}ms -> BENCH_online.json")
+
+
 def run_flash():
     rows = kernel_bench.flash_cases()
     for r in rows:
@@ -84,8 +99,8 @@ def run_roofline():
 
 
 BENCHES = dict(fig3=run_fig3, fig4=run_fig4, gap=run_gap,
-               placement=run_placement, solver=run_solver, flash=run_flash,
-               roofline=run_roofline)
+               placement=run_placement, solver=run_solver,
+               online=run_online, flash=run_flash, roofline=run_roofline)
 
 
 def main() -> None:

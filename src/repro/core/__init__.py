@@ -1,18 +1,26 @@
-"""Paper core: CFN topology, power model (Eq. 1/2), VSRs, placement solvers."""
-from . import embed, hardware, power, solvers, topology, vsr
+"""Paper core: CFN topology, power model (Eq. 1/2), VSRs, placement solvers,
+and the online churn engine (dynamic)."""
+from . import dynamic, embed, hardware, power, solvers, topology, vsr
+from .dynamic import (SCENARIOS, ChurnScenario, OnlineEmbedder, ServiceEvent,
+                      churn_trace, diurnal_rate, poisson_timeline, replay)
 from .embed import embed as embed_vsrs, savings_vs_baseline
 from .power import (PlacementAux, PlacementProblem, PlacementState,
-                    apply_move, build_aux, build_problem, delta_move,
-                    delta_sweep, evaluate, init_state, objective)
+                    apply_move, attach_vsrs, attribute_power, build_aux,
+                    build_problem, delta_move, delta_sweep, detach_vsrs,
+                    evaluate, init_state, objective, service_loads,
+                    warm_state)
 from .topology import (CFNTopology, datacenter_topology, nsfnet_topology,
                        paper_topology)
 from .vsr import VSRBatch, from_layer_costs, random_vsrs
 
 __all__ = [
-    "embed", "hardware", "power", "solvers", "topology", "vsr",
+    "dynamic", "embed", "hardware", "power", "solvers", "topology", "vsr",
     "embed_vsrs", "savings_vs_baseline", "PlacementProblem", "build_problem",
     "evaluate", "objective", "PlacementAux", "PlacementState", "apply_move",
-    "build_aux", "delta_move", "delta_sweep", "init_state", "CFNTopology",
-    "datacenter_topology", "paper_topology", "nsfnet_topology", "VSRBatch",
-    "from_layer_costs", "random_vsrs",
+    "build_aux", "delta_move", "delta_sweep", "init_state", "attach_vsrs",
+    "detach_vsrs", "warm_state", "service_loads", "attribute_power",
+    "OnlineEmbedder", "ServiceEvent", "ChurnScenario", "SCENARIOS",
+    "churn_trace", "diurnal_rate", "poisson_timeline", "replay",
+    "CFNTopology", "datacenter_topology", "paper_topology",
+    "nsfnet_topology", "VSRBatch", "from_layer_costs", "random_vsrs",
 ]

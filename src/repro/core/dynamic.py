@@ -1,0 +1,457 @@
+"""Dynamic service churn: event timelines + the online embedding engine.
+
+The paper evaluates static VSR sets (1-20 VSRs placed once).  A serving
+system sees services *arrive and depart* continuously -- the regime studied
+by Yosuf et al. ("Energy Efficient Service Distribution in IoT", diurnal
+demand profiles) and named the core open problem for fog AI by Tuli et al.
+This module supplies both halves of that regime:
+
+  * **Timelines** -- non-homogeneous Poisson arrivals (thinning) under a
+    24 h diurnal rate profile, exponential service lifetimes, and scenario
+    presets (`steady`, `diurnal24`, `burst`).
+  * **OnlineEmbedder** -- the live placement state machine: `add` / `remove`
+    carry the previous embedding through `power.warm_state` /
+    `power.detach_vsrs` and re-solve with `solvers.resolve_incremental`
+    (only the churned service's VMs are re-placed; survivors polish in
+    place).  Every `defrag_every` events a full portfolio solve
+    (`solvers.solve_cfn`) re-packs the substrate and bounds the drift of
+    purely local re-optimization.
+
+Times are in hours throughout; rates in services/hour.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from . import embed as embed_mod
+from . import power, solvers, vsr
+from .topology import CFNTopology
+
+
+# ---------------------------------------------------------------------------
+# Rate profiles and event timelines
+# ---------------------------------------------------------------------------
+
+def diurnal_rate(t_h, base_rate: float, peak_rate: float,
+                 peak_hour: float = 20.0):
+    """24 h-periodic arrival rate (services/h): a raised cosine between
+    ``base_rate`` (quietest, 12 h off-peak) and ``peak_rate`` at
+    ``peak_hour`` -- the evening-peak shape of Yosuf et al.'s demand
+    profiles.  Accepts scalars or arrays.
+    """
+    phase = 2.0 * np.pi * (np.asarray(t_h, np.float64) - peak_hour) / 24.0
+    return base_rate + (peak_rate - base_rate) * 0.5 * (1.0 + np.cos(phase))
+
+
+@dataclass(frozen=True)
+class ServiceEvent:
+    """One churn event: service ``sid`` arrives or departs at hour ``t``."""
+    t: float
+    kind: str          # "arrive" | "depart"
+    sid: int
+
+
+def poisson_timeline(duration_h: float,
+                     rate_fn: Callable[[float], float],
+                     mean_lifetime_h: float,
+                     rng: np.random.Generator | int = 0,
+                     max_services: Optional[int] = None
+                     ) -> List[ServiceEvent]:
+    """Arrival/departure events over ``[0, duration_h)``.
+
+    Arrivals are a non-homogeneous Poisson process with intensity
+    ``rate_fn(t)`` sampled by thinning; each arrival draws an Exp(mean)
+    lifetime and emits a matching departure if it falls inside the horizon.
+    Events are returned time-sorted (departures before arrivals on exact
+    ties, so the live set stays minimal).
+    """
+    rng = np.random.default_rng(rng) if isinstance(rng, int) else rng
+    grid = np.linspace(0.0, duration_h, 512)
+    lam_max = float(np.max([rate_fn(t) for t in grid]))
+    if lam_max <= 0:
+        return []
+    events: List[ServiceEvent] = []
+    t, sid = 0.0, 0
+    while True:
+        t += rng.exponential(1.0 / lam_max)
+        if t >= duration_h:
+            break
+        if rng.random() <= rate_fn(t) / lam_max:
+            events.append(ServiceEvent(t, "arrive", sid))
+            t_dep = t + rng.exponential(mean_lifetime_h)
+            if t_dep < duration_h:
+                events.append(ServiceEvent(t_dep, "depart", sid))
+            sid += 1
+            if max_services is not None and sid >= max_services:
+                break
+    events.sort(key=lambda e: (e.t, e.kind == "arrive"))
+    return events
+
+
+def churn_trace(n_steady: int, n_events: int,
+                rng: np.random.Generator | int = 0) -> List[ServiceEvent]:
+    """The benchmark trace: a steady state of ``n_steady`` live services
+    perturbed by alternating single departure / arrival events (depart a
+    uniformly random live service, then admit a fresh one), so every event
+    is a one-service change at paper scale."""
+    rng = np.random.default_rng(rng) if isinstance(rng, int) else rng
+    events = [ServiceEvent(0.0, "arrive", sid) for sid in range(n_steady)]
+    live = list(range(n_steady))
+    sid = n_steady
+    for i in range(n_events):
+        t = 1.0 + i
+        if i % 2 == 0:
+            victim = live.pop(int(rng.integers(0, len(live))))
+            events.append(ServiceEvent(t, "depart", victim))
+        else:
+            events.append(ServiceEvent(t, "arrive", sid))
+            live.append(sid)
+            sid += 1
+    return events
+
+
+@dataclass(frozen=True)
+class ChurnScenario:
+    """A named workload regime: rate profile + lifetimes + VSR shape."""
+    name: str
+    duration_h: float
+    base_rate: float           # services/h (off-peak)
+    peak_rate: float           # services/h (at peak_hour)
+    peak_hour: float
+    mean_lifetime_h: float
+    n_vms: int = 3
+    vm_gflops: Tuple[float, float] = (3.0, 10.0)
+    link_mbps: Tuple[float, float] = (5.0, 50.0)
+    source_nodes: Tuple[int, ...] = (0,)
+
+    def rate_fn(self) -> Callable[[float], float]:
+        return lambda t: float(diurnal_rate(t, self.base_rate,
+                                            self.peak_rate, self.peak_hour))
+
+    def timeline(self, rng: np.random.Generator | int = 0
+                 ) -> List[ServiceEvent]:
+        return poisson_timeline(self.duration_h, self.rate_fn(),
+                                self.mean_lifetime_h, rng=rng)
+
+    def sample_vsr(self, rng: np.random.Generator | int) -> vsr.VSRBatch:
+        """One fresh service (R=1 VSR) drawn from the scenario's shape."""
+        return vsr.random_vsrs(1, rng=rng, n_vms=self.n_vms,
+                               source_nodes=list(self.source_nodes),
+                               vm_gflops=self.vm_gflops,
+                               link_mbps=self.link_mbps)
+
+
+SCENARIOS: Dict[str, ChurnScenario] = {
+    # flat arrival rate; ~8 concurrent services in expectation
+    "steady": ChurnScenario("steady", duration_h=24.0, base_rate=2.0,
+                            peak_rate=2.0, peak_hour=12.0,
+                            mean_lifetime_h=4.0),
+    # paper-scale diurnal day: ~4 services overnight, ~20 at the peak
+    "diurnal24": ChurnScenario("diurnal24", duration_h=24.0, base_rate=1.0,
+                               peak_rate=5.0, peak_hour=20.0,
+                               mean_lifetime_h=4.0),
+    # short sharp evening burst of small services
+    "burst": ChurnScenario("burst", duration_h=6.0, base_rate=0.5,
+                           peak_rate=12.0, peak_hour=3.0,
+                           mean_lifetime_h=1.0, vm_gflops=(1.0, 4.0)),
+}
+
+
+# ---------------------------------------------------------------------------
+# The online embedding engine
+# ---------------------------------------------------------------------------
+
+@dataclass
+class OnlineStats:
+    """Bookkeeping for one engine event (exposed to benchmarks/examples)."""
+    event: str                 # "add" | "remove" | "defrag"
+    method: str
+    objective: float
+    power_w: float
+    n_live: int
+
+
+class OnlineEmbedder:
+    """Live CFN embedding under service churn.
+
+    Keeps the current VSR set, placement, and incremental
+    ``PlacementState``; ``add`` / ``remove`` re-solve with
+    ``solvers.resolve_incremental`` (one-service warm-start re-embedding)
+    and every ``defrag_every`` events -- or on demand via ``defrag()`` --
+    runs the full portfolio to re-pack the substrate.  Service identity is
+    the caller's ``sid``; internally rows are dense [0, R).
+    """
+
+    def __init__(self, topo: CFNTopology, defrag_every: int = 16,
+                 key: Optional[jax.Array] = None, sweeps: int = 2,
+                 anneal_steps: int = 600, anneal_chains: int = 8,
+                 polish_sweeps: int = 2, method: str = "cfn-milp"):
+        self.topo = topo
+        self.defrag_every = defrag_every
+        self.method = method      # solver for full solves / defrags
+        if method not in embed_mod.METHODS:
+            raise ValueError(f"unknown method {method!r}; "
+                             f"choose from {embed_mod.METHODS}")
+        self._key = jax.random.PRNGKey(1) if key is None else key
+        self._add_kw = dict(sweeps=sweeps, anneal_steps=anneal_steps,
+                            anneal_chains=anneal_chains, anneal_t0=5.0,
+                            polish_sweeps=polish_sweeps)
+        # departures re-pack the survivors: random-restart chains over all
+        # free VMs need a hotter start to escape the vacated layout
+        self._remove_kw = dict(sweeps=0, anneal_steps=anneal_steps,
+                               anneal_chains=anneal_chains,
+                               anneal_t0=20.0, polish_sweeps=polish_sweeps)
+        self._vsrs: List[vsr.VSRBatch] = []    # one R=1 batch per service
+        self._sids: List[int] = []
+        self._next_sid = 0
+        # per-event cost hygiene: the concatenated batch is maintained
+        # incrementally (concat/delete-row, never a 20-way re-concat) and
+        # the substrate tensors are built once per topology
+        self._batch_cache: Optional[vsr.VSRBatch] = None
+        self._substrate: Optional[dict] = None
+        self._problem: Optional[power.PlacementProblem] = None
+        self._X: Optional[np.ndarray] = None
+        self._state: Optional[power.PlacementState] = None
+        self._result: Optional[solvers.SolveResult] = None
+        self._events_since_defrag = 0
+        self.stats: List[OnlineStats] = []
+
+    # -- introspection ----------------------------------------------------
+    @property
+    def n_live(self) -> int:
+        return len(self._vsrs)
+
+    @property
+    def sids(self) -> List[int]:
+        return list(self._sids)
+
+    @property
+    def problem(self) -> Optional[power.PlacementProblem]:
+        return self._problem
+
+    @property
+    def X(self) -> Optional[np.ndarray]:
+        return None if self._X is None else self._X.copy()
+
+    @property
+    def result(self) -> Optional[solvers.SolveResult]:
+        return self._result
+
+    def service_vms(self, row: int) -> int:
+        """The row's OWN VM count (columns beyond it are concat padding)."""
+        return self._vsrs[row].V
+
+    def clone(self) -> "OnlineEmbedder":
+        """A detached copy sharing the (immutable) arrays: events applied to
+        the clone leave this engine untouched.  Used by benchmarks to replay
+        one event several times for min-of-reps timing."""
+        other = OnlineEmbedder(self.topo, defrag_every=self.defrag_every,
+                               key=self._key)
+        other._add_kw = dict(self._add_kw)
+        other._remove_kw = dict(self._remove_kw)
+        other._vsrs = list(self._vsrs)
+        other._sids = list(self._sids)
+        other._next_sid = self._next_sid
+        other._batch_cache = self._batch_cache
+        other._substrate = self._substrate
+        other._problem = self._problem
+        other._X = self._X
+        other._state = self._state
+        other._result = self._result
+        other._events_since_defrag = self._events_since_defrag
+        other.stats = list(self.stats)
+        return other
+
+    def objective(self) -> float:
+        return float("nan") if self._result is None \
+            else self._result.objective
+
+    def power_w(self) -> float:
+        return 0.0 if self._result is None else self._result.power
+
+    def per_service_power_w(self) -> Dict[int, float]:
+        """Per-tenant watts (sums to the total; power.attribute_power)."""
+        if self._problem is None or not self._sids:
+            return {}
+        per = power.attribute_power(self._problem, self._X,
+                                    self._result.breakdown)
+        return {sid: float(w) for sid, w in zip(self._sids, per)}
+
+    def vsr_batch(self) -> Optional[vsr.VSRBatch]:
+        """The live service set as one concatenated VSRBatch (may carry
+        zero-demand pad columns from departed wider services)."""
+        return self._batch_cache
+
+    # -- internals --------------------------------------------------------
+    def _split_key(self) -> jax.Array:
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def _rebuild_problem(self) -> None:
+        if self._substrate is None:
+            self._substrate = power.substrate_arrays(self.topo)
+        self._problem = power.build_problem(self.topo, self._batch_cache,
+                                            substrate=self._substrate)
+
+    def _drop_row(self, row: int) -> None:
+        """Delete one service's row from the cached batch, KEEPING the VM
+        width (stable shapes keep the jit caches warm; pad VMs are free)."""
+        b = self._batch_cache
+        self._batch_cache = vsr.VSRBatch(
+            F=np.delete(b.F, row, axis=0), H=np.delete(b.H, row, axis=0),
+            src=np.delete(b.src, row), input_vm=np.delete(b.input_vm, row))
+
+    def _commit(self, res: solvers.SolveResult, event: str) -> None:
+        self._X = np.asarray(res.X)
+        self._state = power.init_state(self._problem, self._X)
+        self._result = res
+        self.stats.append(OnlineStats(
+            event=event, method=res.method, objective=res.objective,
+            power_w=res.power, n_live=self.n_live))
+
+    def _full_solve(self, event: str,
+                    incumbent: Optional[solvers.SolveResult] = None
+                    ) -> solvers.SolveResult:
+        """Portfolio re-pack; an ``incumbent`` result for the SAME problem
+        (the incremental solution, or the live placement on an explicit
+        defrag) is kept when the portfolio fails to beat it, so defrags
+        never regress."""
+        res = embed_mod.embed(self.topo, self._batch_cache, self.method,
+                              key=self._split_key(), problem=self._problem)
+        if incumbent is not None and incumbent.objective < res.objective:
+            res = solvers.SolveResult(
+                X=incumbent.X, breakdown=incumbent.breakdown,
+                method=f"defrag-kept({incumbent.method})",
+                history=incumbent.history)
+        self._events_since_defrag = 0
+        self._commit(res, event)
+        return res
+
+    def _carry_loads(self) -> Optional[tuple]:
+        if self._state is None:
+            return None
+        s = self._state
+        return (s.omega, s.tm, s.theta, s.lam)
+
+    # -- the online API ---------------------------------------------------
+    def bootstrap(self, services: Sequence[vsr.VSRBatch],
+                  sids: Optional[Sequence[int]] = None) -> solvers.SolveResult:
+        """Cold-start with a whole service set in ONE full-portfolio solve
+        (serving restart / benchmark steady state) instead of N incremental
+        admissions."""
+        if self._vsrs:
+            raise RuntimeError("bootstrap() requires an empty engine")
+        if not services:
+            raise ValueError("bootstrap() needs at least one service")
+        if sids is not None and len(sids) != len(services):
+            raise ValueError(f"{len(sids)} sids for {len(services)} services")
+        for k, s in enumerate(services):
+            if s.R != 1:
+                raise ValueError(f"service {k} must be R=1, got R={s.R}")
+        self._vsrs = list(services)
+        self._sids = (list(range(len(services))) if sids is None
+                      else list(sids))
+        self._next_sid = max(self._sids, default=-1) + 1
+        out = services[0]
+        for b in services[1:]:
+            out = out.concat(b)
+        self._batch_cache = out
+        self._rebuild_problem()
+        return self._full_solve("bootstrap")
+
+    def add(self, service: vsr.VSRBatch,
+            sid: Optional[int] = None) -> solvers.SolveResult:
+        """Admit one service (an R=1 VSRBatch): warm-start incremental
+        re-embedding; the very first service (and every
+        ``defrag_every``-th event) takes the full-portfolio path."""
+        if service.R != 1:
+            raise ValueError(f"add() takes one service, got R={service.R}")
+        if sid is None:
+            sid = self._next_sid
+        if sid in self._sids:
+            raise ValueError(f"sid {sid} is already live")
+        self._next_sid = max(self._next_sid, sid + 1)
+        prev_X, prev_loads = self._X, self._carry_loads()
+        self._vsrs.append(service)
+        self._sids.append(sid)
+        self._batch_cache = (service if self._batch_cache is None
+                             else self._batch_cache.concat(service))
+        self._rebuild_problem()
+        self._events_since_defrag += 1
+        if prev_X is None:
+            return self._full_solve("add")
+        st = power.warm_state(self._problem, prev_X, prev_loads=prev_loads)
+        res = solvers.resolve_incremental(
+            self._problem, np.asarray(st.X), key=self._split_key(),
+            changed_rows=[self.n_live - 1], state=st, **self._add_kw)
+        if self._defrag_due():
+            return self._full_solve("add", incumbent=res)
+        self._commit(res, "add")
+        return res
+
+    def remove(self, sid: int) -> Optional[solvers.SolveResult]:
+        """Retire a service: detach its loads in O(V*(N+P)), then let the
+        survivors re-settle with polish sweeps (no changed rows)."""
+        row = self._sids.index(sid)
+        detached = power.detach_vsrs(self._problem, self._state, [row])
+        prev_X = self._X
+        row_map = [i for i in range(self.n_live) if i != row]
+        del self._vsrs[row]
+        del self._sids[row]
+        if not self._vsrs:
+            self._problem = self._X = self._state = self._result = None
+            self._batch_cache = None
+            self.stats.append(OnlineStats("remove", "empty", 0.0, 0.0, 0))
+            return None
+        self._drop_row(row)
+        self._rebuild_problem()
+        self._events_since_defrag += 1
+        st = power.warm_state(
+            self._problem, prev_X,
+            prev_loads=(detached.omega, detached.tm, detached.theta,
+                        detached.lam),
+            row_map=row_map)
+        res = solvers.resolve_incremental(
+            self._problem, np.asarray(st.X), key=self._split_key(),
+            changed_rows=[], state=st, **self._remove_kw)
+        if self._defrag_due():
+            return self._full_solve("remove", incumbent=res)
+        self._commit(res, "remove")
+        return res
+
+    def defrag(self) -> Optional[solvers.SolveResult]:
+        """Force a full-portfolio re-pack of the current service set (keeps
+        the live placement when the portfolio cannot beat it)."""
+        if self._problem is None:
+            return None
+        return self._full_solve("defrag", incumbent=self._result)
+
+    def _defrag_due(self) -> bool:
+        return (self.defrag_every > 0
+                and self._events_since_defrag >= self.defrag_every)
+
+
+def replay(engine: OnlineEmbedder, events: Sequence[ServiceEvent],
+           make_vsr: Callable[[int], vsr.VSRBatch],
+           on_event: Optional[Callable] = None) -> List[OnlineStats]:
+    """Drive an engine through a timeline.  ``make_vsr(sid)`` materializes
+    the service for each arrival; departures of services neither live in
+    the engine (e.g. bootstrapped) nor admitted by this replay are skipped.
+    ``on_event(event, result)`` observes each step."""
+    live = set(engine.sids)
+    for ev in events:
+        if ev.kind == "arrive":
+            res = engine.add(make_vsr(ev.sid), sid=ev.sid)
+            live.add(ev.sid)
+        else:
+            if ev.sid not in live:
+                continue
+            res = engine.remove(ev.sid)
+            live.discard(ev.sid)
+        if on_event is not None:
+            on_event(ev, res)
+    return engine.stats

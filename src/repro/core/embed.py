@@ -15,7 +15,7 @@ from typing import Optional
 import jax
 import numpy as np
 
-from . import solvers
+from . import power, solvers
 from .power import PlacementProblem, build_problem
 from .topology import CFNTopology
 from .vsr import VSRBatch
@@ -63,28 +63,33 @@ def embed_latency_bounded(topo: CFNTopology, vsrs: VSRBatch,
     over-approximation for chain VSRs whose traffic originates at the
     input VM; exact pairwise hop constraints would enter the objective as
     penalties the same way capacity violations do).
+
+    The repair runs on the delta engine: one ``delta_sweep`` scores every
+    destination of an offending VM at once (the eligibility mask knocks
+    out far nodes), and ``apply_move`` keeps the live state consistent so
+    later repairs see earlier ones -- same results as brute-force
+    re-evaluation, O(R*V) sweeps instead of O(R*V*P) full objectives.
     """
     import numpy as np
     problem = build_problem(topo, vsrs)
     res = embed(topo, vsrs, method, key=key, problem=problem)
     hops = topo.path_hops
     X = res.X.copy()
+    fixed = np.asarray(problem.fixed_mask)
+    eligible = hops[np.asarray(vsrs.src)] <= max_hops          # [R, P]
+    aux = power.build_aux(problem)
+    state = power.init_state(problem, jax.numpy.asarray(X))
     for r in range(X.shape[0]):
         src = int(vsrs.src[r])
+        mask_r = jax.numpy.asarray(eligible[r])
         for v in range(X.shape[1]):
-            if hops[src, X[r, v]] > max_hops:
-                # pull the VM to the nearest eligible node by power cost
-                eligible = [p for p in range(topo.P)
-                            if hops[src, p] <= max_hops]
-                best, best_obj = X[r, v], float("inf")
-                for p in eligible:
-                    X2 = X.copy()
-                    X2[r, v] = p
-                    o = float(solvers.objective(problem,
-                                                jax.numpy.asarray(X2)))
-                    if o < best_obj:
-                        best, best_obj = p, o
-                X[r, v] = best
+            if fixed[r, v] or hops[src, X[r, v]] <= max_hops:
+                continue
+            obj_all = power.delta_sweep(problem, aux, state, r, v)
+            best = int(jax.numpy.argmin(
+                jax.numpy.where(mask_r, obj_all, jax.numpy.inf)))
+            state = power.apply_move(problem, aux, state, r, v, best)
+            X[r, v] = best
     return solvers._result(problem, X, f"latency<={max_hops}({res.method})")
 
 

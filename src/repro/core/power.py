@@ -40,7 +40,7 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import Dict, NamedTuple
+from typing import Dict, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -137,9 +137,22 @@ jax.tree_util.register_pytree_node(
     PlacementProblem.tree_unflatten)
 
 
-def build_problem(topo: CFNTopology, vsrs: VSRBatch) -> PlacementProblem:
+def substrate_arrays(topo: CFNTopology) -> Dict[str, jnp.ndarray]:
+    """Workload-independent problem tensors (device-resident).  Cache and
+    pass to ``build_problem`` when building many problems on one topology
+    (the online engine builds one per churn event)."""
     pp = topo.proc_param_arrays()
     nn = topo.net_param_arrays()
+    out = {k: jnp.asarray(v) for k, v in {**pp, **nn}.items()}
+    out["path_nodes"] = jnp.asarray(topo.path_nodes)
+    return out
+
+
+def build_problem(topo: CFNTopology, vsrs: VSRBatch,
+                  substrate: Optional[Dict[str, jnp.ndarray]] = None
+                  ) -> PlacementProblem:
+    if substrate is None:
+        substrate = substrate_arrays(topo)
     link_src, link_dst, link_h = vsrs.links()
     R, V = vsrs.R, vsrs.V
     fixed_mask = np.zeros((R, V), dtype=bool)
@@ -148,9 +161,7 @@ def build_problem(topo: CFNTopology, vsrs: VSRBatch) -> PlacementProblem:
     fixed_node[np.arange(R), vsrs.input_vm] = vsrs.src
     as_j = lambda x: jnp.asarray(x)
     return PlacementProblem(
-        path_nodes=as_j(topo.path_nodes),
-        **{k: as_j(v) for k, v in pp.items()},
-        **{k: as_j(v) for k, v in nn.items()},
+        **substrate,
         F=as_j(vsrs.F),
         link_src=as_j(link_src), link_dst=as_j(link_dst), link_h=as_j(link_h),
         fixed_mask=as_j(fixed_mask), fixed_node=as_j(fixed_node),
@@ -324,14 +335,23 @@ def _objective_from_loads(problem, omega, lam, theta) -> jnp.ndarray:
     return per_net.sum(-1) + per_proc.sum(-1) + PENALTY * viol
 
 
-def init_state(problem: PlacementProblem, X: jnp.ndarray) -> PlacementState:
-    """Full from-scratch state build (also the drift-killing `refresh`)."""
-    X = apply_pins(problem, jnp.asarray(X, jnp.int32))
+@jax.jit
+def _init_state_jit(problem: PlacementProblem,
+                    X: jnp.ndarray) -> PlacementState:
+    X = apply_pins(problem, X)
     onehot = jax.nn.one_hot(X, problem.P, dtype=jnp.float32)
     omega, tm, lam, theta = _loads(problem, onehot)
     obj = _objective_from_loads(problem, omega, lam, theta)
     return PlacementState(X=X, omega=omega, tm=tm, theta=theta, lam=lam,
                           obj=obj)
+
+
+def init_state(problem: PlacementProblem, X: jnp.ndarray) -> PlacementState:
+    """Full from-scratch state build (also the drift-killing `refresh`).
+
+    Jitted at module level: the online engine refreshes state once per
+    churn event, so re-tracing here would dominate the warm event cost."""
+    return _init_state_jit(problem, jnp.asarray(X, jnp.int32))
 
 
 def _move_core(problem: PlacementProblem, aux: PlacementAux, X_flat,
@@ -511,6 +531,197 @@ def delta_sweep(problem: PlacementProblem, aux: PlacementAux,
     theta_c = _snap(theta_c, SNAP_MBPS)
     lam_c = _snap(lam_c, SNAP_MBPS)
     return _objective_from_loads(p, omega_c, lam_c, theta_c)
+
+
+# ---------------------------------------------------------------------------
+# Online state operations: service-granular attach / detach / warm start
+# ---------------------------------------------------------------------------
+#
+# The delta engine above mutates one VM at a time (solver proposals).  The
+# *online* regime mutates one SERVICE at a time: a VSR arrives or departs and
+# the live placement must absorb the change without a from-scratch rebuild.
+# Because every virtual link is intra-service (vsr.VSRBatch.links flattens
+# r*V+v), one service's load contribution is separable: O(V*(N+P)) host-side
+# work per event instead of the O(R*V*P + L*P^2) full `_loads` contraction.
+
+
+def service_loads(problem: PlacementProblem, X,
+                  rows) -> tuple[np.ndarray, np.ndarray, np.ndarray,
+                                 np.ndarray]:
+    """Load contribution (omega[P], tm[P, P], theta[P], lam[N]) of the
+    services in ``rows`` under placement ``X`` -- exactly the slice of
+    ``_loads`` supported on those services' VMs and virtual links.
+    """
+    p = problem
+    X = np.asarray(X)
+    Xf = X.reshape(-1)
+    P, N, V = p.P, p.N, p.V
+    rows = np.atleast_1d(np.asarray(rows, np.int64))
+    omega = np.zeros(P, np.float64)
+    tm = np.zeros((P, P), np.float64)
+    theta = np.zeros(P, np.float64)
+    lam = np.zeros(N, np.float64)
+    F = np.asarray(p.F, np.float64)
+    np.add.at(omega, X[rows].reshape(-1), F[rows].reshape(-1))
+    ls = np.asarray(p.link_src)
+    ld = np.asarray(p.link_dst)
+    lh = np.asarray(p.link_h, np.float64)
+    sel = np.isin(ls // V, rows)
+    pn = np.asarray(p.path_nodes, np.float64)
+    for s, d, h in zip(ls[sel], ld[sel], lh[sel]):
+        b, e = int(Xf[s]), int(Xf[d])
+        tm[b, e] += h
+        theta[b] += h
+        if e != b:
+            theta[e] += h
+            lam += h * pn[b, e]
+    f32 = lambda a: a.astype(np.float32)
+    return f32(omega), f32(tm), f32(theta), f32(lam)
+
+
+@jax.jit
+def _assemble_state_jit(problem: PlacementProblem, X, omega, tm, theta,
+                        lam) -> PlacementState:
+    omega = _snap(omega, SNAP_GFLOPS)
+    tm = _snap(tm, SNAP_MBPS)
+    theta = _snap(theta, SNAP_MBPS)
+    lam = _snap(lam, SNAP_MBPS)
+    obj = _objective_from_loads(problem, omega, lam, theta)
+    return PlacementState(X=X, omega=omega, tm=tm, theta=theta, lam=lam,
+                          obj=obj)
+
+
+def _state_from_loads(problem: PlacementProblem, X, omega, tm, theta,
+                      lam) -> PlacementState:
+    return _assemble_state_jit(problem, jnp.asarray(X, jnp.int32),
+                               jnp.asarray(omega, jnp.float32),
+                               jnp.asarray(tm, jnp.float32),
+                               jnp.asarray(theta, jnp.float32),
+                               jnp.asarray(lam, jnp.float32))
+
+
+def attach_vsrs(problem: PlacementProblem, state: PlacementState,
+                rows, X_rows=None) -> PlacementState:
+    """Add the load contribution of services ``rows`` to a live state.
+
+    ``state`` must NOT already carry those services' loads (it came from
+    ``detach_vsrs`` or from ``warm_state`` over a problem that grew).  If
+    ``X_rows`` [len(rows), V] is given, it is written into ``state.X`` first
+    (pins applied); otherwise the placements already in ``state.X`` are
+    attached.  O(len(rows) * V * (N + P)); the objective cache is rebuilt
+    from the updated loads in O(P + N).
+    """
+    X = np.asarray(state.X).copy()
+    if X_rows is not None:
+        X[np.atleast_1d(np.asarray(rows, np.int64))] = np.asarray(X_rows)
+        X = np.asarray(apply_pins(problem, jnp.asarray(X, jnp.int32)))
+    d_om, d_tm, d_th, d_lam = service_loads(problem, X, rows)
+    return _state_from_loads(problem, X,
+                             state.omega + d_om, state.tm + d_tm,
+                             state.theta + d_th, state.lam + d_lam)
+
+
+def detach_vsrs(problem: PlacementProblem, state: PlacementState,
+                rows) -> PlacementState:
+    """Remove the load contribution of services ``rows`` from a live state.
+
+    The inverse of ``attach_vsrs``: the returned state's loads and objective
+    describe the substrate as if those services were not embedded (their
+    ``state.X`` rows become dead entries the caller drops via
+    ``warm_state``'s row map).
+    """
+    d_om, d_tm, d_th, d_lam = service_loads(problem, state.X, rows)
+    return _state_from_loads(problem, state.X,
+                             state.omega - d_om, state.tm - d_tm,
+                             state.theta - d_th, state.lam - d_lam)
+
+
+def warm_state(problem_new: PlacementProblem, prev_X,
+               prev_loads: Optional[tuple] = None,
+               row_map: Optional[Sequence[int]] = None,
+               init_node: Optional[int] = None) -> PlacementState:
+    """Carry a previous placement into a grown / shrunk problem.
+
+    ``prev_X`` [R_old, V_old] is the placement being carried;
+    ``row_map[i] = j`` maps new row i to previous row j (``-1`` marks a
+    fresh service).  Defaults to identity on the first min(R_old, R_new)
+    rows with fresh rows appended -- the scheduler's arrival case.  Column
+    growth (a wider VM padding) fills new columns with the row's pinned
+    source (zero-demand pad VMs never affect the objective); column
+    shrinkage drops pad columns.  Fresh rows start pinned-input +
+    ``init_node`` (default: the row's source node).
+
+    With ``prev_loads`` (omega, tm, theta, lam) carried from a previous
+    state whose services match the SURVIVING rows (the caller detached
+    departures first), the state is assembled in O(fresh * V * (N + P))
+    instead of a full rebuild; otherwise falls back to ``init_state``.
+    """
+    p = problem_new
+    prev_X = np.asarray(prev_X)
+    R_old = prev_X.shape[0]
+    V_old = prev_X.shape[1] if prev_X.ndim == 2 else 0
+    R, V = p.R, p.V
+    if row_map is None:
+        row_map = list(range(min(R_old, R))) + [-1] * (R - min(R_old, R))
+    row_map = list(row_map)
+    if len(row_map) != R:
+        raise ValueError(f"row_map has {len(row_map)} entries for R={R}")
+    fixed_node = np.asarray(p.fixed_node)
+    src_of = fixed_node[np.arange(R), np.argmax(np.asarray(p.fixed_mask), 1)]
+    X = np.empty((R, V), dtype=np.int32)
+    fresh: list = []
+    for i, j in enumerate(row_map):
+        fill = int(src_of[i]) if init_node is None else int(init_node)
+        if j < 0:
+            fresh.append(i)
+            X[i] = fill
+        else:
+            k = min(V, V_old)
+            X[i, :k] = prev_X[j, :k]
+            X[i, k:] = fill
+    X = np.asarray(apply_pins(p, jnp.asarray(X)))
+    if prev_loads is None:
+        return init_state(p, jnp.asarray(X))
+    state = _state_from_loads(p, X, *prev_loads)
+    if fresh:
+        state = attach_vsrs(p, state, fresh)
+    return state
+
+
+def attribute_power(problem: PlacementProblem, X,
+                    breakdown: Optional[PowerBreakdown] = None) -> np.ndarray:
+    """Split ``breakdown.total`` across services: returns per-service watts
+    [R] that sum to the total exactly (float64).
+
+    Each node's Eq.(2) power (proportional + idle servers + LAN) is shared
+    among the services loading it, proportionally to their marginal energy
+    there (E*omega_r + EL*theta_r); each network node's Eq.(1) power by the
+    services' traffic shares lam_r.  Idle/activation terms thus follow the
+    marginal load -- the per-tenant accounting the online engine reports.
+    """
+    p = problem
+    X = np.asarray(apply_pins(p, jnp.asarray(X, jnp.int32)))
+    bd = evaluate(p, jnp.asarray(X)) if breakdown is None else breakdown
+    R = p.R
+    per_proc = np.asarray(bd.per_proc, np.float64)
+    per_net = np.asarray(bd.per_net, np.float64)
+    E = np.asarray(p.E, np.float64)
+    EL = np.asarray(p.EL, np.float64)
+    w_proc = np.zeros((R, p.P))
+    w_net = np.zeros((R, p.N))
+    for r in range(R):
+        om, _, th, lm = service_loads(p, X, [r])
+        present = (om > 0) | (th > 0)
+        w_proc[r] = E * om + EL * th / 1e3 + 1e-12 * present
+        w_net[r] = lm
+    out = np.zeros(R)
+    for W, per in ((w_proc, per_proc), (w_net, per_net)):
+        tot = W.sum(axis=0)
+        used = tot > 0
+        share = np.where(used, W / np.where(used, tot, 1.0), 0.0)
+        out += share @ per
+        out += per[~used].sum() / max(R, 1)  # unattributable residue
+    return out
 
 
 def summarize(problem: PlacementProblem, topo: CFNTopology,

@@ -25,7 +25,7 @@ Solvers:
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -59,10 +59,13 @@ class SolveResult:
         return float(self.breakdown.violation) <= 1e-6
 
 
+_evaluate_jit = jax.jit(evaluate)  # shared wrapper: one trace per shape
+
+
 def _result(problem: PlacementProblem, X, method: str,
             history: Optional[List[float]] = None) -> SolveResult:
     X = np.asarray(apply_pins(problem, jnp.asarray(X, jnp.int32)))
-    bd = jax.jit(evaluate)(problem, jnp.asarray(X))
+    bd = _evaluate_jit(problem, jnp.asarray(X))
     return SolveResult(X=X, breakdown=jax.device_get(bd), method=method,
                        history=history or [])
 
@@ -442,6 +445,100 @@ def relax(problem: PlacementProblem, key: jax.Array,
 
 
 PENALTY_W = 100.0  # relative weight of violation in the relaxed loss
+
+
+# ---------------------------------------------------------------------------
+# Online incremental re-embedding (service churn)
+# ---------------------------------------------------------------------------
+
+def resolve_incremental(problem: PlacementProblem, prev_X: np.ndarray,
+                        key: Optional[jax.Array] = None,
+                        changed_rows: Optional[Sequence[int]] = None,
+                        state: Optional[PlacementState] = None,
+                        sweeps: int = 2, anneal_steps: int = 600,
+                        anneal_chains: int = 8, anneal_t0: float = 5.0,
+                        anneal_t1: float = 0.05,
+                        polish_sweeps: int = 2) -> SolveResult:
+    """Warm-start re-solve after service churn: surviving services stay at
+    their previous nodes, only the VMs of ``changed_rows`` (new arrivals /
+    rows the caller distrusts) are actively re-placed.
+
+    Three phases, all on the delta engine:
+      1. targeted coordinate sweeps over the changed rows' free VMs
+         (survivors act as implicit pins -- their positions are never swept);
+      2. a short Metropolis refinement: with changed rows, proposals touch
+         ONLY those VMs (chains randomized there escape the greedy local
+         minimum); without them (a departure), proposals range over ALL
+         free VMs with random-restart chains, re-packing survivors;
+      3. ``polish_sweeps`` full sweeps over ALL free VMs (monotone).
+
+    This is LOCAL re-optimization -- a periodic full-portfolio defrag
+    (`solve_cfn`) bounds its drift; see core.dynamic.OnlineEmbedder.
+    """
+    key = jax.random.PRNGKey(0) if key is None else key
+    aux = build_aux(problem)
+    if state is None:
+        state = init_state(problem, jnp.asarray(prev_X, jnp.int32))
+    # else: the caller-carried state (power.warm_state) is trusted as-is --
+    # that's the O(V*(N+P)) event path; candidates are re-scored exactly
+    # below, so carried float32 load drift cannot corrupt the result
+    changed_rows = [] if changed_rows is None else list(changed_rows)
+    free = np.asarray(aux.free_pos)
+    if free.shape[0] == 0:  # everything pinned: nothing to re-place
+        return _result(problem, state.X, "incremental")
+    cands = [state.X]
+    pos_changed = free[np.isin(free[:, 0], changed_rows)]
+
+    # phase 1: greedy placement of the changed VMs
+    if pos_changed.shape[0]:
+        pc = jnp.asarray(pos_changed)
+        for _ in range(max(1, sweeps)):
+            state, _ = _sweep(problem, aux, state, pc)
+        cands.append(state.X)
+
+    # phase 2: short Metropolis refinement
+    if anneal_steps > 0 and anneal_chains > 0:
+        P, V = problem.P, problem.V
+        target = pos_changed if pos_changed.shape[0] else free
+        flat = jnp.asarray((target[:, 0] * V + target[:, 1])
+                           .astype(np.int32))
+        kf, kp, ka, kx = jax.random.split(key, 4)
+        fi = jax.random.randint(kf, (anneal_steps, anneal_chains), 0,
+                                flat.shape[0])
+        j_prop = flat[fi]
+        p_prop = jax.random.randint(kp, (anneal_steps, anneal_chains),
+                                    0, P, jnp.int32)
+        u_prop = jax.random.uniform(ka, (anneal_steps, anneal_chains))
+        temps = anneal_t0 * (anneal_t1 / anneal_t0) ** (
+            jnp.arange(anneal_steps) / max(1, anneal_steps - 1))
+        Xc = jnp.broadcast_to(state.X, (anneal_chains,) + state.X.shape)
+        rand = jax.random.randint(kx, Xc.shape, 0, P, jnp.int32)
+        # chain 0 stays warm; the rest restart at the target positions only
+        tgt_mask = np.zeros((problem.R, V), dtype=bool)
+        tgt_mask[target[:, 0], target[:, 1]] = True
+        keep = ((jnp.arange(anneal_chains) == 0)[:, None, None]
+                | ~jnp.asarray(tgt_mask)[None])
+        Xc = jnp.where(keep, Xc, rand)
+        bX, _, _ = _anneal_scan_delta(problem, aux, Xc, j_prop, p_prop,
+                                      u_prop, temps)
+        cands.append(bX)
+
+    # pick the exact-objective best (one batched call), then polish
+    objs = [float(o) for o in
+            objective_batch(problem, jnp.stack(cands))]
+    k = int(np.argmin(objs))
+    best_obj, best_X = objs[k], cands[k]
+    history: List[float] = objs + [best_obj]
+    if polish_sweeps > 0:
+        state = init_state(problem, best_X)
+        pa = jnp.asarray(free)
+        for _ in range(polish_sweeps):
+            state, _ = _sweep(problem, aux, state, pa)
+        obj = float(objective(problem, state.X))
+        if obj < best_obj:
+            best_obj, best_X = obj, state.X
+        history.append(best_obj)
+    return _result(problem, best_X, "incremental", history)
 
 
 # ---------------------------------------------------------------------------

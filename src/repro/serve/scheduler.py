@@ -1,19 +1,26 @@
 """Placement-aware serving scheduler: the paper's technique in the serving
-path.
+path, now *online*.
 
 Each inference service (an architecture + token rate) becomes a VSR; the
-scheduler embeds all active services into the CFN substrate with the MILP
-stand-in and accounts energy per request with the same Eq.(1)/(2) power
-model.  ``route()`` then tells the serving tier (edge | fog | cloud) where
-each service's stages live.
+scheduler embeds the active fleet into the CFN substrate and accounts
+energy per tenant with the same Eq.(1)/(2) power model.  ``add_service`` /
+``remove_service`` are churn events handled by the core online engine
+(core.dynamic.OnlineEmbedder): the previous embedding is carried through
+``power.warm_state`` and only the churned service's VMs are re-placed by
+``solvers.resolve_incremental`` -- a periodic full-portfolio defrag bounds
+the drift of local re-optimization.  Per-service ``Placement.power_w`` is
+attributed from the per-node breakdown via each service's placed nodes and
+traversed routes (``power.attribute_power``), so tenant numbers sum to the
+fleet total.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 import numpy as np
 
+from ..core import dynamic as cfn_dynamic
 from ..core import embed as cfn_embed
 from ..core import power as cfn_power
 from ..core import vsr as cfn_vsr
@@ -39,15 +46,75 @@ class Placement:
 
 
 class EnergyAwareScheduler:
-    def __init__(self, topo: CFNTopology, method: str = "cfn-milp"):
+    def __init__(self, topo: CFNTopology, method: str = "cfn-milp",
+                 defrag_every: int = 16):
         self.topo = topo
         self.method = method
         self.services: List[Service] = []
-        self._result = None
+        self._engine = cfn_dynamic.OnlineEmbedder(
+            topo, defrag_every=defrag_every, method=method)
+        self._by_sid: Dict[int, Service] = {}
 
-    def add_service(self, svc: Service) -> None:
+    # -- churn events ------------------------------------------------------
+    def add_service(self, svc: Service) -> List[Placement]:
+        """Admit a service: one incremental re-embedding event.  Names key
+        the removal API, so they must be unique among live services."""
+        if any(s.name == svc.name for s in self.services):
+            raise ValueError(f"service named {svc.name!r} is already live")
+        vs = cfn_vsr.from_architecture(
+            svc.arch, tokens_per_s=svc.tokens_per_s, n_stages=svc.n_stages,
+            source_node=svc.source_node)
         self.services.append(svc)
-        self._result = None
+        self._engine.add(vs)
+        self._by_sid[self._engine.sids[-1]] = svc
+        return self.placements()
+
+    def remove_service(self, name: str) -> List[Placement]:
+        """Retire a service by name: detach + survivor re-pack."""
+        sid = next((s for s, svc in self._by_sid.items()
+                    if svc.name == name), None)
+        if sid is None:
+            raise KeyError(f"no service named {name!r}")
+        self._engine.remove(sid)
+        svc = self._by_sid.pop(sid)
+        self.services.remove(svc)    # by identity: exactly this admission
+        return self.placements()
+
+    def defrag(self) -> List[Placement]:
+        """Force a full-portfolio re-pack of the current fleet."""
+        self._engine.defrag()
+        return self.placements()
+
+    # -- reporting ---------------------------------------------------------
+    def placements(self) -> List[Placement]:
+        res = self._engine.result
+        if res is None:
+            return []
+        per_w = self._engine.per_service_power_w()
+        placements = []
+        for row, sid in enumerate(self._engine.sids):
+            svc = self._by_sid[sid]
+            V = self._engine.service_vms(row)   # rest is concat padding
+            nodes = [self.topo.proc_names[p] for p in res.X[row][:V]]
+            layers = [self.topo.proc_layer[p] for p in res.X[row][:V]]
+            placements.append(Placement(
+                service=svc.name, stage_nodes=nodes, layers=layers,
+                power_w=per_w[sid]))
+        return placements
+
+    def solve(self) -> List[Placement]:
+        """Kept for the one-shot API: returns the current placements (the
+        engine re-solves eagerly on every churn event)."""
+        return self.placements()
+
+    def total_power_w(self) -> float:
+        return self._engine.power_w()
+
+    def savings_vs_cloud(self) -> Dict[str, float]:
+        vsrs = self._vsrs()
+        return {k: v for k, v in cfn_embed.savings_vs_baseline(
+            self.topo, vsrs, baseline="cdc", method=self.method).items()
+            if isinstance(v, float)}
 
     def _vsrs(self) -> cfn_vsr.VSRBatch:
         batches = [cfn_vsr.from_architecture(
@@ -57,28 +124,3 @@ class EnergyAwareScheduler:
         for b in batches[1:]:
             out = out.concat(b)
         return out
-
-    def solve(self) -> List[Placement]:
-        vsrs = self._vsrs()
-        res = cfn_embed.embed(self.topo, vsrs, method=self.method)
-        problem = cfn_power.build_problem(self.topo, vsrs)
-        placements = []
-        for r, svc in enumerate(self.services):
-            nodes = [self.topo.proc_names[p] for p in res.X[r]]
-            layers = [self.topo.proc_layer[p] for p in res.X[r]]
-            placements.append(Placement(
-                service=svc.name, stage_nodes=nodes, layers=layers,
-                power_w=float(res.breakdown.total) / len(self.services)))
-        self._result = res
-        return placements
-
-    def total_power_w(self) -> float:
-        if self._result is None:
-            self.solve()
-        return float(self._result.breakdown.total)
-
-    def savings_vs_cloud(self) -> Dict[str, float]:
-        vsrs = self._vsrs()
-        return {k: v for k, v in cfn_embed.savings_vs_baseline(
-            self.topo, vsrs, baseline="cdc", method=self.method).items()
-            if isinstance(v, float)}

@@ -11,7 +11,7 @@ import numpy as np
 import pytest
 from _hyp import given, settings, st
 
-from repro.core import embed, power, solvers, topology, vsr
+from repro.core import embed, power, solvers, topology, vsr  # noqa: F401
 
 SETTINGS = dict(deadline=None, max_examples=15)
 
@@ -219,6 +219,7 @@ def test_nsfnet_flow_conservation():
     np.testing.assert_array_equal(pn.sum(-1), hops)
 
 
+@pytest.mark.slow
 def test_nsfnet_savings_band():
     t = topology.nsfnet_topology()
     vs = vsr.random_vsrs(6, rng=0, source_nodes=[0])
@@ -227,6 +228,7 @@ def test_nsfnet_savings_band():
     assert out["saving_frac"] > 0.3
 
 
+@pytest.mark.slow
 def test_latency_bounded_embedding(topo):
     vs = vsr.random_vsrs(5, rng=1, source_nodes=[0])
     res = embed.embed_latency_bounded(topo, vs, max_hops=2)
@@ -238,3 +240,88 @@ def test_latency_bounded_embedding(topo):
     # with a 2-hop budget the CDC (5+ hops away) is unreachable
     cdc = topo.proc_index("cdc0")
     assert cdc not in set(res.X.reshape(-1))
+
+
+def test_latency_repair_matches_bruteforce(topo):
+    """The delta-sweep repair returns the same placement as the original
+    brute-force repair (full objective re-evaluation per candidate) on a
+    small instance."""
+    vs = vsr.random_vsrs(3, rng=5, source_nodes=[0])
+    max_hops = 2
+    res = embed.embed_latency_bounded(topo, vs, max_hops=max_hops)
+
+    # brute force, replicating the pre-rewrite semantics
+    problem = power.build_problem(topo, vs)
+    base = embed.embed(topo, vs, "cfn-milp", problem=problem)
+    hops = topo.path_hops
+    X = base.X.copy()
+    for r in range(X.shape[0]):
+        src = int(vs.src[r])
+        for v in range(X.shape[1]):
+            if hops[src, X[r, v]] > max_hops:
+                eligible = [p for p in range(topo.P)
+                            if hops[src, p] <= max_hops]
+                best, best_obj = X[r, v], float("inf")
+                for p in eligible:
+                    X2 = X.copy()
+                    X2[r, v] = p
+                    o = float(solvers.objective(problem, jnp.asarray(X2)))
+                    if o < best_obj:
+                        best, best_obj = p, o
+                X[r, v] = best
+    np.testing.assert_array_equal(res.X, X)
+
+
+# ---------------------------------------------------------------------------
+# VSR construction from per-layer costs (regression: boundary bytes)
+# ---------------------------------------------------------------------------
+
+def test_from_layer_costs_boundary_bytes():
+    """Hand-computed stage boundaries: the stage s-1 -> s link carries the
+    OUTPUT of the last layer of stage s-1, and the input-VM link carries
+    the embedding output (input_act_bytes), not the first layer's output."""
+    gfl = [1.0, 2.0, 3.0, 4.0]
+    act = [10.0, 20.0, 30.0, 40.0]        # heterogeneous, catches indexing
+    tps = 100.0
+    v = vsr.from_layer_costs(gfl, act, tps, n_stages=2,
+                             input_gflop_per_token=0.5,
+                             input_act_bytes=7.0)
+    # stages: layers [0,2) and [2,4)
+    np.testing.assert_allclose(
+        v.F[0], [0.5 * tps, (1 + 2) * tps, (3 + 4) * tps])
+    mbps = lambda b: b * tps * 8.0 / 1e6
+    assert abs(v.H[0, 0, 1] - mbps(7.0)) < 1e-9      # embedding output
+    assert abs(v.H[0, 1, 2] - mbps(20.0)) < 1e-9     # layer 1's output
+    assert np.count_nonzero(v.H) == 2
+
+    # default input_act_bytes falls back to layer 0's size
+    v2 = vsr.from_layer_costs(gfl, act, tps, n_stages=2)
+    assert abs(v2.H[0, 0, 1] - mbps(10.0)) < 1e-9
+
+
+def test_from_layer_costs_degenerate_stages():
+    """n_stages > L clamps to one layer per stage (no zero-demand stages);
+    n_stages < 1 and mismatched inputs raise."""
+    gfl, act = [1.0, 2.0], [10.0, 20.0]
+    v = vsr.from_layer_costs(gfl, act, 10.0, n_stages=5)
+    assert v.V == 3                       # clamped to L=2 stages + input VM
+    assert np.all(v.F[0, 1:] > 0)         # every stage owns >= 1 layer
+    with pytest.raises(ValueError):
+        vsr.from_layer_costs(gfl, act, 10.0, n_stages=0)
+    with pytest.raises(ValueError):
+        vsr.from_layer_costs([], [], 10.0, n_stages=1)
+    with pytest.raises(ValueError):
+        vsr.from_layer_costs(gfl, [1.0], 10.0, n_stages=1)
+
+
+def test_from_layer_costs_no_zero_demand_stages():
+    """Rounded bounds stay strictly increasing for any n_stages <= L."""
+    gfl = list(np.linspace(0.5, 2.0, 7))
+    act = [100.0] * 7
+    for n in range(1, 12):
+        v = vsr.from_layer_costs(gfl, act, 10.0, n_stages=n)
+        assert np.all(v.F[0, 1:] > 0), n
+        # chain links present between consecutive stage VMs
+        n_eff = v.V - 1
+        for s in range(n_eff):
+            assert v.H[0, s, s + 1] > 0

@@ -52,6 +52,7 @@ def test_flash_attention_fully_masked_rows_are_zero():
 @settings(deadline=None, max_examples=10)
 @given(seed=st.integers(0, 10_000), n_vsrs=st.integers(1, 6),
        n_vms=st.integers(2, 4))
+@pytest.mark.slow
 def test_placement_kernel_vs_oracle(seed, n_vsrs, n_vms):
     topo = topology.paper_topology()
     vs = vsr.random_vsrs(n_vsrs, rng=seed, n_vms=n_vms, source_nodes=[0])

@@ -16,6 +16,9 @@ from repro.serve import cache as C
 from repro.serve import engine
 from repro.train.step import init_state, make_train_step
 
+# full-architecture smoke/train/decode sweeps dominate tier-1 wall time
+pytestmark = pytest.mark.slow
+
 
 def _batch(cfg, B=2, S=32, seed=7):
     rng = np.random.default_rng(seed)

@@ -82,6 +82,7 @@ def _tiny_setup(tmp_path, arch="qwen3-4b"):
     return cfg, dcfg, step, init_fn
 
 
+@pytest.mark.slow
 def test_restart_replays_identically(tmp_path):
     """Loss trajectory after a mid-run failure+restore equals the unfailed
     run (deterministic data + checkpointed state)."""

@@ -17,6 +17,7 @@ from repro.serve import engine
 from repro.serve.scheduler import EnergyAwareScheduler, Service
 
 
+@pytest.mark.slow
 def test_train_cli_improves_loss(capsys):
     rc = train_cli.main(["--arch", "qwen3-4b", "--steps", "12",
                          "--batch", "4", "--seq", "32", "--lr", "5e-3"])
@@ -38,6 +39,7 @@ def test_generate_roundtrip():
     assert bool((seq >= 0).all()) and bool((seq < cfg.vocab).all())
 
 
+@pytest.mark.slow
 def test_scheduler_places_and_saves_energy():
     topo = topology.datacenter_topology()
     sched = EnergyAwareScheduler(topo)
@@ -47,8 +49,38 @@ def test_scheduler_places_and_saves_energy():
     assert len(placements) == 2
     for p in placements:
         assert len(p.stage_nodes) == 5     # input VM + 4 stages
+    # per-service attribution sums to the fleet total (not total / R)
+    total = sched.total_power_w()
+    assert abs(sum(p.power_w for p in placements) - total) <= \
+        1e-5 * max(total, 1.0) + 1e-3
     s = sched.savings_vs_cloud()
     assert s["saving_frac"] > 0.0
+
+
+@pytest.mark.slow
+def test_scheduler_online_churn():
+    """remove_service is a first-class churn event: placements shrink,
+    attribution re-sums, and re-adding keeps the engine consistent."""
+    topo = topology.datacenter_topology()
+    sched = EnergyAwareScheduler(topo, defrag_every=0)
+    sched.add_service(Service("qwen", configs.get("qwen3-4b"), 500.0))
+    sched.add_service(Service("olmoe", configs.get("olmoe-1b-7b"), 500.0))
+    p_two = sched.total_power_w()
+    placements = sched.remove_service("qwen")
+    assert [p.service for p in placements] == ["olmoe"]
+    assert sched.total_power_w() < p_two
+    with pytest.raises(ValueError):      # names key the removal API
+        sched.add_service(Service("olmoe", configs.get("olmoe-1b-7b"), 1.0))
+    with pytest.raises(KeyError):
+        sched.remove_service("nonexistent")
+    placements = sched.add_service(
+        Service("hymba", configs.get("hymba-1.5b"), 250.0, n_stages=3))
+    assert {p.service for p in placements} == {"olmoe", "hymba"}
+    by_name = {p.service: p for p in placements}
+    assert len(by_name["hymba"].stage_nodes) == 4   # input VM + 3 stages
+    total = sched.total_power_w()
+    assert abs(sum(p.power_w for p in placements) - total) <= \
+        1e-5 * max(total, 1.0) + 1e-3
 
 
 def test_vsr_bridge_matches_cost_model():
@@ -62,6 +94,7 @@ def test_vsr_bridge_matches_cost_model():
     assert vs.input_vm[0] == 0 and vs.src[0] == 0
 
 
+@pytest.mark.slow
 def test_paper_band_savings_sweep():
     """Savings across small VSR sweeps stay inside the paper's band
     (avg 68%, min 19%, max 91% -- we assert a tolerant envelope; the full
