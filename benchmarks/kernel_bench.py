@@ -32,6 +32,7 @@ OUT = Path("experiments/benchmarks")
 # location trackers read); CSVs land under experiments/benchmarks/.
 BENCH_SOLVER_JSON = Path("BENCH_solver.json")
 BENCH_ONLINE_JSON = Path("BENCH_online.json")
+BENCH_SPARSE_JSON = Path("BENCH_sparse.json")
 
 
 def _write(name: str, rows: List[Dict]) -> None:
@@ -78,9 +79,12 @@ def placement_throughput() -> List[Dict]:
     return rows
 
 
-def _best_time(fn, reps: int = 5) -> float:
-    """Min-of-reps wall time (compile excluded); robust to a noisy box."""
-    jax.block_until_ready(fn())
+def _best_time(fn, reps: int = 5, warmed: bool = False) -> float:
+    """Min-of-reps wall time (compile excluded); robust to a noisy box.
+    ``warmed=True`` skips the initial compile call (the caller already ran
+    fn once, e.g. to capture its result)."""
+    if not warmed:
+        jax.block_until_ready(fn())
     best = float("inf")
     for _ in range(reps):
         t0 = time.time()
@@ -186,6 +190,160 @@ def solver_moves(n_vsrs: int = 10, n_steps: int = 300,
         out["anneal"]["speedup_delta_vs_full"],
         out["coordinate_sweep"]["speedup_delta_vs_full"])
     BENCH_SOLVER_JSON.write_text(json.dumps(out, indent=2) + "\n")
+    return out
+
+
+def _delta_sweep_dense(problem, aux, state, r, v, path_flat):
+    """The PRE-CSR delta_sweep, verbatim: candidate route loads gathered as
+    [P, D, N] rows of the dense [P*P, N] incidence table.  Kept here as the
+    benchmark baseline the sparse production path is raced against."""
+    p = problem
+    P, N = p.P, p.N
+    j = r * p.V + v
+    X_flat = state.X.reshape(-1)
+    p_old = X_flat[j]
+    F_j = p.F.reshape(-1)[j]
+    h = aux.inc_h[j]
+    is_src = aux.inc_src[j]
+    other = aux.inc_other[j]
+    is_self = other == j
+    q = X_flat[other]
+    q_rm = jnp.where(is_self, p_old, q)
+    h_ns = jnp.where(is_self, 0.0, h)
+    h_s = jnp.where(is_self, h, 0.0)
+    e_po = jax.nn.one_hot(p_old, P, dtype=jnp.float32)
+    oh_qr = jax.nn.one_hot(q_rm, P, dtype=jnp.float32)
+    same_r = (q_rm == p_old).astype(jnp.float32)
+    omega_r = state.omega - F_j * e_po
+    theta_r = state.theta - (h.sum() - (h * same_r).sum()) * e_po \
+        - (h[:, None] * oh_qr).sum(0)
+    idx_rm = jnp.where(is_src, p_old * P + q_rm, q_rm * P + p_old)
+    lam_r = state.lam - (h[:, None] * path_flat[idx_rm]).sum(0)
+    eye = jnp.eye(P, dtype=jnp.float32)
+    omega_c = omega_r[None, :] + F_j * eye
+    add_q = (h_ns[:, None] * jax.nn.one_hot(q, P, dtype=jnp.float32)).sum(0)
+    diag_add = h_ns.sum() - add_q + h_s.sum()
+    theta_c = theta_r[None, :] + add_q[None, :] + eye * diag_add[:, None]
+    path3 = path_flat.reshape(P, P, N)
+    rt_src = path3[:, q, :]
+    rt_dst = jnp.swapaxes(path3[q, :, :], 0, 1)
+    rt = jnp.where(is_src[None, :, None], rt_src, rt_dst)
+    lam_c = lam_r[None, :] + jnp.einsum("d,pdn->pn", h_ns, rt)
+    omega_c = power._snap(omega_c, power.SNAP_GFLOPS)
+    theta_c = power._snap(theta_c, power.SNAP_MBPS)
+    lam_c = power._snap(lam_c, power.SNAP_MBPS)
+    return power._objective_from_loads(p, omega_c, lam_c, theta_c)
+
+
+@jax.jit
+def _sweep_dense(problem, aux, state, positions, path_flat):
+    """Dense-reference coordinate sweep (same scan as solvers._sweep)."""
+    def body(state, pos):
+        r, v = pos[0], pos[1]
+        obj_all = _delta_sweep_dense(problem, aux, state, r, v, path_flat)
+        best = jnp.argmin(obj_all)
+        state = power.apply_move(problem, aux, state, r, v,
+                                 best.astype(state.X.dtype))
+        return state, obj_all[best]
+    state, objs = jax.lax.scan(body, state, positions)
+    return state, objs[-1]
+
+
+def sparse_routes(n_vsrs: int = 20, reps: int = 5) -> Dict:
+    """CSR route table vs dense [P, P, N] incidence on the sweep hot path.
+
+    For paper scale and two city_scale substrates (P >= 128), time one full
+    coordinate sweep (`solvers._sweep`, production CSR path) against the
+    pre-CSR dense-gather sweep kept above, and model the per-sweep memory
+    traffic of the route lookups (the tensors each formulation must read).
+    At paper scale both sweeps' final placements are scored by the float64
+    oracle both on the sparse form and on a dense-form reference -- the gap
+    must be 0.  Writes BENCH_sparse.json.
+    """
+    scenarios = [
+        ("paper", topology.paper_topology()),
+        ("city_p140", topology.city_scale(n_olt=8, onus_per_olt=4,
+                                          iot_per_onu=4)),
+        ("city_p252", topology.city_scale()),
+        ("city_p468", topology.city_scale(n_olt=16, onus_per_olt=4,
+                                          iot_per_onu=7)),
+    ]
+    rows = []
+    parity = None
+    for name, topo in scenarios:
+        vs = vsr.random_vsrs(n_vsrs, rng=0, source_nodes=[0])
+        prob = power.build_problem(topo, vs)
+        aux = power.build_aux(prob)
+        P, N, K, D = prob.P, prob.N, prob.K, int(aux.inc_h.shape[1])
+        rng = np.random.default_rng(0)
+        X0 = jnp.asarray(power.apply_pins(prob, jnp.asarray(
+            rng.integers(0, P, size=(prob.R, prob.V)), jnp.int32)))
+        state = power.init_state(prob, X0)
+        positions = jnp.asarray(np.asarray(aux.free_pos))
+        M = int(positions.shape[0])
+        path_flat = jnp.asarray(
+            topo.dense_path_nodes().reshape(P * P, N))
+
+        # first runs double as compile warmup AND capture the final
+        # placements for the parity check below
+        st_csr, _ = solvers._sweep(prob, aux, state, positions)
+        st_dense, _ = _sweep_dense(prob, aux, state, positions, path_flat)
+        jax.block_until_ready((st_csr.X, st_dense.X))
+        t_csr = _best_time(
+            lambda: solvers._sweep(prob, aux, state, positions),
+            reps=reps, warmed=True)
+        t_dense = _best_time(
+            lambda: _sweep_dense(prob, aux, state, positions, path_flat),
+            reps=reps, warmed=True)
+
+        # route-lookup traffic per sweep (bytes actually addressed by the
+        # insertion scoring): dense gathers [P, D, N] f32 rows per position;
+        # CSR gathers [P, D, K] i32 ids per position
+        dense_traffic = M * P * D * N * 4
+        csr_traffic = M * P * D * K * 4
+        rows.append(dict(
+            scenario=name, P=P, N=N, K=K, R=int(prob.R), M_free=M,
+            sweep_s_csr=round(t_csr, 5), sweep_s_dense=round(t_dense, 5),
+            speedup_csr_vs_dense=round(t_dense / t_csr, 2),
+            table_bytes_dense=P * P * N * 4, table_bytes_csr=P * P * K * 4,
+            table_shrink=round(N / K, 2),
+            sweep_traffic_bytes_dense=dense_traffic,
+            sweep_traffic_bytes_csr=csr_traffic,
+            traffic_reduction=round(dense_traffic / csr_traffic, 2),
+            same_argmin_placement=bool(
+                np.array_equal(np.asarray(st_csr.X),
+                               np.asarray(st_dense.X))),
+        ))
+        if name == "paper":
+            # f64 parity on the solved placement: the sparse oracle vs the
+            # SAME f64 term assembly on the dense incidence form, both for
+            # lambda and for the end-to-end objective
+            from repro.kernels import ref as kref
+            Xs = np.asarray(st_csr.X)
+            dense = topo.dense_path_nodes().astype(np.float64)
+            obj_sparse = kref.placement_objective_f64(prob, Xs)
+            obj_dense = kref.placement_objective_f64(prob, Xs,
+                                                     path_dense=dense)
+            st_f = power.init_state(prob, jnp.asarray(Xs))
+            tm = np.asarray(st_f.tm, np.float64)
+            lam_dense = np.einsum("pq,pqn->n", tm, dense)
+            lam_sparse = kref.lam_f64_sparse(prob, tm)
+            parity = dict(
+                objective_f64_sparse=obj_sparse,
+                objective_f64_dense=obj_dense,
+                lam_max_abs_gap=float(np.max(np.abs(lam_dense
+                                                    - lam_sparse))),
+                objective_gap=abs(obj_sparse - obj_dense),
+            )
+
+    out = dict(
+        scenario=dict(n_vsrs=n_vsrs, backend=jax.default_backend(),
+                      note=("one coordinate sweep over all free VMs; "
+                            "dense = pre-CSR [P,P,N] incidence gathers "
+                            "(reconstructed from the CSR table for the "
+                            "baseline only), min-of-reps wall clock")),
+        sweeps=rows, f64_parity_paper_scale=parity)
+    BENCH_SPARSE_JSON.write_text(json.dumps(out, indent=2) + "\n")
     return out
 
 

@@ -67,6 +67,20 @@ def run_solver():
           f"({c['speedup_delta_vs_full']}x) -> BENCH_solver.json")
 
 
+def run_sparse():
+    out = kernel_bench.sparse_routes()
+    for r in out["sweeps"]:
+        print(f"sparse-routes: {r['scenario']:10s} P={r['P']:4d} "
+              f"N={r['N']:3d} K={r['K']:2d} "
+              f"csr={r['sweep_s_csr']*1e3:.1f}ms "
+              f"dense={r['sweep_s_dense']*1e3:.1f}ms "
+              f"({r['speedup_csr_vs_dense']}x) "
+              f"traffic {r['traffic_reduction']}x lower")
+    par = out["f64_parity_paper_scale"]
+    print(f"sparse-routes: f64 lam gap={par['lam_max_abs_gap']:.2e} "
+          f"objective_gap={par['objective_gap']} -> BENCH_sparse.json")
+
+
 def run_online():
     out = kernel_bench.online_resolve()
     s = out["summary"]
@@ -100,7 +114,8 @@ def run_roofline():
 
 BENCHES = dict(fig3=run_fig3, fig4=run_fig4, gap=run_gap,
                placement=run_placement, solver=run_solver,
-               online=run_online, flash=run_flash, roofline=run_roofline)
+               sparse=run_sparse, online=run_online, flash=run_flash,
+               roofline=run_roofline)
 
 
 def main() -> None:

@@ -168,11 +168,26 @@ SCENARIOS: Dict[str, ChurnScenario] = {
 @dataclass
 class OnlineStats:
     """Bookkeeping for one engine event (exposed to benchmarks/examples)."""
-    event: str                 # "add" | "remove" | "defrag"
+    event: str                 # "add" | "remove" | "defrag" | "reject"
     method: str
     objective: float
     power_w: float
     n_live: int
+
+
+def _bucket_rows(n: int, lo: int = 2) -> int:
+    """Shape bucket for a live-service count: the next power of two (>= lo).
+
+    Each distinct problem shape compiles its own `_sweep` /
+    `_anneal_scan_delta` variants (~3 s each on a 2-core box), so the online
+    engine pads the service dimension to these buckets -- the compile set
+    is O(log R) instead of O(distinct R), which kills the p90 latency
+    spikes in examples/online_day.py."""
+    n = max(n, 1)
+    b = lo
+    while b < n:
+        b *= 2
+    return b
 
 
 class OnlineEmbedder:
@@ -184,12 +199,35 @@ class OnlineEmbedder:
     and every ``defrag_every`` events -- or on demand via ``defrag()`` --
     runs the full portfolio to re-pack the substrate.  Service identity is
     the caller's ``sid``; internally rows are dense [0, R).
+
+    **Shape bucketing** (``bucket_rows``, default on): the tensor problem is
+    padded to power-of-two service counts with zero-demand fully-pinned
+    dummy rows (power.build_problem), and sweep position lists are padded to
+    the bucket, so the jitted solver kernels compile once per bucket instead
+    of once per live count.
+
+    **SLA admission control**: with ``max_hops`` set, every service may
+    only be placed within that many network hops of its source -- the
+    embed_latency_bounded eligibility mask is persisted per admitted row
+    and threaded through every incremental re-solve, so later churn events
+    keep services inside their radius (the full-portfolio defrag is the
+    one unmasked path; see the ROADMAP open item); with
+    ``admit_power_budget_w`` and/or
+    ``admit_violation_tol`` set, arrivals whose incremental power draw or
+    capacity-violation increase exceeds the budget are rejected -- or, with
+    ``queue_rejected``, parked and retried after each departure.  Counters
+    in ``admission`` (surfaced by ``replay``).
     """
 
     def __init__(self, topo: CFNTopology, defrag_every: int = 16,
                  key: Optional[jax.Array] = None, sweeps: int = 2,
                  anneal_steps: int = 600, anneal_chains: int = 8,
-                 polish_sweeps: int = 2, method: str = "cfn-milp"):
+                 polish_sweeps: int = 2, method: str = "cfn-milp",
+                 bucket_rows: bool = True,
+                 max_hops: Optional[int] = None,
+                 admit_power_budget_w: Optional[float] = None,
+                 admit_violation_tol: Optional[float] = None,
+                 queue_rejected: bool = False):
         self.topo = topo
         self.defrag_every = defrag_every
         self.method = method      # solver for full solves / defrags
@@ -205,6 +243,17 @@ class OnlineEmbedder:
         self._remove_kw = dict(sweeps=0, anneal_steps=anneal_steps,
                                anneal_chains=anneal_chains,
                                anneal_t0=20.0, polish_sweeps=polish_sweeps)
+        self.bucket_rows = bucket_rows
+        self.max_hops = max_hops
+        self.admit_power_budget_w = admit_power_budget_w
+        self.admit_violation_tol = admit_violation_tol
+        self.queue_rejected = queue_rejected
+        self.admission = dict(admitted=0, rejected=0, queued=0)
+        self._queue: List[tuple] = []          # parked (service, sid) pairs
+        # per live row: persisted SLA eligibility mask [P] (None = all);
+        # threaded through EVERY incremental re-solve so later events keep
+        # admitted services inside their hop radius
+        self._row_masks: List[Optional[np.ndarray]] = []
         self._vsrs: List[vsr.VSRBatch] = []    # one R=1 batch per service
         self._sids: List[int] = []
         self._next_sid = 0
@@ -250,9 +299,17 @@ class OnlineEmbedder:
         the clone leave this engine untouched.  Used by benchmarks to replay
         one event several times for min-of-reps timing."""
         other = OnlineEmbedder(self.topo, defrag_every=self.defrag_every,
-                               key=self._key)
+                               key=self._key, method=self.method,
+                               bucket_rows=self.bucket_rows,
+                               max_hops=self.max_hops,
+                               admit_power_budget_w=self.admit_power_budget_w,
+                               admit_violation_tol=self.admit_violation_tol,
+                               queue_rejected=self.queue_rejected)
         other._add_kw = dict(self._add_kw)
         other._remove_kw = dict(self._remove_kw)
+        other.admission = dict(self.admission)
+        other._queue = list(self._queue)
+        other._row_masks = list(self._row_masks)
         other._vsrs = list(self._vsrs)
         other._sids = list(self._sids)
         other._next_sid = self._next_sid
@@ -278,7 +335,8 @@ class OnlineEmbedder:
         if self._problem is None or not self._sids:
             return {}
         per = power.attribute_power(self._problem, self._X,
-                                    self._result.breakdown)
+                                    self._result.breakdown,
+                                    n_rows=self.n_live)
         return {sid: float(w) for sid, w in zip(self._sids, per)}
 
     def vsr_batch(self) -> Optional[vsr.VSRBatch]:
@@ -291,11 +349,23 @@ class OnlineEmbedder:
         self._key, k = jax.random.split(self._key)
         return k
 
+    def _pad_rows(self) -> Optional[int]:
+        return (_bucket_rows(len(self._vsrs)) if self.bucket_rows else None)
+
     def _rebuild_problem(self) -> None:
         if self._substrate is None:
             self._substrate = power.substrate_arrays(self.topo)
         self._problem = power.build_problem(self.topo, self._batch_cache,
-                                            substrate=self._substrate)
+                                            substrate=self._substrate,
+                                            pad_to_rows=self._pad_rows())
+
+    def _resolve_kw(self, base: dict) -> dict:
+        """Per-event solver kwargs: bucket-stable sweep padding."""
+        kw = dict(base)
+        if self.bucket_rows and self._problem is not None:
+            kw["pad_positions_to"] = int(
+                self._problem.R * (self._problem.V - 1))
+        return kw
 
     def _drop_row(self, row: int) -> None:
         """Delete one service's row from the cached batch, KEEPING the VM
@@ -353,6 +423,7 @@ class OnlineEmbedder:
             if s.R != 1:
                 raise ValueError(f"service {k} must be R=1, got R={s.R}")
         self._vsrs = list(services)
+        self._row_masks = [self._hop_mask(int(s.src[0])) for s in services]
         self._sids = (list(range(len(services))) if sids is None
                       else list(sids))
         self._next_sid = max(self._sids, default=-1) + 1
@@ -361,13 +432,58 @@ class OnlineEmbedder:
             out = out.concat(b)
         self._batch_cache = out
         self._rebuild_problem()
+        self.admission["admitted"] += len(services)
         return self._full_solve("bootstrap")
 
-    def add(self, service: vsr.VSRBatch,
-            sid: Optional[int] = None) -> solvers.SolveResult:
+    def _hop_mask(self, src: int) -> Optional[np.ndarray]:
+        if self.max_hops is None:
+            return None
+        return np.asarray(self.topo.path_hops)[src] <= self.max_hops
+
+    def _stacked_eligible(self) -> Optional[np.ndarray]:
+        """[R, P] eligibility from every live row's persisted SLA mask
+        (pad / unconstrained rows all-True); None when nothing is masked."""
+        if all(m is None for m in self._row_masks):
+            return None
+        el = np.ones((self._problem.R, self._problem.P), dtype=bool)
+        for i, m in enumerate(self._row_masks):
+            if m is not None:
+                el[i] = m
+        return el
+
+    def _admit_ok(self, res: solvers.SolveResult, prev_power: float,
+                  prev_violation: float) -> bool:
+        """SLA admission test on the solved arrival placement."""
+        if (self.admit_power_budget_w is not None
+                and res.power - prev_power > self.admit_power_budget_w):
+            return False
+        if (self.admit_violation_tol is not None
+                and float(res.breakdown.violation) - prev_violation
+                > self.admit_violation_tol):
+            return False
+        return True
+
+    @property
+    def _admission_active(self) -> bool:
+        return (self.max_hops is not None
+                or self.admit_power_budget_w is not None
+                or self.admit_violation_tol is not None)
+
+    def add(self, service: vsr.VSRBatch, sid: Optional[int] = None,
+            _retry: bool = False) -> Optional[solvers.SolveResult]:
         """Admit one service (an R=1 VSRBatch): warm-start incremental
         re-embedding; the very first service (and every
-        ``defrag_every``-th event) takes the full-portfolio path."""
+        ``defrag_every``-th event) takes the full-portfolio path -- except
+        under admission control, where even the first service goes through
+        the masked incremental path so the hop/budget contract holds.
+
+        With admission control configured, returns ``None`` when the
+        arrival is rejected (the engine state is rolled back; with
+        ``queue_rejected`` the service is parked and retried after the next
+        departure).  ``_retry`` marks a queue re-attempt: a re-rejection
+        does not re-increment the rejected/queued counters (they count
+        distinct arrivals), while an eventual success still counts as
+        admitted."""
         if service.R != 1:
             raise ValueError(f"add() takes one service, got R={service.R}")
         if sid is None:
@@ -375,19 +491,56 @@ class OnlineEmbedder:
         if sid in self._sids:
             raise ValueError(f"sid {sid} is already live")
         self._next_sid = max(self._next_sid, sid + 1)
+        prev = (self._vsrs[:], self._sids[:], self._row_masks[:],
+                self._batch_cache, self._problem, self._X, self._state,
+                self._result, self._events_since_defrag)
         prev_X, prev_loads = self._X, self._carry_loads()
         self._vsrs.append(service)
+        self._row_masks.append(self._hop_mask(int(service.src[0])))
         self._sids.append(sid)
         self._batch_cache = (service if self._batch_cache is None
                              else self._batch_cache.concat(service))
         self._rebuild_problem()
         self._events_since_defrag += 1
+        if prev_X is None and not self._admission_active:
+            res = self._full_solve("add")
+            self.admission["admitted"] += 1
+            return res
+        row = self.n_live - 1
         if prev_X is None:
-            return self._full_solve("add")
-        st = power.warm_state(self._problem, prev_X, prev_loads=prev_loads)
+            # empty engine under admission control: start from the pinned
+            # sources (an all-src placement) so the masked incremental
+            # path and the budget check below still apply
+            st = power.init_state(self._problem,
+                                  np.asarray(self._problem.fixed_node))
+            prev_power, prev_viol = 0.0, 0.0
+        else:
+            row_map = list(range(row)) + [-1] * (self._problem.R - row)
+            st = power.warm_state(self._problem, prev_X,
+                                  prev_loads=prev_loads, row_map=row_map)
+            prev_power = 0.0 if prev[7] is None else prev[7].power
+            prev_viol = (0.0 if prev[7] is None
+                         else float(prev[7].breakdown.violation))
         res = solvers.resolve_incremental(
             self._problem, np.asarray(st.X), key=self._split_key(),
-            changed_rows=[self.n_live - 1], state=st, **self._add_kw)
+            changed_rows=[row], state=st,
+            eligible=self._stacked_eligible(),
+            **self._resolve_kw(self._add_kw))
+        if not self._admit_ok(res, prev_power, prev_viol):
+            (self._vsrs, self._sids, self._row_masks, self._batch_cache,
+             self._problem, self._X, self._state, self._result,
+             self._events_since_defrag) = prev
+            if not _retry:
+                self.admission["rejected"] += 1
+                if self.queue_rejected:
+                    self.admission["queued"] += 1
+            if self.queue_rejected:
+                self._queue.append((service, sid))
+            self.stats.append(OnlineStats(
+                event="reject", method="admission", objective=res.objective,
+                power_w=res.power, n_live=self.n_live))
+            return None
+        self.admission["admitted"] += 1
         if self._defrag_due():
             return self._full_solve("add", incumbent=res)
         self._commit(res, "add")
@@ -395,21 +548,25 @@ class OnlineEmbedder:
 
     def remove(self, sid: int) -> Optional[solvers.SolveResult]:
         """Retire a service: detach its loads in O(V*(N+P)), then let the
-        survivors re-settle with polish sweeps (no changed rows)."""
+        survivors re-settle with polish sweeps (no changed rows).  Freed
+        capacity re-admits queued arrivals (``queue_rejected``)."""
         row = self._sids.index(sid)
         detached = power.detach_vsrs(self._problem, self._state, [row])
         prev_X = self._X
-        row_map = [i for i in range(self.n_live) if i != row]
+        surv = [i for i in range(self.n_live) if i != row]
         del self._vsrs[row]
         del self._sids[row]
+        del self._row_masks[row]
         if not self._vsrs:
             self._problem = self._X = self._state = self._result = None
             self._batch_cache = None
             self.stats.append(OnlineStats("remove", "empty", 0.0, 0.0, 0))
+            self._drain_queue()
             return None
         self._drop_row(row)
         self._rebuild_problem()
         self._events_since_defrag += 1
+        row_map = surv + [-1] * (self._problem.R - len(surv))
         st = power.warm_state(
             self._problem, prev_X,
             prev_loads=(detached.omega, detached.tm, detached.theta,
@@ -417,11 +574,34 @@ class OnlineEmbedder:
             row_map=row_map)
         res = solvers.resolve_incremental(
             self._problem, np.asarray(st.X), key=self._split_key(),
-            changed_rows=[], state=st, **self._remove_kw)
+            changed_rows=[], state=st, eligible=self._stacked_eligible(),
+            **self._resolve_kw(self._remove_kw))
         if self._defrag_due():
-            return self._full_solve("remove", incumbent=res)
-        self._commit(res, "remove")
+            res = self._full_solve("remove", incumbent=res)
+        else:
+            self._commit(res, "remove")
+        self._drain_queue()
         return res
+
+    def _drain_queue(self) -> None:
+        """Retry parked arrivals (FIFO); stop at the first re-rejection."""
+        while self._queue:
+            service, sid = self._queue.pop(0)
+            if self.add(service, sid=sid, _retry=True) is None:
+                if self._queue and self._queue[-1][1] == sid:
+                    # add() re-queued it at the tail; restore FIFO order
+                    self._queue.insert(0, self._queue.pop())
+                else:
+                    # queue_rejected was toggled off mid-run, so add() did
+                    # not re-queue: park the arrival back ourselves
+                    self._queue.insert(0, (service, sid))
+                break
+
+    def cancel_queued(self, sid: int) -> bool:
+        """Drop a parked arrival (its lifetime ended while queued)."""
+        n0 = len(self._queue)
+        self._queue = [(s, q) for (s, q) in self._queue if q != sid]
+        return len(self._queue) < n0
 
     def defrag(self) -> Optional[solvers.SolveResult]:
         """Force a full-portfolio re-pack of the current service set (keeps
@@ -441,17 +621,22 @@ def replay(engine: OnlineEmbedder, events: Sequence[ServiceEvent],
     """Drive an engine through a timeline.  ``make_vsr(sid)`` materializes
     the service for each arrival; departures of services neither live in
     the engine (e.g. bootstrapped) nor admitted by this replay are skipped.
-    ``on_event(event, result)`` observes each step."""
+    ``on_event(event, result)`` observes each step (``result`` is None for
+    an SLA-rejected arrival).  Admission counters accumulate in
+    ``engine.admission`` (admitted / rejected / queued)."""
     live = set(engine.sids)
     for ev in events:
         if ev.kind == "arrive":
             res = engine.add(make_vsr(ev.sid), sid=ev.sid)
-            live.add(ev.sid)
+            if res is not None:
+                live.add(ev.sid)
         else:
             if ev.sid not in live:
+                engine.cancel_queued(ev.sid)
                 continue
             res = engine.remove(ev.sid)
             live.discard(ev.sid)
+            live.update(s for s in engine.sids)  # queue re-admissions
         if on_event is not None:
             on_event(ev, res)
     return engine.stats

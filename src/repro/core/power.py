@@ -6,8 +6,12 @@ Given a placement ``X[r, v]`` (processing-node index per VM), total power is
   pr_pc  = sum_p PUE_p * ( E_p * Omega_p + N_p * pi_p
                            + EL_p * theta_p + Phi_p * share_p * pi_p^LAN )   (2)
 
-with lambda_n obtained by contracting the per-candidate traffic matrix with the
-precomputed path-incidence tensor (topology.py).
+with lambda_n obtained by accumulating traffic along the precomputed
+padded-CSR route table (topology.py): ``route_idx[b, e, :]`` lists the <= K
+network nodes on the (b, e) route (sentinel N marks padding), so every
+lambda contraction is a gather/segment-sum over O(K) ids per route instead
+of an O(N) dense incidence row -- the representation that keeps city-scale
+substrates (P in the hundreds) off O(P^2 * N) tensors entirely.
 
 Two evaluation regimes coexist:
 
@@ -82,7 +86,7 @@ class PlacementProblem:
     """Immutable tensor bundle: substrate parameters + workload."""
 
     # substrate ----------------------------------------------------------
-    path_nodes: jnp.ndarray   # [P, P, N]
+    route_idx: jnp.ndarray    # [P, P, K] int32 network-node ids, pad = N
     E: jnp.ndarray            # [P] W/GFLOPS
     C_pr: jnp.ndarray         # [P] GFLOPS per server
     NS: jnp.ndarray           # [P] servers
@@ -112,6 +116,10 @@ class PlacementProblem:
     @property
     def N(self) -> int:
         return self.eps.shape[0]
+
+    @property
+    def K(self) -> int:
+        return self.route_idx.shape[2]
 
     @property
     def R(self) -> int:
@@ -144,13 +152,21 @@ def substrate_arrays(topo: CFNTopology) -> Dict[str, jnp.ndarray]:
     pp = topo.proc_param_arrays()
     nn = topo.net_param_arrays()
     out = {k: jnp.asarray(v) for k, v in {**pp, **nn}.items()}
-    out["path_nodes"] = jnp.asarray(topo.path_nodes)
+    out["route_idx"] = jnp.asarray(topo.route_idx)
     return out
 
 
 def build_problem(topo: CFNTopology, vsrs: VSRBatch,
-                  substrate: Optional[Dict[str, jnp.ndarray]] = None
-                  ) -> PlacementProblem:
+                  substrate: Optional[Dict[str, jnp.ndarray]] = None,
+                  pad_to_rows: Optional[int] = None) -> PlacementProblem:
+    """Build the tensor bundle for one workload on one substrate.
+
+    ``pad_to_rows`` (shape bucketing, core.dynamic.OnlineEmbedder): pad the
+    service dimension to that many rows with zero-demand, link-free dummy
+    services whose every VM is PINNED to node 0 -- they contribute exactly
+    zero load and zero free positions, so the objective and the solver move
+    set are unchanged while jitted solver shapes stay on a fixed bucket.
+    """
     if substrate is None:
         substrate = substrate_arrays(topo)
     link_src, link_dst, link_h = vsrs.links()
@@ -159,10 +175,17 @@ def build_problem(topo: CFNTopology, vsrs: VSRBatch,
     fixed_mask[np.arange(R), vsrs.input_vm] = True
     fixed_node = np.zeros((R, V), dtype=np.int32)
     fixed_node[np.arange(R), vsrs.input_vm] = vsrs.src
+    F = np.asarray(vsrs.F)
+    if pad_to_rows is not None and pad_to_rows > R:
+        pad = pad_to_rows - R
+        F = np.concatenate([F, np.zeros((pad, V), F.dtype)])
+        fixed_mask = np.concatenate([fixed_mask, np.ones((pad, V), bool)])
+        fixed_node = np.concatenate(
+            [fixed_node, np.zeros((pad, V), np.int32)])
     as_j = lambda x: jnp.asarray(x)
     return PlacementProblem(
         **substrate,
-        F=as_j(vsrs.F),
+        F=as_j(F),
         link_src=as_j(link_src), link_dst=as_j(link_dst), link_h=as_j(link_h),
         fixed_mask=as_j(fixed_mask), fixed_node=as_j(fixed_node),
     )
@@ -173,10 +196,38 @@ def apply_pins(problem: PlacementProblem, X: jnp.ndarray) -> jnp.ndarray:
     return jnp.where(problem.fixed_mask, problem.fixed_node, X)
 
 
-def _loads(problem: PlacementProblem, onehot: jnp.ndarray):
+def _lam_from_tm(problem: PlacementProblem, tm: jnp.ndarray) -> jnp.ndarray:
+    """lambda [N] from a traffic matrix [P, P]: segment-sum of tm over the
+    CSR route table (sentinel ids land in the dropped N-th slot).  Works for
+    soft (fractional) traffic matrices and is differentiable; NOT intended
+    under vmap (batched scatters serialize on XLA CPU -- batched callers use
+    ``_lam_from_links``)."""
+    p = problem
+    w = jnp.broadcast_to(tm[..., None], p.route_idx.shape)
+    lam = jnp.zeros(p.N + 1, tm.dtype).at[p.route_idx.reshape(-1)].add(
+        w.reshape(-1))
+    return lam[:p.N]
+
+
+def _lam_from_links(problem: PlacementProblem, X_flat: jnp.ndarray
+                    ) -> jnp.ndarray:
+    """lambda [N] for a HARD placement: each virtual link's bitrate
+    accumulated along its route's <= K node ids, via a one-hot contraction
+    (gathers + matmul only, so it vectorizes cleanly under vmap).
+    O(L * K * N) flops, no O(P^2 * N) operand anywhere."""
+    p = problem
+    ids = p.route_idx[X_flat[p.link_src], X_flat[p.link_dst]]       # [L, K]
+    oh = (ids[..., None] == jnp.arange(p.N)).astype(jnp.float32)    # [L,K,N]
+    return jnp.einsum("l,lkn->n", p.link_h, oh)
+
+
+def _loads(problem: PlacementProblem, onehot: jnp.ndarray,
+           X_flat: Optional[jnp.ndarray] = None):
     """Shared load computation given one-hot placements [R, V, P].
 
-    Returns ``(omega[P], tm[P, P], lam[N], theta[P])``.
+    Returns ``(omega[P], tm[P, P], lam[N], theta[P])``.  For hard placements
+    pass ``X_flat`` [R*V] so lambda takes the vmap-friendly per-link route
+    path; soft (fractional) placements fall back to the tm segment-sum.
     """
     p = problem
     omega = jnp.einsum("rvp,rv->p", onehot, p.F)                    # [P]
@@ -185,7 +236,10 @@ def _loads(problem: PlacementProblem, onehot: jnp.ndarray):
     w = flat[p.link_dst]                                            # [L, P]
     tm = jnp.einsum("l,lp,lq->pq", p.link_h, u, w)                  # [P, P]
     intra = jnp.einsum("l,lp,lp->p", p.link_h, u, w)                # [P]
-    lam = jnp.einsum("pq,pqn->n", tm, p.path_nodes)                 # [N] Mbps
+    if X_flat is None:
+        lam = _lam_from_tm(p, tm)                                   # [N] Mbps
+    else:
+        lam = _lam_from_links(p, X_flat)
     theta = (u.T @ p.link_h) + (w.T @ p.link_h) - intra             # [P] Mbps
     return omega, tm, lam, theta
 
@@ -227,10 +281,11 @@ def evaluate(problem: PlacementProblem, X: jnp.ndarray,
     if hard:
         X = apply_pins(p, X)
         onehot = jax.nn.one_hot(X, p.P, dtype=jnp.float32)
+        omega, _, lam, theta = _loads(p, onehot, X.reshape(-1))
     else:
         pin_oh = jax.nn.one_hot(p.fixed_node, p.P, dtype=jnp.float32)
         onehot = jnp.where(p.fixed_mask[..., None], pin_oh, X)
-    omega, _, lam, theta = _loads(p, onehot)
+        omega, _, lam, theta = _loads(p, onehot)
 
     if hard:
         per_net, per_proc, violation = _hard_terms(p, omega, lam, theta)
@@ -330,6 +385,16 @@ def _snap(x: jnp.ndarray, eps: float) -> jnp.ndarray:
     return jnp.where(jnp.abs(x) < eps, 0.0, x)
 
 
+def _proc_power_hard(om, th, E, C_pr, pi, pue, EL, share_pi):
+    """Eq.(2) power of one (or a vector of) processing node(s) under hard
+    activation indicators -- the single source the delta paths share
+    (entry-wise gathers in ``_delta_objective``, full vectors in
+    ``delta_sweep``; ``_assemble_terms`` keeps the general soft form)."""
+    phi = ((om > ACTIVE_EPS) | (th > ACTIVE_EPS)).astype(jnp.float32)
+    return pue * (E * om + jnp.ceil(om / C_pr) * pi + EL * th / 1e3
+                  + phi * share_pi)
+
+
 def _objective_from_loads(problem, omega, lam, theta) -> jnp.ndarray:
     per_net, per_proc, viol = _hard_terms(problem, omega, lam, theta)
     return per_net.sum(-1) + per_proc.sum(-1) + PENALTY * viol
@@ -340,10 +405,24 @@ def _init_state_jit(problem: PlacementProblem,
                     X: jnp.ndarray) -> PlacementState:
     X = apply_pins(problem, X)
     onehot = jax.nn.one_hot(X, problem.P, dtype=jnp.float32)
-    omega, tm, lam, theta = _loads(problem, onehot)
+    omega, tm, lam, theta = _loads(problem, onehot, X.reshape(-1))
     obj = _objective_from_loads(problem, omega, lam, theta)
     return PlacementState(X=X, omega=omega, tm=tm, theta=theta, lam=lam,
                           obj=obj)
+
+
+def batched_hard_loads(problem: PlacementProblem, Xc: jnp.ndarray):
+    """Loads + objective for a batch of hard placements ``Xc [C, R, V]``:
+    ``(omega [C, P], theta [C, P], lam [C, N], obj [C])``.  The single
+    source for chain-state initialization, shared by the pure-JAX delta
+    anneal scan and the fused Pallas kernel wrapper."""
+    Xf = Xc.reshape(Xc.shape[0], -1)
+    onehot = jax.nn.one_hot(Xc, problem.P, dtype=jnp.float32)
+    omega, _, lam, theta = jax.vmap(
+        lambda oh, xf: _loads(problem, oh, xf))(onehot, Xf)
+    per_net, per_proc, viol = _hard_terms(problem, omega, lam, theta)
+    obj = per_net.sum(-1) + per_proc.sum(-1) + PENALTY * viol
+    return omega, theta, lam, obj
 
 
 def init_state(problem: PlacementProblem, X: jnp.ndarray) -> PlacementState:
@@ -386,11 +465,17 @@ def _move_core(problem: PlacementProblem, aux: PlacementAux, X_flat,
     # theta delta at p_old / p_new (all other entries cancel exactly)
     alpha = -(H_tot - sr) + (hh * (q2 == p_old)).sum()
     beta = (H_tot - si) + (hh * (q2 == p_new)).sum()
-    # lam: the two touched routes per link (ordered pair respects direction)
-    path_flat = p.path_nodes.reshape(P * P, p.N)
+    # lam: the two touched routes per link (ordered pair respects direction).
+    # Each route contributes <= K node ids from the CSR table; the sentinel
+    # id N never matches iota < N, so padding masks itself out.  O(D*K*N)
+    # one-hot contraction -- gathers + matmul only (vmap-safe on XLA CPU),
+    # no [P*P, N] dense incidence operand.
+    rt_flat = p.route_idx.reshape(P * P, p.K)
     idx_rm = jnp.where(is_src, p_old * P + q_rm, q_rm * P + p_old)
     idx_in = jnp.where(is_src, p_new * P + q_in, q_in * P + p_new)
-    d_lam = hh @ path_flat[jnp.concatenate([idx_rm, idx_in])]
+    ids2 = rt_flat[jnp.concatenate([idx_rm, idx_in])]   # [2D, K]
+    oh2 = (ids2[..., None] == jnp.arange(p.N)).astype(jnp.float32)
+    d_lam = jnp.einsum("d,dkn->n", hh, oh2)
     lam2 = _snap(lam + d_lam, SNAP_MBPS)
 
     idx = jnp.stack([p_old, p_new])
@@ -416,12 +501,7 @@ def _delta_objective(p: PlacementProblem, omega, theta, lam,
                     p.lan_share * p.pi_lan, p.NS * p.C_pr, p.C_lan])
     E, Cpr, pi, pue, EL, share_pi, cap_pr, C_lan = pk[:, idx]
     relu = jax.nn.relu
-
-    def proc(o, t):
-        phi = ((o > ACTIVE_EPS) | (t > ACTIVE_EPS)).astype(jnp.float32)
-        return pue * (E * o + jnp.ceil(o / Cpr) * pi + EL * t / 1e3
-                      + phi * share_pi)
-
+    proc = lambda o, t: _proc_power_hard(o, t, E, Cpr, pi, pue, EL, share_pi)
     d_proc = (proc(om2, th2) - proc(om, th)).sum()
     d_viol = (relu(om2 - cap_pr) - relu(om - cap_pr)
               + relu(th2 / 1e3 - C_lan) - relu(th / 1e3 - C_lan)).sum()
@@ -484,12 +564,29 @@ def delta_sweep(problem: PlacementProblem, aux: PlacementAux,
                 state: PlacementState, r, v) -> jnp.ndarray:
     """Absolute objective of moving VM (r, v) to EVERY node: [P].
 
-    Removal once, then a vectorized insertion across all P candidates --
-    O(P * (P + N + deg * N)) instead of P full evaluations.  Entry ``p_old``
-    reproduces the current objective, so ``argmin`` never worsens the state.
+    Removal once, then TOUCHED-ENTRIES scoring of all P insertions.  The
+    decomposition: relative to the removal state (with the candidate-
+    independent theta contribution at the link peers q_k folded in), placing
+    VM j at candidate ``a`` changes
+
+      * the PROCESSING terms at node ``a`` only (omega + F_j, theta +
+        diag_add[a]) -- an O(1) correction per candidate;
+      * the NETWORK terms only at the <= D*K route node ids of the routes
+        a <-> q_k, gathered from the CSR route table as ``ids [P, M]``
+        (M = D*K, sentinel N marks padding).  Per-node traffic deltas are
+        aggregated by an [M, M] id-match (duplicate ids on several routes
+        sum; only the first occurrence scores), and the Eq.(1) delta is
+        evaluated on those entries alone.
+
+    Total O(P * (M^2 + M) + P + N) with NO [P, P] / [P, N] candidate-load
+    tensor and NO O(P^2*N) route operand -- this was a [P, D, N] dense
+    incidence gather + full [P, N]/[P, P] re-assembly before (the version
+    benchmarks/kernel_bench.py keeps as the dense baseline).  Entry
+    ``p_old`` reproduces the current objective, so ``argmin`` never worsens
+    the state.
     """
     p = problem
-    P, N = p.P, p.N
+    P, N, K = p.P, p.N, p.K
     j = r * p.V + v
     X_flat = state.X.reshape(-1)
     p_old = X_flat[j]
@@ -510,27 +607,83 @@ def delta_sweep(problem: PlacementProblem, aux: PlacementAux,
     omega_r = state.omega - F_j * e_po
     theta_r = state.theta - (h.sum() - (h * same_r).sum()) * e_po \
         - (h[:, None] * oh_qr).sum(0)
-    path_flat = p.path_nodes.reshape(P * P, N)
+    rt_flat = p.route_idx.reshape(P * P, K)
     idx_rm = jnp.where(is_src, p_old * P + q_rm, q_rm * P + p_old)
-    lam_r = state.lam - (h[:, None] * path_flat[idx_rm]).sum(0)
+    ids_rm = rt_flat[idx_rm]                                    # [D, K]
+    oh_rm = (ids_rm[..., None] == jnp.arange(N)).astype(jnp.float32)
+    lam_r = state.lam - jnp.einsum("d,dkn->n", h, oh_rm)
 
-    # ---- vectorized insertion at every candidate ------------------------
-    eye = jnp.eye(P, dtype=jnp.float32)
-    omega_c = omega_r[None, :] + F_j * eye                      # [P, P]
-    # at candidate a: + (sum_k h_ns_k (1 - [a==q_k]) + sum h_s) on entry a,
-    # + h_ns_k on each entry q_k
+    # ---- candidate-independent insertion loads --------------------------
+    # theta gains h_ns_k at every peer q_k regardless of the candidate, and
+    # (h_ns.sum() - add_q[a] + h_s.sum()) at the candidate itself
     add_q = (h_ns[:, None] * jax.nn.one_hot(q, P, dtype=jnp.float32)).sum(0)
     diag_add = h_ns.sum() - add_q + h_s.sum()                   # [P]
-    theta_c = theta_r[None, :] + add_q[None, :] + eye * diag_add[:, None]
-    rt_src = p.path_nodes[:, q, :]                              # [P, D, N]
-    rt_dst = jnp.swapaxes(p.path_nodes[q, :, :], 0, 1)          # [P, D, N]
-    rt = jnp.where(is_src[None, :, None], rt_src, rt_dst)
-    lam_c = lam_r[None, :] + jnp.einsum("d,pdn->pn", h_ns, rt)  # [P, N]
+    theta_i = theta_r + add_q                                   # [P]
+    omega_b = _snap(omega_r, SNAP_GFLOPS)
+    theta_b = _snap(theta_i, SNAP_MBPS)
+    lam_b = _snap(lam_r, SNAP_MBPS)
 
-    omega_c = _snap(omega_c, SNAP_GFLOPS)
-    theta_c = _snap(theta_c, SNAP_MBPS)
-    lam_c = _snap(lam_c, SNAP_MBPS)
-    return _objective_from_loads(p, omega_c, lam_c, theta_c)
+    # ---- base objective (candidate-independent) -------------------------
+    per_net_b, per_proc_b, viol_b = _hard_terms(p, omega_b, lam_b, theta_b)
+    relu = jax.nn.relu
+    base = per_net_b.sum() + per_proc_b.sum() + PENALTY * viol_b
+
+    # ---- processing correction at the candidate node (O(1) each) --------
+    om_new = _snap(omega_r + F_j, SNAP_GFLOPS)                  # [P] diag
+    th_new = _snap(theta_i + diag_add, SNAP_MBPS)
+    cap_pr = p.NS * p.C_pr
+    d_proc = _proc_power_hard(om_new, th_new, p.E, p.C_pr, p.pi_pr,
+                              p.pue_pr, p.EL,
+                              p.lan_share * p.pi_lan) - per_proc_b   # [P]
+    d_viol_pr = (relu(om_new - cap_pr) - relu(omega_b - cap_pr)
+                 + relu(th_new / 1e3 - p.C_lan)
+                 - relu(theta_b / 1e3 - p.C_lan))
+
+    # ---- network correction on the touched route ids --------------------
+    # routes a <-> q_k, direction-ordered: [P, D, K] -> ids [P, M]
+    ids_src = p.route_idx[:, q, :]                              # [P, D, K]
+    ids_dst = jnp.swapaxes(p.route_idx[q, :, :], 0, 1)          # [P, D, K]
+    ids3 = jnp.where(is_src[None, :, None], ids_src, ids_dst)   # [P, D, K]
+    D = ids3.shape[1]
+    valid3 = ids3 < N
+    # A node shared by several of the candidate's routes must see ONE
+    # aggregated traffic delta before the beta/relu nonlinearities.  Each
+    # route's OWN ids are unique by construction, so duplicates can only
+    # occur ACROSS routes: D*(D-1)/2 static [P, K, K] cross-route id
+    # matches mark later occurrences as duplicates and accumulate the other
+    # routes' bitrates onto the first one -- exact aggregation with no
+    # [M, M] match and no sort (sentinel-N pads only ever match other
+    # pads, whose entries are masked as invalid anyway).
+    dup = [jnp.zeros((P, K), bool) for _ in range(D)]
+    tot = [jnp.full((P, K), 0.0, jnp.float32) for _ in range(D)]
+    for d2 in range(D):
+        for d1 in range(d2):
+            eq = ids3[:, d1, :, None] == ids3[:, d2, None, :]   # [P, K, K]
+            in2 = eq.any(axis=2)        # route-d1 entry also on route d2
+            in1 = eq.any(axis=1)        # route-d2 entry also on route d1
+            tot[d1] = tot[d1] + h_ns[d2] * in2
+            tot[d2] = tot[d2] + h_ns[d1] * in1
+            dup[d2] = dup[d2] | in1
+    first = valid3 & ~jnp.stack(dup, axis=1)                    # [P, D, K]
+    tot_other = jnp.stack(tot, axis=1)                          # [P, D, K]
+
+    # one merged [6, P, D, K] gather for the per-id operands (sentinel id
+    # N hits the zero-padded column)
+    tbl = jnp.stack([lam_r, lam_b, p.eps, p.pue_net,
+                     p.idle_share * p.pi_net, p.C_net])
+    tblp = jnp.concatenate([tbl, jnp.zeros((6, 1), tbl.dtype)], axis=1)
+    lam_raw, lam_old, eps_g, pue_g, idle_g, cnet_g = tblp[:, ids3]
+    lam_new = _snap(lam_raw + h_ns[None, :, None] + tot_other, SNAP_MBPS)
+    beta_d = ((lam_new > ACTIVE_EPS).astype(jnp.float32)
+              - (lam_old > ACTIVE_EPS).astype(jnp.float32))
+    use = first.astype(jnp.float32)
+    d_net = (use * pue_g * (eps_g * (lam_new - lam_old) / 1e3
+                            + beta_d * idle_g)).sum((-1, -2))   # [P]
+    d_viol_net = (use * (relu(lam_new / 1e3 - cnet_g)
+                         - relu(lam_old / 1e3 - cnet_g))).sum((-1, -2))
+
+    return (base + d_proc + d_net
+            + PENALTY * (d_viol_pr + d_viol_net))
 
 
 # ---------------------------------------------------------------------------
@@ -567,14 +720,15 @@ def service_loads(problem: PlacementProblem, X,
     ld = np.asarray(p.link_dst)
     lh = np.asarray(p.link_h, np.float64)
     sel = np.isin(ls // V, rows)
-    pn = np.asarray(p.path_nodes, np.float64)
+    rt = np.asarray(p.route_idx)
     for s, d, h in zip(ls[sel], ld[sel], lh[sel]):
         b, e = int(Xf[s]), int(Xf[d])
         tm[b, e] += h
         theta[b] += h
         if e != b:
             theta[e] += h
-            lam += h * pn[b, e]
+            ids = rt[b, e]
+            lam[ids[ids < N]] += h    # route ids are unique per route
     f32 = lambda a: a.astype(np.float32)
     return f32(omega), f32(tm), f32(theta), f32(lam)
 
@@ -689,7 +843,8 @@ def warm_state(problem_new: PlacementProblem, prev_X,
 
 
 def attribute_power(problem: PlacementProblem, X,
-                    breakdown: Optional[PowerBreakdown] = None) -> np.ndarray:
+                    breakdown: Optional[PowerBreakdown] = None,
+                    n_rows: Optional[int] = None) -> np.ndarray:
     """Split ``breakdown.total`` across services: returns per-service watts
     [R] that sum to the total exactly (float64).
 
@@ -698,11 +853,16 @@ def attribute_power(problem: PlacementProblem, X,
     there (E*omega_r + EL*theta_r); each network node's Eq.(1) power by the
     services' traffic shares lam_r.  Idle/activation terms thus follow the
     marginal load -- the per-tenant accounting the online engine reports.
+
+    ``n_rows``: attribute over the first n_rows services only (the rows
+    beyond are shape-bucketing pad rows with zero load; excluding them keeps
+    the unattributable-idle residue split across REAL tenants so the
+    returned watts still sum to the total).
     """
     p = problem
     X = np.asarray(apply_pins(p, jnp.asarray(X, jnp.int32)))
     bd = evaluate(p, jnp.asarray(X)) if breakdown is None else breakdown
-    R = p.R
+    R = p.R if n_rows is None else int(n_rows)
     per_proc = np.asarray(bd.per_proc, np.float64)
     per_net = np.asarray(bd.per_net, np.float64)
     E = np.asarray(p.E, np.float64)

@@ -32,10 +32,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from .power import (PENALTY, PlacementAux, PlacementProblem, PlacementState,
-                    PowerBreakdown, apply_move, apply_pins, build_aux,
-                    delta_sweep, evaluate, init_state, objective,
-                    objective_batch, _commit_entries, _delta_objective,
-                    _hard_terms, _loads, _move_core)
+                    PowerBreakdown, apply_move, apply_pins,
+                    batched_hard_loads, build_aux, delta_sweep, evaluate,
+                    init_state, objective, objective_batch, _commit_entries,
+                    _delta_objective, _move_core)
 from .topology import CFNTopology
 
 
@@ -122,17 +122,29 @@ def fixed_layer(problem: PlacementProblem, topo: CFNTopology,
 # Coordinate descent (exact single-VM moves, scored by the delta engine)
 # ---------------------------------------------------------------------------
 
+# objective placeholder for masked-out (SLA-ineligible) destinations: large
+# enough to lose every argmin, small enough to stay finite in float32 sums
+_INELIGIBLE = 1.0e30
+
+
 @jax.jit
 def _sweep(problem: PlacementProblem, aux: PlacementAux,
-           state: PlacementState, positions: jnp.ndarray):
+           state: PlacementState, positions: jnp.ndarray,
+           eligible: Optional[jnp.ndarray] = None):
     """One pass over all free VM positions; each VM moved to its best node.
 
     Destinations are scored by ``delta_sweep`` (one removal + vectorized
-    insertion) instead of broadcasting P full candidate placements."""
+    insertion) instead of broadcasting P full candidate placements.
+    ``eligible`` [R, P] (optional) masks destinations per service row --
+    the SLA hop/eligibility constraint of embed_latency_bounded threaded
+    into the sweep.  ``positions`` may contain repeated rows (shape-bucket
+    padding): re-sweeping a VM is idempotent up to its own argmin."""
 
     def body(state, pos):
         r, v = pos[0], pos[1]
         obj_all = delta_sweep(problem, aux, state, r, v)
+        if eligible is not None:
+            obj_all = jnp.where(eligible[r], obj_all, _INELIGIBLE)
         best = jnp.argmin(obj_all)
         state = apply_move(problem, aux, state, r, v,
                            best.astype(state.X.dtype))
@@ -295,10 +307,7 @@ def _anneal_scan_delta(problem: PlacementProblem, aux: PlacementAux,
     jit: compiles once per problem/chain/step shape, not per solve)."""
     n_chains, R, V = Xc.shape
     Xf = Xc.reshape(n_chains, -1)
-    onehot = jax.nn.one_hot(Xc, problem.P, dtype=jnp.float32)
-    omega, _, lam, theta = jax.vmap(lambda oh: _loads(problem, oh))(onehot)
-    per_net, per_proc, viol = _hard_terms(problem, omega, lam, theta)
-    obj = per_net.sum(-1) + per_proc.sum(-1) + PENALTY * viol
+    omega, theta, lam, obj = batched_hard_loads(problem, Xc)
 
     step_fn = jax.vmap(
         lambda Xf, om, th, lm, ob, j, pn: _chain_step(
@@ -451,6 +460,17 @@ PENALTY_W = 100.0  # relative weight of violation in the relaxed loss
 # Online incremental re-embedding (service churn)
 # ---------------------------------------------------------------------------
 
+def _pad_positions(pos: np.ndarray, m: Optional[int]) -> np.ndarray:
+    """Pad a free-position list to a fixed length by repeating the first row
+    (shape bucketing: a repeated sweep position is a harmless re-sweep, and
+    a fixed length keeps the jitted ``_sweep`` scan on one compiled shape
+    per bucket)."""
+    if m is None or pos.shape[0] == 0 or pos.shape[0] >= m:
+        return pos
+    return np.concatenate(
+        [pos, np.tile(pos[:1], (m - pos.shape[0], 1))])
+
+
 def resolve_incremental(problem: PlacementProblem, prev_X: np.ndarray,
                         key: Optional[jax.Array] = None,
                         changed_rows: Optional[Sequence[int]] = None,
@@ -458,7 +478,10 @@ def resolve_incremental(problem: PlacementProblem, prev_X: np.ndarray,
                         sweeps: int = 2, anneal_steps: int = 600,
                         anneal_chains: int = 8, anneal_t0: float = 5.0,
                         anneal_t1: float = 0.05,
-                        polish_sweeps: int = 2) -> SolveResult:
+                        polish_sweeps: int = 2,
+                        eligible: Optional[np.ndarray] = None,
+                        pad_positions_to: Optional[int] = None
+                        ) -> SolveResult:
     """Warm-start re-solve after service churn: surviving services stay at
     their previous nodes, only the VMs of ``changed_rows`` (new arrivals /
     rows the caller distrusts) are actively re-placed.
@@ -471,6 +494,13 @@ def resolve_incremental(problem: PlacementProblem, prev_X: np.ndarray,
          minimum); without them (a departure), proposals range over ALL
          free VMs with random-restart chains, re-packing survivors;
       3. ``polish_sweeps`` full sweeps over ALL free VMs (monotone).
+
+    ``eligible`` [R, P] bool (optional) restricts each row's destination
+    nodes -- the SLA hop mask of ``embed.embed_latency_bounded`` threaded
+    through every phase (sweep argmins are masked; Metropolis destinations
+    are sampled from each row's eligible set).  ``pad_positions_to`` pads
+    the all-free-VM sweep lists to a fixed length so the jitted sweep
+    compiles once per shape bucket (core.dynamic.OnlineEmbedder).
 
     This is LOCAL re-optimization -- a periodic full-portfolio defrag
     (`solve_cfn`) bounds its drift; see core.dynamic.OnlineEmbedder.
@@ -486,6 +516,13 @@ def resolve_incremental(problem: PlacementProblem, prev_X: np.ndarray,
     free = np.asarray(aux.free_pos)
     if free.shape[0] == 0:  # everything pinned: nothing to re-place
         return _result(problem, state.X, "incremental")
+    el_np = None
+    el_j = None
+    if eligible is not None:
+        el_np = np.asarray(eligible, bool).copy()
+        dead = ~el_np.any(axis=1)
+        el_np[dead] = True          # no eligible node: fall back to all
+        el_j = jnp.asarray(el_np)
     cands = [state.X]
     pos_changed = free[np.isin(free[:, 0], changed_rows)]
 
@@ -493,7 +530,7 @@ def resolve_incremental(problem: PlacementProblem, prev_X: np.ndarray,
     if pos_changed.shape[0]:
         pc = jnp.asarray(pos_changed)
         for _ in range(max(1, sweeps)):
-            state, _ = _sweep(problem, aux, state, pc)
+            state, _ = _sweep(problem, aux, state, pc, el_j)
         cands.append(state.X)
 
     # phase 2: short Metropolis refinement
@@ -506,13 +543,35 @@ def resolve_incremental(problem: PlacementProblem, prev_X: np.ndarray,
         fi = jax.random.randint(kf, (anneal_steps, anneal_chains), 0,
                                 flat.shape[0])
         j_prop = flat[fi]
-        p_prop = jax.random.randint(kp, (anneal_steps, anneal_chains),
-                                    0, P, jnp.int32)
+        if el_np is None:
+            p_prop = jax.random.randint(kp, (anneal_steps, anneal_chains),
+                                        0, P, jnp.int32)
+        else:
+            # destinations sampled from each proposal row's eligible set
+            cnt = el_np.sum(axis=1).astype(np.int32)          # [R] >= 1
+            cand_tbl = np.zeros((problem.R, P), np.int32)
+            for rr in range(problem.R):
+                ids = np.nonzero(el_np[rr])[0]
+                cand_tbl[rr, :len(ids)] = ids
+            rows = j_prop // V
+            u_dst = jax.random.uniform(kp, (anneal_steps, anneal_chains))
+            cnt_j = jnp.asarray(cnt)[rows]
+            idx = jnp.minimum((u_dst * cnt_j).astype(jnp.int32), cnt_j - 1)
+            p_prop = jnp.asarray(cand_tbl)[rows, idx]
         u_prop = jax.random.uniform(ka, (anneal_steps, anneal_chains))
         temps = anneal_t0 * (anneal_t1 / anneal_t0) ** (
             jnp.arange(anneal_steps) / max(1, anneal_steps - 1))
         Xc = jnp.broadcast_to(state.X, (anneal_chains,) + state.X.shape)
-        rand = jax.random.randint(kx, Xc.shape, 0, P, jnp.int32)
+        if el_np is None:
+            rand = jax.random.randint(kx, Xc.shape, 0, P, jnp.int32)
+        else:
+            # restarted chains must also start on eligible nodes
+            u_r = jax.random.uniform(kx, Xc.shape)
+            cnt_rv = jnp.asarray(cnt)[:, None]                # [R, 1]
+            idx_r = jnp.minimum((u_r * cnt_rv).astype(jnp.int32),
+                                cnt_rv - 1)
+            rand = jnp.asarray(cand_tbl)[
+                jnp.arange(problem.R)[None, :, None], idx_r]
         # chain 0 stays warm; the rest restart at the target positions only
         tgt_mask = np.zeros((problem.R, V), dtype=bool)
         tgt_mask[target[:, 0], target[:, 1]] = True
@@ -531,9 +590,9 @@ def resolve_incremental(problem: PlacementProblem, prev_X: np.ndarray,
     history: List[float] = objs + [best_obj]
     if polish_sweeps > 0:
         state = init_state(problem, best_X)
-        pa = jnp.asarray(free)
+        pa = jnp.asarray(_pad_positions(free, pad_positions_to))
         for _ in range(polish_sweeps):
-            state, _ = _sweep(problem, aux, state, pa)
+            state, _ = _sweep(problem, aux, state, pa, el_j)
         obj = float(objective(problem, state.X))
         if obj < best_obj:
             best_obj, best_X = obj, state.X

@@ -9,10 +9,22 @@ The paper's Fig. 1 architecture is a tree:
 Because the substrate is a tree, the route between any two processing nodes is
 unique, so flow conservation (paper Eq. 5) holds by construction once we record
 for every ordered processing-node pair (b, e) which *network* nodes its route
-traverses: ``path_nodes[b, e, n] in {0, 1}``.  Traffic aggregated by network
-node n is then a tensor contraction (see power.py), which is what makes the
-placement objective batchable on accelerator.  A generic BFS router is used so
-meshed cores (e.g. NSFNET, the paper's future work) drop in unchanged.
+traverses.  Real routes are SPARSE -- a metro/core route crosses <= ~15 network
+nodes however large the substrate -- so the canonical representation is a
+padded-CSR route table:
+
+    route_idx[b, e, k]  -- the k-th network node on the (b, e) route
+                           (int32; entries beyond the route's length hold the
+                           sentinel value N, which every consumer masks out)
+    route_len[b, e]     -- number of network nodes on the route (== path_hops)
+
+Traffic aggregated by network node n is then a gather/segment-sum over the
+route table (see power.py), O(P^2 * K) instead of the O(P^2 * N) dense
+incidence contraction -- the representation that keeps city-scale substrates
+(P in the hundreds, see ``city_scale``) on the accelerator hot path.  The
+dense ``path_nodes`` tensor survives only as a test-side reference
+constructor (``dense_path_nodes``).  A generic BFS router is used so meshed
+cores (e.g. NSFNET, the paper's future work) drop in unchanged.
 """
 from __future__ import annotations
 
@@ -50,9 +62,11 @@ class CFNTopology:
     net_names: List[str] = field(default_factory=list)
     net_hw: List[hw.NetworkHW] = field(default_factory=list)
     edges: List[Tuple[str, str]] = field(default_factory=list)
-    # derived
-    path_nodes: np.ndarray | None = None   # [P, P, N] float32
-    path_hops: np.ndarray | None = None    # [P, P] int32 (#network nodes)
+    # derived (padded-CSR route table; see module docstring)
+    route_idx: np.ndarray | None = None    # [P, P, K] int32, pad = N
+    route_len: np.ndarray | None = None    # [P, P] int32 (#network nodes)
+    path_hops: np.ndarray | None = None    # alias of route_len (legacy name)
+    _dense_cache: np.ndarray | None = None
 
     # -- construction ------------------------------------------------------
     def add_proc(self, name: str, h: hw.ProcessingHW, layer: str) -> str:
@@ -84,9 +98,14 @@ class CFNTopology:
     def layer_indices(self, layer: str) -> List[int]:
         return [i for i, l in enumerate(self.proc_layer) if l == layer]
 
+    @property
+    def K(self) -> int:
+        """Route padding width (max network nodes on any route)."""
+        return 0 if self.route_idx is None else self.route_idx.shape[2]
+
     # -- routing -----------------------------------------------------------
     def finalize(self) -> "CFNTopology":
-        """Compute ``path_nodes`` by BFS over the merged graph."""
+        """Compute the padded-CSR route table by BFS over the merged graph."""
         names = list(self.proc_names) + list(self.net_names)
         index: Dict[str, int] = {n: i for i, n in enumerate(names)}
         n_all = len(names)
@@ -97,8 +116,9 @@ class CFNTopology:
             nbrs[ib].append(ia)
 
         P, N = self.P, self.N
-        path_nodes = np.zeros((P, P, N), dtype=np.float32)
-        path_hops = np.zeros((P, P), dtype=np.int32)
+        routes: List[List[List[int]]] = [[[] for _ in range(P)]
+                                         for _ in range(P)]
+        route_len = np.zeros((P, P), dtype=np.int32)
         for b in range(P):
             # BFS from processing node b.
             prev = np.full(n_all, -1, dtype=np.int64)
@@ -119,16 +139,46 @@ class CFNTopology:
                     continue
                 # walk back, collecting intermediate *network* nodes.
                 u = int(prev[e])
-                hops = 0
+                nodes: List[int] = []
                 while u != b and u != -1:
                     if u >= P:  # network node
-                        path_nodes[b, e, u - P] = 1.0
-                        hops += 1
+                        nodes.append(u - P)
                     u = int(prev[u])
-                path_hops[b, e] = hops
-        self.path_nodes = path_nodes
-        self.path_hops = path_hops
+                routes[b][e] = nodes
+                route_len[b, e] = len(nodes)
+        K = max(1, int(route_len.max()))
+        route_idx = np.full((P, P, K), N, dtype=np.int32)
+        for b in range(P):
+            for e in range(P):
+                nodes = routes[b][e]
+                if nodes:
+                    route_idx[b, e, :len(nodes)] = nodes
+        self.route_idx = route_idx
+        self.route_len = route_len
+        self.path_hops = route_len
+        self._dense_cache = None
         return self
+
+    # -- dense reference (tests / oracles only) -----------------------------
+    def dense_path_nodes(self) -> np.ndarray:
+        """Materialize the dense ``[P, P, N]`` path-incidence tensor from the
+        CSR route table.  O(P^2 * N) memory -- NOT used by any production
+        code path; tests and benchmarks use it as the dense reference the
+        sparse engine is checked against."""
+        if self.route_idx is None:
+            raise RuntimeError("finalize() the topology first")
+        P, N, K = self.P, self.N, self.K
+        dense = np.zeros((P, P, N + 1), dtype=np.float32)
+        b, e, _ = np.indices(self.route_idx.shape)
+        dense[b.reshape(-1), e.reshape(-1), self.route_idx.reshape(-1)] = 1.0
+        return dense[:, :, :N]
+
+    @property
+    def path_nodes(self) -> np.ndarray:
+        """Dense incidence tensor (cached); reference/test use only."""
+        if self._dense_cache is None:
+            self._dense_cache = self.dense_path_nodes()
+        return self._dense_cache
 
     # -- parameter vectors (consumed by power.py) ---------------------------
     def proc_param_arrays(self) -> Dict[str, np.ndarray]:
@@ -260,6 +310,84 @@ def nsfnet_topology(n_iot: int = 20, n_zones: int = 4,
     for a, b in NSFNET_EDGES:
         t.connect(f"core{a}", f"core{b}")
     t.connect("cdc0", f"core{cdc_core}")
+    return t.finalize()
+
+
+def city_scale(n_olt: int = 8, onus_per_olt: int = 6, iot_per_onu: int = 5,
+               n_metro: int = 2, n_core: int = 6, n_cdc: int = 2,
+               mf_servers: int = 8, cdc_servers: int = 64) -> CFNTopology:
+    """City-wide PON fabric: the production-scale substrate preset.
+
+    The paper's Fig. 1 tree replicated across a whole city, after the
+    city-wide PON fabrics of arXiv:2005.00877 and the multi-tier fog
+    hierarchies of arXiv:1808.06120:
+
+      * ``n_olt`` access zones, each an OLT serving ``onus_per_olt`` ONU APs
+        with ``iot_per_onu`` IoT devices each, plus one access-fog (AF) node
+        behind dedicated low-end gear;
+      * ``n_metro`` metro router/switch pairs, each aggregating an equal
+        share of the OLT zones and hosting one metro-fog (MF) node;
+      * an ``n_core``-node IP/WDM ring interconnecting the metro sites, with
+        ``n_cdc`` cloud datacenters hanging off opposite sides of the ring.
+
+    Defaults give P = 8*6*5 + 8 + 2 + 2 = 252 processing nodes and N ~ 88
+    network nodes with routes of <= ~15 hops -- the regime where the CSR
+    route table (P^2*K) is ~N/K smaller than the dense incidence tensor
+    (P^2*N).  All knobs scale the fabric up or down (tests use a small
+    instance; benchmarks sweep P).
+    """
+    t = CFNTopology()
+    # processing nodes: IoT first (sources), then fog, then cloud
+    for z in range(n_olt):
+        for o in range(onus_per_olt):
+            for i in range(iot_per_onu):
+                t.add_proc(f"iot{z}_{o}_{i}", hw.IOT_RPI4, LAYER_IOT)
+    for z in range(n_olt):
+        t.add_proc(f"af{z}", hw.AF_I5, LAYER_AF)
+    for m in range(n_metro):
+        t.add_proc(f"mf{m}", hw.scaled(hw.MF_I5, n_servers=mf_servers),
+                   LAYER_MF)
+    for c in range(n_cdc):
+        t.add_proc(f"cdc{c}", hw.scaled(hw.CDC_XEON, n_servers=cdc_servers),
+                   LAYER_CDC)
+
+    # network: access
+    for z in range(n_olt):
+        for o in range(onus_per_olt):
+            t.add_net(f"onu{z}_{o}", hw.ONU_AP)
+        t.add_net(f"olt{z}", hw.OLT)
+        t.add_net(f"af_router{z}", hw.LOW_END_ROUTER)
+        t.add_net(f"af_switch{z}", hw.LOW_END_SWITCH)
+    # metro + core
+    for m in range(n_metro):
+        t.add_net(f"mrouter{m}", hw.METRO_ROUTER)
+        t.add_net(f"mswitch{m}", hw.METRO_SWITCH)
+        t.add_net(f"mf_router{m}", hw.LOW_END_ROUTER)
+        t.add_net(f"mf_switch{m}", hw.LOW_END_SWITCH)
+    for c in range(n_core):
+        t.add_net(f"core{c}", hw.IPWDM_NODE)
+
+    # wiring: access trees
+    for z in range(n_olt):
+        for o in range(onus_per_olt):
+            for i in range(iot_per_onu):
+                t.connect(f"iot{z}_{o}_{i}", f"onu{z}_{o}")
+            t.connect(f"onu{z}_{o}", f"olt{z}")
+        t.connect(f"olt{z}", f"af_router{z}")
+        t.connect(f"af_router{z}", f"af_switch{z}")
+        t.connect(f"af_switch{z}", f"af{z}")
+        t.connect(f"olt{z}", f"mrouter{z % n_metro}")
+    for m in range(n_metro):
+        t.connect(f"mrouter{m}", f"mswitch{m}")
+        t.connect(f"mswitch{m}", f"mf_router{m}")
+        t.connect(f"mf_router{m}", f"mf_switch{m}")
+        t.connect(f"mf_switch{m}", f"mf{m}")
+        t.connect(f"mswitch{m}", f"core{(m * n_core) // max(1, n_metro)}")
+    for c in range(n_core):
+        t.connect(f"core{c}", f"core{(c + 1) % n_core}")
+    for c in range(n_cdc):
+        at = ((c * n_core) // max(1, n_cdc) + n_core // 4) % n_core
+        t.connect(f"cdc{c}", f"core{at}")
     return t.finalize()
 
 

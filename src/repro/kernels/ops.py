@@ -12,7 +12,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from ..core.power import PlacementProblem, apply_pins
+from ..core.power import (PlacementProblem, apply_pins, batched_hard_loads)
 from . import flash_attention as fa
 from . import placement_power as pp
 
@@ -63,13 +63,18 @@ def fused_anneal(problem: PlacementProblem, aux, Xc: jax.Array,
     node, uniform draw); temps [T]; aux = core.power.build_aux(problem).
     Returns (best_X [C, R, V], stats [C, 2] = (best obj, final obj)).
     Chain state (placement + live load tensors) stays resident in VMEM
-    across all T steps -- no per-step objective launch.
+    across all T steps -- no per-step objective launch.  Initial loads are
+    one batched evaluation out here; the kernel only ever touches the
+    compact [P*P, K] route table.
     """
     interpret = _default_interpret() if interpret is None else interpret
     C, R, V = Xc.shape
     Xflat = Xc.reshape(C, -1).astype(jnp.int32)
-    operands = pp.pack_problem(problem)
+    omega0, theta0, lam0, obj0 = batched_hard_loads(problem, Xc)
+    (_, _, F, _, route_flat, proc_params, net_params) = \
+        pp.pack_problem(problem)
     bX, stats = pp.fused_anneal_tpu(
         Xflat, j_prop.astype(jnp.int32), p_prop.astype(jnp.int32), u_prop,
-        temps, *pp.pack_aux(aux), *operands, interpret=interpret)
+        temps, *pp.pack_aux(aux), omega0, theta0, lam0, obj0,
+        F, route_flat, proc_params, net_params, interpret=interpret)
     return bX.reshape(C, R, V), stats

@@ -20,7 +20,15 @@ Two kernels share the Eq.(1)/(2) math:
     the [bc] chains in a block.  Proposals (free-VM index, destination,
     uniform draw) are precomputed outside and streamed from VMEM.
 
-Blocked over candidates/chains: problem tensors (path incidence, device
+Routes enter both kernels as the padded-CSR table ``route_flat [P*P, K]``
+(float32 node ids, sentinel N marks padding) instead of the dense
+``[P*P, N]`` incidence tensor: a route lookup is a one-hot row-select matmul
+returning <= K ids, expanded against an N-iota only where traffic actually
+flows.  At city scale (P ~ 256, N ~ 90, K ~ 14) the table shrinks from
+P^2*N*4B ~ 22 MB -- past VMEM -- to P^2*K*4B ~ 3.5 MB, which is what lets
+chain state PLUS routes stay VMEM-resident in the fused kernel.
+
+Blocked over candidates/chains: problem tensors (route table, device
 parameters, per-VM incident-link tables) are broadcast to every block via
 constant index maps.  Oracles: kernels/ref.py::placement_objective_ref for
 the full kernel, ref.placement_delta_ref (float64) for the fused deltas;
@@ -66,11 +74,16 @@ def _power_terms(omega, theta, lam, pp, nn):
     return net + proc + PENALTY * violation, net, proc, violation
 
 
-def _block_loads(X, U, W, F, H, path, *, P: int, bc: int):
+def _block_loads(X, U, W, F, H, route, *, P: int, N: int, K: int, bc: int):
     """One-hot load contractions for a [bc]-placement block.
 
-    X [bc, J]; U/W [bc, L] link-endpoint placements; returns
-    (omega [bc, P], theta [bc, P], lam [bc, N]).
+    X [bc, J]; U/W [bc, L] link-endpoint placements; route [P*P, K] CSR
+    node-id table (float32 ids, sentinel N); returns (omega [bc, P],
+    theta [bc, P], lam [bc, N]).
+
+    lambda is per-link over the route table: a two-stage one-hot matmul
+    gathers each link's <= K route node ids, and a final N-iota compare
+    accumulates the bitrates -- no [P*P, N] operand in the kernel.
     """
     iota_p = jax.lax.broadcasted_iota(jnp.int32, (1, 1, P), 2)
     oh_x = (X[:, :, None] == iota_p).astype(jnp.float32)        # [bc, J, P]
@@ -80,13 +93,17 @@ def _block_loads(X, U, W, F, H, path, *, P: int, bc: int):
 
     omega = jax.lax.dot_general(
         oh_x, F, (((1,), (0,)), ((), ())))                       # [bc, P]
-    uh = oh_u * H[None, :, None]
-    tm = jax.lax.dot_general(
-        uh, oh_w, (((1,), (1,)), ((0,), (0,))))                  # [bc, P, P]
-    lam = jax.lax.dot_general(
-        tm.reshape(bc, P * P), path, (((1,), (0,)), ((), ())))   # [bc, N]
+    # lam: row-select the source side, then contract the destination side
+    rowsel = jax.lax.dot_general(
+        oh_u.reshape(bc * L, P), route.reshape(P, P * K),
+        (((1,), (0,)), ((), ()))).reshape(bc, L, P, K)
+    ids = jnp.einsum("clq,clqk->clk", oh_w, rowsel)              # [bc, L, K]
+    iota_n = jax.lax.broadcasted_iota(jnp.int32, (bc, L, K, N), 3)
+    oh_n = (iota_n == ids.astype(jnp.int32)[..., None]).astype(jnp.float32)
+    lam = jnp.einsum("l,clkn->cn", H, oh_n)                      # [bc, N]
     # theta: traffic touching node p (in + out minus double-counted
     # intra-node traffic)
+    uh = oh_u * H[None, :, None]
     ones = jnp.ones((bc, L), jnp.float32)
     t_out = jax.lax.dot_general(uh, ones, (((1,), (1,)), ((0,), (0,))))
     wh = oh_w * H[None, :, None]
@@ -97,18 +114,19 @@ def _block_loads(X, U, W, F, H, path, *, P: int, bc: int):
 
 
 def _kernel(x_ref, u_ref, w_ref,
-            f_ref, h_ref, path_ref, pp_ref, nn_ref,
-            out_ref, *, P: int, N: int, bc: int):
+            f_ref, h_ref, route_ref, pp_ref, nn_ref,
+            out_ref, *, P: int, N: int, K: int, bc: int):
     X = x_ref[...]                                   # [bc, J]  int32
     U = u_ref[...]                                   # [bc, L]  int32
     W = w_ref[...]                                   # [bc, L]  int32
     F = f_ref[...]                                   # [J]
     H = h_ref[...]                                   # [L]
-    path = path_ref[...]                             # [P*P, N]
+    route = route_ref[...]                           # [P*P, K] float ids
     pp = pp_ref[...]                                 # [9, P] processing params
     nn = nn_ref[...]                                 # [5, N] network params
 
-    omega, theta, lam = _block_loads(X, U, W, F, H, path, P=P, bc=bc)
+    omega, theta, lam = _block_loads(X, U, W, F, H, route,
+                                     P=P, N=N, K=K, bc=bc)
     obj, net, proc, violation = _power_terms(omega, theta, lam, pp, nn)
     out_ref[:, 0] = obj
     out_ref[:, 1] = net
@@ -118,20 +136,21 @@ def _kernel(x_ref, u_ref, w_ref,
 
 def placement_power_tpu(X: jax.Array, link_src: jax.Array,
                         link_dst: jax.Array, F: jax.Array, H: jax.Array,
-                        path_flat: jax.Array, proc_params: jax.Array,
+                        route_flat: jax.Array, proc_params: jax.Array,
                         net_params: jax.Array, *, bc: int = 256,
                         interpret: bool = False) -> jax.Array:
     """Evaluate B candidate placements.
 
     X [B, J=R*V] int32 (pins already applied); link_src/dst [L] indices into
-    the flattened VM space; F [J] GFLOPS; H [L] Mbps; path_flat [P*P, N];
-    proc_params [9, P]; net_params [5, N].
+    the flattened VM space; F [J] GFLOPS; H [L] Mbps; route_flat [P*P, K]
+    float32 CSR node ids (sentinel N); proc_params [9, P]; net_params [5, N].
     Returns [B, 4]: (objective, net W, proc W, violation).
     """
     B, J = X.shape
     L = link_src.shape[0]
     P = proc_params.shape[1]
     N = net_params.shape[1]
+    K = route_flat.shape[1]
     bc = min(bc, max(B, 8))
     pad = (-B) % bc
     if pad:
@@ -143,7 +162,7 @@ def placement_power_tpu(X: jax.Array, link_src: jax.Array,
     grid = (Bp // bc,)
     const = lambda i: (0, 0)
     out = pl.pallas_call(
-        functools.partial(_kernel, P=P, N=N, bc=bc),
+        functools.partial(_kernel, P=P, N=N, K=K, bc=bc),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bc, J), lambda i: (i, 0)),
@@ -151,27 +170,30 @@ def placement_power_tpu(X: jax.Array, link_src: jax.Array,
             pl.BlockSpec((bc, L), lambda i: (i, 0)),
             pl.BlockSpec((J,), lambda i: (0,)),
             pl.BlockSpec((L,), lambda i: (0,)),
-            pl.BlockSpec((P * P, N), const),
+            pl.BlockSpec((P * P, K), const),
             pl.BlockSpec((9, P), const),
             pl.BlockSpec((5, N), const),
         ],
         out_specs=pl.BlockSpec((bc, 4), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((Bp, 4), jnp.float32),
         interpret=interpret,
-    )(X, U, W, F, H, path_flat, proc_params, net_params)
+    )(X, U, W, F, H, route_flat, proc_params, net_params)
     return out[:B]
 
 
 def pack_problem(problem) -> Tuple[jax.Array, ...]:
-    """Flatten a core.power.PlacementProblem into kernel operands."""
+    """Flatten a core.power.PlacementProblem into kernel operands.
+
+    The route table ships as float32 node ids so in-kernel route lookups are
+    one-hot matmuls; ids (< N + 1) are exactly representable."""
     p = problem
-    path_flat = p.path_nodes.reshape(p.P * p.P, p.N)
+    route_flat = p.route_idx.reshape(p.P * p.P, p.K).astype(jnp.float32)
     proc_params = jnp.stack([p.E, p.C_pr, p.NS, p.pi_pr, p.pue_pr,
                              p.EL, p.C_lan, p.pi_lan, p.lan_share])
     net_params = jnp.stack([p.eps, p.C_net, p.pi_net, p.pue_net,
                             p.idle_share])
     F = p.F.reshape(-1)
-    return (p.link_src, p.link_dst, F, p.link_h, path_flat,
+    return (p.link_src, p.link_dst, F, p.link_h, route_flat,
             proc_params, net_params)
 
 
@@ -179,18 +201,23 @@ def pack_problem(problem) -> Tuple[jax.Array, ...]:
 # Fused annealing kernel
 # ---------------------------------------------------------------------------
 
-def _fused_kernel(x_ref, u_ref, w_ref, j_ref, pn_ref, un_ref, temps_ref,
-                  f_ref, h_ref, io_ref, ih_ref, is_ref, path_ref, pp_ref,
-                  nn_ref, bx_ref, stat_ref, *,
-                  P: int, N: int, J: int, D: int, T: int, bc: int):
+def _fused_kernel(x_ref, j_ref, pn_ref, un_ref, temps_ref,
+                  f_ref, io_ref, ih_ref, is_ref, route_ref, pp_ref,
+                  nn_ref, om_ref, th_ref, lm_ref, ob_ref, bx_ref, stat_ref, *,
+                  P: int, N: int, K: int, J: int, D: int, T: int, bc: int):
     """Whole Metropolis chain for a [bc]-chain block, state in VMEM.
 
     All per-step gathers are expressed as iota-compare one-hots +
-    contractions so they vectorize on TPU (no dynamic scatter/gather)."""
+    contractions so they vectorize on TPU (no dynamic scatter/gather).
+    Routes come from the compact CSR table (``route_ref [P*P, K]`` float
+    ids): route lookups are one-hot row-select matmuls followed by an
+    N-iota expansion of <= K ids -- the table is K/N the size of the dense
+    incidence tensor, which is what keeps chain state + routes VMEM-resident
+    at P >> 100.  Initial loads (omega/theta/lam/obj) are computed outside
+    the kernel (one batched evaluation) and streamed in."""
     X0 = x_ref[...]                                  # [bc, J] int32
     F = f_ref[...]                                   # [J]
-    H = h_ref[...]                                   # [L]
-    path = path_ref[...]                             # [P*P, N]
+    route = route_ref[...]                           # [P*P, K] float ids
     pp = pp_ref[...]                                 # [9, P]
     nn = nn_ref[...]                                 # [5, N]
     inc_o = io_ref[...]                              # [J, D] int32 other VM
@@ -207,14 +234,16 @@ def _fused_kernel(x_ref, u_ref, w_ref, j_ref, pn_ref, un_ref, temps_ref,
     cap_pr = NS * C_pr
     share_pi = lan_share * pi_lan
 
-    omega, theta, lam = _block_loads(X0, u_ref[...], w_ref[...], F, H, path,
-                                     P=P, bc=bc)
-    obj = _power_terms(omega, theta, lam, pp, nn)[0]  # [bc]
+    omega = om_ref[...]                              # [bc, P]
+    theta = th_ref[...]                              # [bc, P]
+    lam = lm_ref[...]                                # [bc, N]
+    obj = ob_ref[...]                                # [bc]
 
     iota_J = jax.lax.broadcasted_iota(jnp.int32, (bc, J), 1)
     iota_P = jax.lax.broadcasted_iota(jnp.int32, (bc, P), 1)
     iota_DJ = jax.lax.broadcasted_iota(jnp.int32, (bc, D, J), 2)
     iota_DPP = jax.lax.broadcasted_iota(jnp.int32, (bc, 2 * D, P * P), 2)
+    iota_DKN = jax.lax.broadcasted_iota(jnp.int32, (bc, 2 * D, K, N), 3)
     relu = lambda x: jnp.maximum(x, 0.0)
     snap = lambda x, e: jnp.where(jnp.abs(x) < e, 0.0, x)
 
@@ -267,10 +296,13 @@ def _fused_kernel(x_ref, u_ref, w_ref, j_ref, pn_ref, un_ref, temps_ref,
              jnp.broadcast_to(p_new[:, None], (bc, D))], axis=1)
         idx2 = jnp.where(sk2, a2 * P + q2, q2 * P + a2)              # [bc,2D]
         oh_rt = (iota_DPP == idx2[:, :, None]).astype(jnp.float32)
-        rts = jax.lax.dot_general(
-            oh_rt.reshape(bc * 2 * D, P * P), path,
-            (((1,), (0,)), ((), ()))).reshape(bc, 2 * D, N)
-        d_lam = jnp.einsum("cd,cdn->cn", hh, rts)
+        rt_ids = jax.lax.dot_general(
+            oh_rt.reshape(bc * 2 * D, P * P), route,
+            (((1,), (0,)), ((), ()))).reshape(bc, 2 * D, K)
+        # expand <= K ids against the N-iota (sentinel N never matches)
+        oh_n = (iota_DKN == rt_ids.astype(jnp.int32)[..., None]
+                ).astype(jnp.float32)                        # [bc, 2D, K, N]
+        d_lam = jnp.einsum("cd,cdkn->cn", hh, oh_n)
 
         omega2 = snap(omega + F_j[:, None] * (oh_pn - oh_po), SNAP_GFLOPS)
         theta2 = snap(theta + d_theta, SNAP_MBPS)
@@ -323,23 +355,27 @@ def fused_anneal_tpu(X: jax.Array, j_prop: jax.Array, p_prop: jax.Array,
                      u_prop: jax.Array, temps: jax.Array,
                      inc_other: jax.Array, inc_h: jax.Array,
                      inc_src: jax.Array,
-                     link_src: jax.Array, link_dst: jax.Array,
-                     F: jax.Array, H: jax.Array, path_flat: jax.Array,
+                     omega0: jax.Array, theta0: jax.Array, lam0: jax.Array,
+                     obj0: jax.Array,
+                     F: jax.Array, route_flat: jax.Array,
                      proc_params: jax.Array, net_params: jax.Array, *,
                      bc: int = 8, interpret: bool = False):
     """Run full Metropolis chains in one kernel launch.
 
     X [C, J] int32 starting placements (pins applied); j_prop/p_prop/u_prop
     [C, T] per-step proposals; temps [T]; inc_* [J, D] per-VM incident-link
-    tables (core.power.build_aux).  Returns (best_X [C, J] int32,
-    stats [C, 2] = (best objective, final objective)).
+    tables (core.power.build_aux); omega0/theta0 [C, P], lam0 [C, N],
+    obj0 [C] the starting loads/objective (kernels.ops computes them with
+    one batched evaluation); route_flat [P*P, K] float32 CSR node ids.
+    Returns (best_X [C, J] int32, stats [C, 2] = (best objective, final
+    objective)).
     """
     C, J = X.shape
     T = temps.shape[0]
     D = inc_h.shape[1]
-    L = link_src.shape[0]
     P = proc_params.shape[1]
     N = net_params.shape[1]
+    K = route_flat.shape[1]
     bc = min(bc, max(C, 1))
     pad = (-C) % bc
     if pad:
@@ -347,32 +383,36 @@ def fused_anneal_tpu(X: jax.Array, j_prop: jax.Array, p_prop: jax.Array,
         j_prop = jnp.pad(j_prop, ((0, pad), (0, 0)))
         p_prop = jnp.pad(p_prop, ((0, pad), (0, 0)))
         u_prop = jnp.pad(u_prop, ((0, pad), (0, 0)), constant_values=1.0)
+        omega0 = jnp.pad(omega0, ((0, pad), (0, 0)))
+        theta0 = jnp.pad(theta0, ((0, pad), (0, 0)))
+        lam0 = jnp.pad(lam0, ((0, pad), (0, 0)))
+        obj0 = jnp.pad(obj0, ((0, pad),))
     Cp = C + pad
-    U = jnp.take(X, link_src, axis=1)
-    W = jnp.take(X, link_dst, axis=1)
 
     grid = (Cp // bc,)
     row = lambda i: (i, 0)
     const = lambda i: (0, 0)
     bX, stats = pl.pallas_call(
-        functools.partial(_fused_kernel, P=P, N=N, J=J, D=D, T=T, bc=bc),
+        functools.partial(_fused_kernel, P=P, N=N, K=K, J=J, D=D, T=T,
+                          bc=bc),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bc, J), row),
-            pl.BlockSpec((bc, L), row),
-            pl.BlockSpec((bc, L), row),
             pl.BlockSpec((bc, T), row),
             pl.BlockSpec((bc, T), row),
             pl.BlockSpec((bc, T), row),
             pl.BlockSpec((T,), lambda i: (0,)),
             pl.BlockSpec((J,), lambda i: (0,)),
-            pl.BlockSpec((L,), lambda i: (0,)),
             pl.BlockSpec((J, D), const),
             pl.BlockSpec((J, D), const),
             pl.BlockSpec((J, D), const),
-            pl.BlockSpec((P * P, N), const),
+            pl.BlockSpec((P * P, K), const),
             pl.BlockSpec((9, P), const),
             pl.BlockSpec((5, N), const),
+            pl.BlockSpec((bc, P), row),
+            pl.BlockSpec((bc, P), row),
+            pl.BlockSpec((bc, N), row),
+            pl.BlockSpec((bc,), lambda i: (i,)),
         ],
         out_specs=[
             pl.BlockSpec((bc, J), row),
@@ -383,8 +423,9 @@ def fused_anneal_tpu(X: jax.Array, j_prop: jax.Array, p_prop: jax.Array,
             jax.ShapeDtypeStruct((Cp, 2), jnp.float32),
         ],
         interpret=interpret,
-    )(X, U, W, j_prop, p_prop, u_prop, temps, F, H,
-      inc_other, inc_h, inc_src, path_flat, proc_params, net_params)
+    )(X, j_prop, p_prop, u_prop, temps, F,
+      inc_other, inc_h, inc_src, route_flat, proc_params, net_params,
+      omega0, theta0, lam0, obj0)
     return bX[:C], stats[:C]
 
 

@@ -6,11 +6,15 @@
   * placement_objective_ref: the paper's Eq.(1)+(2) objective from
     core.power, evaluated with vmap -- the "CPLEX objective" ground truth.
   * placement_objective_f64 / placement_delta_ref: float64 numpy
-    re-implementation of Eq.(1)+(2).  The delta oracle computes
-    objective(X') - objective(X) at float64, where the subtraction is exact
-    to ~1e-10 -- the yardstick for the incremental delta engine
-    (core.power.delta_move) and the fused annealing kernel, whose float32
-    deltas must agree to fp32 tolerance.
+    re-implementation of Eq.(1)+(2) on the SPARSE (padded-CSR) route form:
+    lambda accumulates each traffic-matrix entry along its route's <= K node
+    ids.  The delta oracle computes objective(X') - objective(X) at float64,
+    where the subtraction is exact to ~1e-10 -- the yardstick for the
+    incremental delta engine (core.power.delta_move) and the fused annealing
+    kernel, whose float32 deltas must agree to fp32 tolerance.  The dense
+    [P, P, N] incidence einsum survives only in the tests
+    (tests/test_sparse_routes.py builds it from topology.dense_path_nodes and
+    cross-checks this oracle against it).
 """
 from __future__ import annotations
 
@@ -50,8 +54,29 @@ def placement_objective_ref(problem: PlacementProblem,
     return jax.vmap(one)(Xb)
 
 
-def placement_objective_f64(problem: PlacementProblem, X) -> float:
-    """Eq.(1)+(2) objective of one placement at float64 (numpy)."""
+def lam_f64_sparse(problem: PlacementProblem, tm: np.ndarray) -> np.ndarray:
+    """lambda [N] from a traffic matrix [P, P] at float64, accumulated over
+    the CSR route table (the sparse counterpart of the dense
+    ``einsum("pq,pqn->n", tm, path_nodes)``)."""
+    p = problem
+    rt = np.asarray(p.route_idx)                              # [P, P, K]
+    K = rt.shape[2]
+    buf = np.zeros(p.N + 1, np.float64)
+    np.add.at(buf, rt.reshape(-1),
+              np.repeat(np.asarray(tm, np.float64).reshape(-1), K))
+    return buf[:p.N]
+
+
+def placement_objective_f64(problem: PlacementProblem, X,
+                            path_dense: Optional[np.ndarray] = None
+                            ) -> float:
+    """Eq.(1)+(2) objective of one placement at float64 (numpy).
+
+    By default lambda comes from the sparse CSR route table; pass
+    ``path_dense`` (a [P, P, N] incidence tensor from
+    ``topology.dense_path_nodes()``) to evaluate the SAME term assembly on
+    the dense form -- the sparse-vs-dense objective cross-check
+    benchmarks/kernel_bench.py::sparse_routes reports."""
     p = problem
     P = p.P
     X = np.where(np.asarray(p.fixed_mask), np.asarray(p.fixed_node),
@@ -65,7 +90,10 @@ def placement_objective_f64(problem: PlacementProblem, X) -> float:
     omega = np.einsum("rvp,rv->p", onehot, F)
     tm = np.einsum("l,lp,lq->pq", h, u, w)
     intra = np.einsum("l,lp,lp->p", h, u, w)
-    lam = np.einsum("pq,pqn->n", tm, np.asarray(p.path_nodes, np.float64))
+    if path_dense is None:
+        lam = lam_f64_sparse(p, tm)
+    else:
+        lam = np.einsum("pq,pqn->n", tm, np.asarray(path_dense, np.float64))
     theta = (u.T @ h) + (w.T @ h) - intra
 
     g = lambda a: np.asarray(a, np.float64)

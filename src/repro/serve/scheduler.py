@@ -47,25 +47,33 @@ class Placement:
 
 class EnergyAwareScheduler:
     def __init__(self, topo: CFNTopology, method: str = "cfn-milp",
-                 defrag_every: int = 16):
+                 defrag_every: int = 16, max_hops: Optional[int] = None,
+                 admit_power_budget_w: Optional[float] = None):
         self.topo = topo
         self.method = method
         self.services: List[Service] = []
+        self.rejected: List[str] = []   # names refused by admission control
         self._engine = cfn_dynamic.OnlineEmbedder(
-            topo, defrag_every=defrag_every, method=method)
+            topo, defrag_every=defrag_every, method=method,
+            max_hops=max_hops, admit_power_budget_w=admit_power_budget_w)
         self._by_sid: Dict[int, Service] = {}
 
     # -- churn events ------------------------------------------------------
     def add_service(self, svc: Service) -> List[Placement]:
         """Admit a service: one incremental re-embedding event.  Names key
-        the removal API, so they must be unique among live services."""
+        the removal API, so they must be unique among live services.  With
+        SLA admission control configured (max_hops / power budget), a
+        refused service is recorded in ``self.rejected`` and the fleet
+        placement is returned unchanged."""
         if any(s.name == svc.name for s in self.services):
             raise ValueError(f"service named {svc.name!r} is already live")
         vs = cfn_vsr.from_architecture(
             svc.arch, tokens_per_s=svc.tokens_per_s, n_stages=svc.n_stages,
             source_node=svc.source_node)
+        if self._engine.add(vs) is None:
+            self.rejected.append(svc.name)
+            return self.placements()
         self.services.append(svc)
-        self._engine.add(vs)
         self._by_sid[self._engine.sids[-1]] = svc
         return self.placements()
 

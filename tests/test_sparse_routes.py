@@ -1,0 +1,367 @@
+"""CSR route-table parity suite: the padded-CSR representation
+(topology.route_idx, threaded through core.power / solvers / kernels) must
+reproduce the dense [P, P, N] path-incidence semantics EXACTLY.
+
+The dense tensor no longer exists in production -- it is rebuilt here via
+``CFNTopology.dense_path_nodes()`` (the test-side reference constructor) and
+every production quantity (lam, delta_move, delta_sweep, attribute_power) is
+checked against dense references and the float64 oracle in kernels/ref.py,
+under random topologies (random access trees + ring cores) and churn traces.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro.core import dynamic, hardware as hw, power, solvers, topology, vsr
+from repro.kernels import ref
+
+SETTINGS = dict(deadline=None, max_examples=8)
+
+
+def random_topology(seed: int, n_iot: int = 6, n_net_extra: int = 4
+                    ) -> topology.CFNTopology:
+    """A random CFN-shaped substrate: a random tree of network nodes with
+    IoT/fog/cloud processing nodes attached at random points."""
+    rng = np.random.default_rng(seed)
+    t = topology.CFNTopology()
+    for i in range(n_iot):
+        t.add_proc(f"iot{i}", hw.IOT_RPI4, topology.LAYER_IOT)
+    t.add_proc("af0", hw.AF_I5, topology.LAYER_AF)
+    t.add_proc("mf0", hw.MF_I5, topology.LAYER_MF)
+    t.add_proc("cdc0", hw.CDC_XEON, topology.LAYER_CDC)
+    n_net = 3 + n_net_extra
+    kinds = [hw.ONU_AP, hw.OLT, hw.METRO_ROUTER, hw.METRO_SWITCH,
+             hw.IPWDM_NODE, hw.LOW_END_ROUTER, hw.LOW_END_SWITCH]
+    for n in range(n_net):
+        t.add_net(f"net{n}", kinds[int(rng.integers(0, len(kinds)))])
+    # random tree over network nodes (node i attaches to a previous node)
+    for n in range(1, n_net):
+        t.connect(f"net{n}", f"net{int(rng.integers(0, n))}")
+    # every processing node hangs off a random network node
+    for name in t.proc_names:
+        t.connect(name, f"net{int(rng.integers(0, n_net))}")
+    # occasionally close a loop (meshed core: routes stay shortest-path)
+    if rng.random() < 0.5 and n_net >= 4:
+        a, b = rng.choice(n_net, size=2, replace=False)
+        t.connect(f"net{a}", f"net{b}")
+    return t.finalize()
+
+
+def _dense_lam_f64(topo, prob, tm):
+    dense = topo.dense_path_nodes().astype(np.float64)
+    return np.einsum("pq,pqn->n", np.asarray(tm, np.float64), dense)
+
+
+# ---------------------------------------------------------------------------
+# representation-level parity
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 10_000))
+def test_csr_table_matches_dense(seed):
+    """route_idx/route_len rebuild exactly the dense incidence tensor."""
+    t = random_topology(seed)
+    dense = t.dense_path_nodes()
+    assert t.route_idx.shape == (t.P, t.P, t.K)
+    # row sums == route lengths == hop counts
+    np.testing.assert_array_equal(dense.sum(-1), t.route_len)
+    np.testing.assert_array_equal(t.route_len, t.path_hops)
+    # sentinel-padded: ids beyond route_len are exactly N
+    k = np.arange(t.K)[None, None, :]
+    pad = k >= t.route_len[:, :, None]
+    assert np.all(t.route_idx[pad] == t.N)
+    assert np.all(t.route_idx[~pad] < t.N)
+    # routes are symmetric as SETS (dense symmetric)
+    np.testing.assert_array_equal(dense, dense.transpose(1, 0, 2))
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 5))
+def test_lam_csr_vs_dense(seed, n):
+    """Production lambda (both the per-link hard path and the tm
+    segment-sum) equals the dense einsum on random topologies."""
+    t = random_topology(seed)
+    vs = vsr.random_vsrs(n, rng=seed, source_nodes=[0])
+    prob = power.build_problem(t, vs)
+    rng = np.random.default_rng(seed)
+    X = rng.integers(0, prob.P, size=(prob.R, prob.V)).astype(np.int32)
+    Xp = np.asarray(power.apply_pins(prob, jnp.asarray(X)))
+    onehot = jax.nn.one_hot(jnp.asarray(Xp), prob.P, dtype=jnp.float32)
+    om, tm, lam_links, th = power._loads(prob, onehot,
+                                         jnp.asarray(Xp.reshape(-1)))
+    _, _, lam_tm, _ = power._loads(prob, onehot)
+    want = _dense_lam_f64(t, prob, np.asarray(tm))
+    np.testing.assert_allclose(np.asarray(lam_links), want,
+                               rtol=1e-5, atol=1e-2)
+    np.testing.assert_allclose(np.asarray(lam_tm), want,
+                               rtol=1e-5, atol=1e-2)
+    # f64 oracle's sparse lambda is exact vs the dense f64 contraction
+    lam_f64 = ref.lam_f64_sparse(prob, np.asarray(tm, np.float64))
+    np.testing.assert_allclose(lam_f64, want, rtol=1e-12, atol=1e-9)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 10_000))
+def test_objective_f64_sparse_vs_dense(seed):
+    """The f64 oracle on the sparse form == an independent dense-form f64
+    objective, bit-tight (same placement, same terms)."""
+    t = random_topology(seed)
+    vs = vsr.random_vsrs(3, rng=seed, source_nodes=[0])
+    prob = power.build_problem(t, vs)
+    rng = np.random.default_rng(seed)
+    X = rng.integers(0, prob.P, size=(prob.R, prob.V)).astype(np.int32)
+    got = ref.placement_objective_f64(prob, X)
+
+    # independent dense reference
+    p = prob
+    Xp = np.where(np.asarray(p.fixed_mask), np.asarray(p.fixed_node), X)
+    onehot = np.eye(p.P, dtype=np.float64)[Xp]
+    F = np.asarray(p.F, np.float64)
+    h = np.asarray(p.link_h, np.float64)
+    flat = onehot.reshape(-1, p.P)
+    u, w = flat[np.asarray(p.link_src)], flat[np.asarray(p.link_dst)]
+    omega = np.einsum("rvp,rv->p", onehot, F)
+    tm = np.einsum("l,lp,lq->pq", h, u, w)
+    intra = np.einsum("l,lp,lp->p", h, u, w)
+    lam = _dense_lam_f64(t, prob, tm)
+    theta = (u.T @ h) + (w.T @ h) - intra
+    g = lambda a: np.asarray(a, np.float64)
+    n_srv = np.ceil(omega / g(p.C_pr))
+    beta = (lam > power.ACTIVE_EPS).astype(np.float64)
+    phi = ((omega > power.ACTIVE_EPS)
+           | (theta > power.ACTIVE_EPS)).astype(np.float64)
+    per_net = g(p.pue_net) * (g(p.eps) * lam / 1e3
+                              + beta * g(p.idle_share) * g(p.pi_net))
+    per_proc = g(p.pue_pr) * (g(p.E) * omega + n_srv * g(p.pi_pr)
+                              + g(p.EL) * theta / 1e3
+                              + phi * g(p.lan_share) * g(p.pi_lan))
+    relu = lambda x: np.maximum(x, 0.0)
+    viol = (relu(omega - g(p.NS) * g(p.C_pr)).sum()
+            + relu(lam / 1e3 - g(p.C_net)).sum()
+            + relu(theta / 1e3 - g(p.C_lan)).sum())
+    want = float(per_net.sum() + per_proc.sum() + power.PENALTY * viol)
+    assert abs(got - want) <= 1e-9 * max(1.0, abs(want))
+
+
+# ---------------------------------------------------------------------------
+# delta engine on the CSR form
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 10_000))
+def test_delta_move_f64_oracle_random_topology(seed):
+    """delta_move on the CSR tables matches the f64 oracle along a random
+    move sequence on a random topology."""
+    t = random_topology(seed)
+    vs = vsr.random_vsrs(4, rng=seed, source_nodes=[0])
+    prob = power.build_problem(t, vs)
+    aux = power.build_aux(prob)
+    rng = np.random.default_rng(seed)
+    X = rng.integers(0, prob.P, size=(prob.R, prob.V)).astype(np.int32)
+    st_ = power.init_state(prob, jnp.asarray(X))
+    free = np.asarray(aux.free_pos)
+    for _ in range(12):
+        r, v = free[rng.integers(0, len(free))]
+        p_new = int(rng.integers(0, prob.P))
+        got = float(power.delta_move(prob, aux, st_, int(r), int(v), p_new))
+        want = ref.placement_delta_ref(prob, np.asarray(st_.X),
+                                       int(r), int(v), p_new)
+        assert abs(got - want) <= 5e-2, (r, v, p_new, got, want)
+        st_ = power.apply_move(prob, aux, st_, int(r), int(v), p_new)
+    # committed lam stays exact vs a fresh rebuild
+    fresh = power.init_state(prob, st_.X)
+    np.testing.assert_allclose(np.asarray(st_.lam), np.asarray(fresh.lam),
+                               rtol=1e-5, atol=1e-2)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 10_000))
+def test_delta_sweep_vs_dense_broadcast(seed):
+    """delta_sweep (CSR insertion scoring) == objective_batch over the P
+    explicitly-broadcast candidates."""
+    t = random_topology(seed)
+    vs = vsr.random_vsrs(3, rng=seed, source_nodes=[0])
+    prob = power.build_problem(t, vs)
+    aux = power.build_aux(prob)
+    rng = np.random.default_rng(seed)
+    X = rng.integers(0, prob.P, size=(prob.R, prob.V)).astype(np.int32)
+    st_ = power.init_state(prob, jnp.asarray(power.apply_pins(
+        prob, jnp.asarray(X))))
+    free = np.asarray(aux.free_pos)
+    r, v = free[rng.integers(0, len(free))]
+    got = np.asarray(power.delta_sweep(prob, aux, st_, int(r), int(v)))
+    cand = np.broadcast_to(np.asarray(st_.X),
+                           (prob.P,) + st_.X.shape).copy()
+    cand[:, r, v] = np.arange(prob.P)
+    want = np.asarray(power.objective_batch(prob, jnp.asarray(cand)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=5e-2)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 10_000))
+def test_attribute_power_sums_random_topology(seed):
+    """Per-service attribution sums exactly to the fleet total on random
+    topologies (service_loads runs on the CSR tables)."""
+    t = random_topology(seed)
+    vs = vsr.random_vsrs(4, rng=seed, source_nodes=[0])
+    prob = power.build_problem(t, vs)
+    rng = np.random.default_rng(seed)
+    X = rng.integers(0, prob.P, size=(prob.R, prob.V)).astype(np.int32)
+    bd = power.evaluate(prob, jnp.asarray(power.apply_pins(
+        prob, jnp.asarray(X))))
+    per = power.attribute_power(prob, X, bd)
+    assert abs(per.sum() - float(bd.total)) <= 1e-6 * max(1.0,
+                                                          float(bd.total))
+
+
+# ---------------------------------------------------------------------------
+# shape bucketing + SLA admission (solver/online layer)
+# ---------------------------------------------------------------------------
+
+def test_padded_problem_is_load_invariant():
+    """Bucket pad rows (zero-demand, fully pinned) change NOTHING: same
+    objective, same loads, zero extra free positions."""
+    t = topology.paper_topology()
+    vs = vsr.random_vsrs(5, rng=3, source_nodes=[0])
+    prob = power.build_problem(t, vs)
+    prob_p = power.build_problem(t, vs, pad_to_rows=8)
+    assert prob_p.R == 8 and prob.R == 5
+    aux, aux_p = power.build_aux(prob), power.build_aux(prob_p)
+    assert aux.free_pos.shape[0] == aux_p.free_pos.shape[0]
+    rng = np.random.default_rng(0)
+    X = rng.integers(0, prob.P, size=(5, prob.V)).astype(np.int32)
+    Xp = np.concatenate([X, np.zeros((3, prob.V), np.int32)])
+    o1 = float(power.objective(prob, jnp.asarray(X)))
+    o2 = float(power.objective(prob_p, jnp.asarray(Xp)))
+    assert abs(o1 - o2) <= 1e-5 * max(1.0, abs(o1))
+    s1 = power.init_state(prob, jnp.asarray(X))
+    s2 = power.init_state(prob_p, jnp.asarray(Xp))
+    np.testing.assert_allclose(np.asarray(s1.lam), np.asarray(s2.lam),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1.omega), np.asarray(s2.omega),
+                               atol=1e-4)
+
+
+def test_bucketed_engine_consistent_and_bounded_shapes():
+    """The bucketed online engine sees only power-of-two problem shapes and
+    its committed state matches a from-scratch rebuild after churn."""
+    t = topology.paper_topology()
+    make = lambda sid: vsr.random_vsrs(1, rng=500 + sid, source_nodes=[0])
+    eng = dynamic.OnlineEmbedder(t, defrag_every=0,
+                                 key=jax.random.PRNGKey(3),
+                                 anneal_steps=80, anneal_chains=4)
+    shapes = set()
+    for s in range(5):
+        eng.add(make(s), sid=s)
+        shapes.add(eng.problem.R)
+    eng.remove(1)
+    eng.remove(3)
+    shapes.add(eng.problem.R)
+    assert shapes <= {2, 4, 8}, shapes
+    fresh = power.init_state(eng.problem, jnp.asarray(eng.X))
+    assert abs(float(fresh.obj) - eng.objective()) <= \
+        1e-3 + 1e-6 * abs(float(fresh.obj))
+    per = eng.per_service_power_w()
+    assert abs(sum(per.values()) - eng.power_w()) <= \
+        1e-6 * max(1.0, eng.power_w())
+
+
+def test_admission_hop_mask_and_budget():
+    """max_hops keeps an admitted arrival within the hop radius; a zero
+    power budget rejects and (queued) re-admits after a departure."""
+    t = topology.paper_topology()
+    make = lambda sid: vsr.random_vsrs(1, rng=900 + sid, source_nodes=[0])
+    eng = dynamic.OnlineEmbedder(t, defrag_every=0, max_hops=2,
+                                 anneal_steps=60, anneal_chains=4)
+    eng.add(make(0), sid=0)
+    eng.add(make(1), sid=1)
+    hops = np.asarray(t.path_hops)
+    row = eng.sids.index(1)
+    src = int(make(1).src[0])
+    assert all(hops[src, p] <= 2 for p in eng.X[row])
+    # persisted masks: the FIRST service must still sit inside its radius
+    # after the second event's polish sweeps touched every free VM
+    row0 = eng.sids.index(0)
+    src0 = int(make(0).src[0])
+    assert all(hops[src0, p] <= 2 for p in eng.X[row0])
+    eng.remove(1)   # survivor re-pack must also respect the mask
+    row0 = eng.sids.index(0)
+    assert all(hops[src0, p] <= 2 for p in eng.X[row0])
+
+    eng2 = dynamic.OnlineEmbedder(t, defrag_every=0,
+                                  admit_power_budget_w=1e4,
+                                  queue_rejected=True,
+                                  anneal_steps=60, anneal_chains=4)
+    assert eng2.add(make(10), sid=10) is not None    # well under budget
+    eng2.admit_power_budget_w = 0.0                  # now nothing fits
+    assert eng2.add(make(11), sid=11) is None        # over budget
+    assert eng2.admission["rejected"] == 1
+    assert eng2.n_live == 1
+    eng2.admit_power_budget_w = 1e4
+    eng2.remove(10)                                  # queue drains
+    assert 11 in eng2.sids                           # queue re-admitted
+    assert eng2.admission["admitted"] == 2
+    assert eng2.admission["rejected"] == 1
+    rejects = [s for s in eng2.stats if s.event == "reject"]
+    assert len(rejects) == 1
+
+    # admission control applies to the FIRST service too (no bootstrap
+    # bypass): a zero budget admits nothing into an empty engine
+    eng3 = dynamic.OnlineEmbedder(t, defrag_every=0,
+                                  admit_power_budget_w=0.0,
+                                  anneal_steps=60, anneal_chains=4)
+    assert eng3.add(make(20), sid=20) is None
+    assert eng3.n_live == 0 and eng3.admission["rejected"] == 1
+
+
+def test_resolve_incremental_eligible_mask():
+    """resolve_incremental keeps the changed row inside its eligible set."""
+    t = topology.paper_topology()
+    vs = vsr.random_vsrs(4, rng=7, source_nodes=[0])
+    prob = power.build_problem(t, vs)
+    eligible = np.ones((prob.R, prob.P), bool)
+    allowed = np.asarray(t.path_hops)[0] <= 2
+    eligible[3] = allowed
+    X0 = np.zeros((prob.R, prob.V), np.int32)
+    res = solvers.resolve_incremental(
+        prob, X0, key=jax.random.PRNGKey(0), changed_rows=[3],
+        anneal_steps=80, anneal_chains=4, eligible=eligible)
+    assert all(allowed[p] for p in res.X[3]), res.X[3]
+
+
+# ---------------------------------------------------------------------------
+# city-scale smoke (slow tier)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_city_scale_smoke():
+    """A small city_scale instance end-to-end: CSR invariants, lam parity,
+    and two online churn events."""
+    t = topology.city_scale(n_olt=2, onus_per_olt=2, iot_per_onu=2,
+                            n_metro=1, n_core=4, n_cdc=1)
+    assert t.P == 2 * 2 * 2 + 2 + 1 + 1
+    dense = t.dense_path_nodes()
+    np.testing.assert_array_equal(dense.sum(-1), t.route_len)
+    vs = vsr.random_vsrs(3, rng=0, source_nodes=[0])
+    prob = power.build_problem(t, vs)
+    rng = np.random.default_rng(0)
+    X = rng.integers(0, prob.P, size=(prob.R, prob.V)).astype(np.int32)
+    Xp = np.asarray(power.apply_pins(prob, jnp.asarray(X)))
+    onehot = jax.nn.one_hot(jnp.asarray(Xp), prob.P, dtype=jnp.float32)
+    _, tm, lam, _ = power._loads(prob, onehot, jnp.asarray(Xp.reshape(-1)))
+    want = _dense_lam_f64(t, prob, np.asarray(tm))
+    np.testing.assert_allclose(np.asarray(lam), want, rtol=1e-5, atol=1e-2)
+
+    make = lambda sid: vsr.random_vsrs(1, rng=100 + sid, source_nodes=[0])
+    eng = dynamic.OnlineEmbedder(t, defrag_every=0, method="coordinate",
+                                 key=jax.random.PRNGKey(1),
+                                 anneal_steps=40, anneal_chains=2,
+                                 polish_sweeps=1)
+    eng.add(make(0), sid=0)
+    eng.add(make(1), sid=1)
+    assert eng.result is not None and eng.n_live == 2
+    fresh = power.init_state(eng.problem, jnp.asarray(eng.X))
+    assert abs(float(fresh.obj) - eng.objective()) <= \
+        1e-3 + 1e-6 * abs(float(fresh.obj))
