@@ -3,9 +3,10 @@
 Simulates the `diurnal24` scenario (Poisson arrivals under a raised-cosine
 diurnal rate profile, exponential lifetimes -- the regime of Yosuf et al.'s
 IoT service-distribution study) against the paper topology, serving every
-event with the ONLINE engine: arrivals and departures are warm-start
+event through a ``CFNSession``: arrivals and departures are warm-start
 incremental re-embeddings (`solvers.resolve_incremental`), with a periodic
-full-portfolio defrag re-packing the substrate.
+full-portfolio defrag -- masked by the same ``PlacementSpec`` as every
+other path -- re-packing the substrate.
 
   PYTHONPATH=src python examples/online_day.py
 
@@ -18,6 +19,7 @@ import time
 
 import numpy as np
 
+from repro.api import CFNSession, PlacementSpec
 from repro.core import dynamic, topology
 
 SEED = 0
@@ -30,47 +32,49 @@ print(f"scenario {SCENARIO.name}: {len(events)} events over "
       f"(rate {SCENARIO.base_rate:.0f}->{SCENARIO.peak_rate:.0f}/h, "
       f"mean lifetime {SCENARIO.mean_lifetime_h:.0f}h)")
 
-engine = dynamic.OnlineEmbedder(topo, defrag_every=8)
+# one declarative spec: defrag cadence + (R, V) shape bucketing; add
+# max_hops= / power_budget_w= here and every event path enforces them
+session = CFNSession(topo, PlacementSpec(defrag_every=8))
 lat, hour_mark = [], 0.0
 
 
-def on_event(ev, res):
+def log_event(ev, dt):
     global hour_mark
-    lat.append(time.time() - on_event.t0)
+    lat.append(dt)
     if ev.t >= hour_mark:
         rate = SCENARIO.rate_fn()(ev.t)
-        print(f"  t={ev.t:5.1f}h rate={rate:4.1f}/h live={engine.n_live:2d} "
-              f"power={engine.power_w():7.1f}W last={ev.kind:7s} "
-              f"({lat[-1] * 1e3:6.1f} ms)")
+        print(f"  t={ev.t:5.1f}h rate={rate:4.1f}/h live={session.n_live:2d} "
+              f"power={session.power_w():7.1f}W last={ev.kind:7s} "
+              f"({dt * 1e3:6.1f} ms)")
         hour_mark = np.floor(ev.t) + 1.0
 
 
 t_day = time.time()
 live = set()
 for ev in events:
-    on_event.t0 = time.time()
+    t0 = time.time()   # per-event solve latency (print I/O excluded)
     if ev.kind == "arrive":
-        engine.add(SCENARIO.sample_vsr(1000 + ev.sid), sid=ev.sid)
+        session.add(SCENARIO.sample_vsr(1000 + ev.sid), sid=ev.sid)
         live.add(ev.sid)
     else:
         if ev.sid not in live:
             continue
-        engine.remove(ev.sid)
+        session.remove(ev.sid)
         live.discard(ev.sid)
-    on_event(ev, engine.result)
+    log_event(ev, time.time() - t0)
 
 n_events = len(lat)
-methods = [s.method for s in engine.stats]
+methods = [s.method for s in session.stats]
 n_inc = sum(1 for m in methods if m == "incremental")
 print(f"\nday done: {n_events} churn events in {time.time() - t_day:.1f}s "
       f"wall ({n_inc} incremental, {n_events - n_inc} full/defrag)")
 print(f"re-solve latency: median={np.median(lat) * 1e3:.1f}ms "
       f"p90={np.percentile(lat, 90) * 1e3:.1f}ms "
       f"(includes first-shape jit compiles)")
-if engine.n_live:
-    per = engine.per_service_power_w()
+if session.n_live:
+    per = session.attribute()
     top = sorted(per.items(), key=lambda kv: -kv[1])[:3]
-    print(f"end of day: {engine.n_live} live services, "
-          f"{engine.power_w():.1f}W fleet "
+    print(f"end of day: {session.n_live} live services, "
+          f"{session.power_w():.1f}W fleet "
           f"(top tenants: "
           + ", ".join(f"svc{sid}={w:.1f}W" for sid, w in top) + ")")

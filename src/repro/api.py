@@ -1,0 +1,13 @@
+"""Public placement API: ``from repro.api import PlacementSpec, CFNSession``.
+
+Re-export of ``repro.core.api`` -- the declarative constraint object
+(``PlacementSpec``) and the session facade (``CFNSession``) every placement
+path (batch, online, serving) consumes.  See that module for the full
+story; ``examples/quickstart.py`` and ``examples/online_day.py`` are the
+walkthroughs.
+"""
+from .core.api import (CFNSession, PlacementSpec, SolveResult,
+                       solve_portfolio)
+from .core.api import __all__ as _core_all
+
+__all__ = list(_core_all)

@@ -1,6 +1,8 @@
 """Paper core: CFN topology, power model (Eq. 1/2), VSRs, placement solvers,
-and the online churn engine (dynamic)."""
-from . import dynamic, embed, hardware, power, solvers, topology, vsr
+the online churn engine (dynamic), and the unified declarative API
+(api.PlacementSpec / api.CFNSession)."""
+from . import api, dynamic, embed, hardware, power, solvers, topology, vsr
+from .api import CFNSession, PlacementSpec
 from .dynamic import (SCENARIOS, ChurnScenario, OnlineEmbedder, ServiceEvent,
                       churn_trace, diurnal_rate, poisson_timeline, replay)
 from .embed import embed as embed_vsrs, savings_vs_baseline
@@ -9,12 +11,14 @@ from .power import (PlacementAux, PlacementProblem, PlacementState,
                     build_problem, delta_move, delta_sweep, detach_vsrs,
                     evaluate, init_state, objective, service_loads,
                     warm_state)
+from .solvers import SolveResult, solve_portfolio
 from .topology import (CFNTopology, datacenter_topology, nsfnet_topology,
                        paper_topology)
 from .vsr import VSRBatch, from_layer_costs, random_vsrs
 
 __all__ = [
-    "dynamic", "embed", "hardware", "power", "solvers", "topology", "vsr",
+    "api", "dynamic", "embed", "hardware", "power", "solvers", "topology",
+    "vsr", "PlacementSpec", "CFNSession", "SolveResult", "solve_portfolio",
     "embed_vsrs", "savings_vs_baseline", "PlacementProblem", "build_problem",
     "evaluate", "objective", "PlacementAux", "PlacementState", "apply_move",
     "build_aux", "delta_move", "delta_sweep", "init_state", "attach_vsrs",

@@ -14,13 +14,14 @@ This module supplies both halves of that regime:
     `power.detach_vsrs` and re-solve with `solvers.resolve_incremental`
     (only the churned service's VMs are re-placed; survivors polish in
     place).  Every `defrag_every` events a full portfolio solve
-    (`solvers.solve_cfn`) re-packs the substrate and bounds the drift of
+    (`solvers.solve_portfolio`) re-packs the substrate and bounds the drift of
     purely local re-optimization.
 
 Times are in hours throughout; rates in services/hour.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -196,27 +197,32 @@ class OnlineEmbedder:
     Keeps the current VSR set, placement, and incremental
     ``PlacementState``; ``add`` / ``remove`` re-solve with
     ``solvers.resolve_incremental`` (one-service warm-start re-embedding)
-    and every ``defrag_every`` events -- or on demand via ``defrag()`` --
-    runs the full portfolio to re-pack the substrate.  Service identity is
-    the caller's ``sid``; internally rows are dense [0, R).
+    and every ``spec.defrag_every`` events -- or on demand via ``defrag()``
+    -- runs the full portfolio to re-pack the substrate.  Service identity
+    is the caller's ``sid``; internally rows are dense [0, R).
 
-    **Shape bucketing** (``bucket_rows``, default on): the tensor problem is
-    padded to power-of-two service counts with zero-demand fully-pinned
-    dummy rows (power.build_problem), and sweep position lists are padded to
-    the bucket, so the jitted solver kernels compile once per bucket instead
-    of once per live count.
+    Configuration lives in one declarative ``repro.api.PlacementSpec``
+    (pass ``spec=``; the legacy kwarg signature is a deprecated shim that
+    builds a spec internally and keeps working via the property aliases
+    below).  The spec governs:
 
-    **SLA admission control**: with ``max_hops`` set, every service may
-    only be placed within that many network hops of its source -- the
-    embed_latency_bounded eligibility mask is persisted per admitted row
-    and threaded through every incremental re-solve, so later churn events
-    keep services inside their radius (the full-portfolio defrag is the
-    one unmasked path; see the ROADMAP open item); with
-    ``admit_power_budget_w`` and/or
-    ``admit_violation_tol`` set, arrivals whose incremental power draw or
+    **Shape bucketing** (``spec.bucket_rows`` / ``spec.bucket_cols``): the
+    tensor problem is padded to power-of-two service counts AND VM widths
+    with zero-demand fully-pinned dummy rows/columns (power.build_problem),
+    and sweep position lists are padded to the bucket, so the jitted solver
+    kernels compile once per bucket instead of once per live count -- and a
+    single wide service no longer recompiles the whole concat batch.
+
+    **SLA admission control**: with ``spec.max_hops`` set, every service
+    may only be placed within that many network hops of its source --
+    ``spec.masks(problem)`` is rebuilt per event and threaded through every
+    incremental re-solve AND through the full-portfolio defrag
+    (``solvers.solve_portfolio``), so no path can move a hop-constrained
+    service out of its radius; with ``spec.power_budget_w`` and/or
+    ``spec.violation_tol`` set, arrivals whose incremental power draw or
     capacity-violation increase exceeds the budget are rejected -- or, with
-    ``queue_rejected``, parked and retried after each departure.  Counters
-    in ``admission`` (surfaced by ``replay``).
+    ``spec.queue_rejected``, parked and retried after each departure.
+    Counters in ``admission`` (surfaced by ``replay``).
     """
 
     def __init__(self, topo: CFNTopology, defrag_every: int = 16,
@@ -227,33 +233,38 @@ class OnlineEmbedder:
                  max_hops: Optional[int] = None,
                  admit_power_budget_w: Optional[float] = None,
                  admit_violation_tol: Optional[float] = None,
-                 queue_rejected: bool = False):
+                 queue_rejected: bool = False,
+                 spec=None):
+        if spec is None:
+            from . import api
+            warnings.warn(
+                "OnlineEmbedder(defrag_every=..., max_hops=..., ...) kwargs "
+                "are deprecated; build a repro.api.PlacementSpec and pass "
+                "spec= (or use repro.api.CFNSession)",
+                DeprecationWarning, stacklevel=2)
+            spec = api.PlacementSpec(
+                method=method, defrag_every=defrag_every, max_hops=max_hops,
+                power_budget_w=admit_power_budget_w,
+                violation_tol=admit_violation_tol,
+                queue_rejected=queue_rejected,
+                bucket_rows=bucket_rows, bucket_cols=bucket_rows,
+                sweeps=sweeps, anneal_steps=anneal_steps,
+                anneal_chains=anneal_chains, polish_sweeps=polish_sweeps)
         self.topo = topo
-        self.defrag_every = defrag_every
-        self.method = method      # solver for full solves / defrags
-        if method not in embed_mod.METHODS:
-            raise ValueError(f"unknown method {method!r}; "
-                             f"choose from {embed_mod.METHODS}")
+        self.spec = spec
         self._key = jax.random.PRNGKey(1) if key is None else key
-        self._add_kw = dict(sweeps=sweeps, anneal_steps=anneal_steps,
-                            anneal_chains=anneal_chains, anneal_t0=5.0,
-                            polish_sweeps=polish_sweeps)
+        self._add_kw = dict(sweeps=spec.sweeps,
+                            anneal_steps=spec.anneal_steps,
+                            anneal_chains=spec.anneal_chains,
+                            anneal_t0=spec.anneal_t0,
+                            anneal_t1=spec.anneal_t1,
+                            polish_sweeps=spec.polish_sweeps)
         # departures re-pack the survivors: random-restart chains over all
         # free VMs need a hotter start to escape the vacated layout
-        self._remove_kw = dict(sweeps=0, anneal_steps=anneal_steps,
-                               anneal_chains=anneal_chains,
-                               anneal_t0=20.0, polish_sweeps=polish_sweeps)
-        self.bucket_rows = bucket_rows
-        self.max_hops = max_hops
-        self.admit_power_budget_w = admit_power_budget_w
-        self.admit_violation_tol = admit_violation_tol
-        self.queue_rejected = queue_rejected
+        self._remove_kw = dict(self._add_kw, sweeps=0,
+                               anneal_t0=spec.remove_anneal_t0)
         self.admission = dict(admitted=0, rejected=0, queued=0)
         self._queue: List[tuple] = []          # parked (service, sid) pairs
-        # per live row: persisted SLA eligibility mask [P] (None = all);
-        # threaded through EVERY incremental re-solve so later events keep
-        # admitted services inside their hop radius
-        self._row_masks: List[Optional[np.ndarray]] = []
         self._vsrs: List[vsr.VSRBatch] = []    # one R=1 batch per service
         self._sids: List[int] = []
         self._next_sid = 0
@@ -268,6 +279,24 @@ class OnlineEmbedder:
         self._result: Optional[solvers.SolveResult] = None
         self._events_since_defrag = 0
         self.stats: List[OnlineStats] = []
+
+    # -- legacy attribute aliases (read/write through the spec) -----------
+    def _spec_alias(name):  # noqa: N805 -- descriptor factory, not a method
+        def get(self):
+            return getattr(self.spec, name)
+
+        def set_(self, v):
+            self.spec = self.spec.replace(**{name: v})
+        return property(get, set_)
+
+    defrag_every = _spec_alias("defrag_every")
+    method = _spec_alias("method")
+    bucket_rows = _spec_alias("bucket_rows")
+    max_hops = _spec_alias("max_hops")
+    admit_power_budget_w = _spec_alias("power_budget_w")
+    admit_violation_tol = _spec_alias("violation_tol")
+    queue_rejected = _spec_alias("queue_rejected")
+    del _spec_alias
 
     # -- introspection ----------------------------------------------------
     @property
@@ -298,18 +327,11 @@ class OnlineEmbedder:
         """A detached copy sharing the (immutable) arrays: events applied to
         the clone leave this engine untouched.  Used by benchmarks to replay
         one event several times for min-of-reps timing."""
-        other = OnlineEmbedder(self.topo, defrag_every=self.defrag_every,
-                               key=self._key, method=self.method,
-                               bucket_rows=self.bucket_rows,
-                               max_hops=self.max_hops,
-                               admit_power_budget_w=self.admit_power_budget_w,
-                               admit_violation_tol=self.admit_violation_tol,
-                               queue_rejected=self.queue_rejected)
+        other = OnlineEmbedder(self.topo, spec=self.spec, key=self._key)
         other._add_kw = dict(self._add_kw)
         other._remove_kw = dict(self._remove_kw)
         other.admission = dict(self.admission)
         other._queue = list(self._queue)
-        other._row_masks = list(self._row_masks)
         other._vsrs = list(self._vsrs)
         other._sids = list(self._sids)
         other._next_sid = self._next_sid
@@ -350,14 +372,24 @@ class OnlineEmbedder:
         return k
 
     def _pad_rows(self) -> Optional[int]:
-        return (_bucket_rows(len(self._vsrs)) if self.bucket_rows else None)
+        return (_bucket_rows(len(self._vsrs), lo=self.spec.row_bucket_lo)
+                if self.spec.bucket_rows else None)
+
+    def _pad_cols(self) -> Optional[int]:
+        """V-width bucket: a wide arrival only widens the problem up to the
+        next power of two, so jitted solver shapes stay on O(log V) buckets
+        instead of one per distinct concat width."""
+        if not self.spec.bucket_cols or self._batch_cache is None:
+            return None
+        return _bucket_rows(self._batch_cache.V, lo=self.spec.col_bucket_lo)
 
     def _rebuild_problem(self) -> None:
         if self._substrate is None:
             self._substrate = power.substrate_arrays(self.topo)
         self._problem = power.build_problem(self.topo, self._batch_cache,
                                             substrate=self._substrate,
-                                            pad_to_rows=self._pad_rows())
+                                            pad_to_rows=self._pad_rows(),
+                                            pad_to_cols=self._pad_cols())
 
     def _resolve_kw(self, base: dict) -> dict:
         """Per-event solver kwargs: bucket-stable sweep padding."""
@@ -386,12 +418,14 @@ class OnlineEmbedder:
     def _full_solve(self, event: str,
                     incumbent: Optional[solvers.SolveResult] = None
                     ) -> solvers.SolveResult:
-        """Portfolio re-pack; an ``incumbent`` result for the SAME problem
-        (the incremental solution, or the live placement on an explicit
-        defrag) is kept when the portfolio fails to beat it, so defrags
-        never regress."""
-        res = embed_mod.embed(self.topo, self._batch_cache, self.method,
-                              key=self._split_key(), problem=self._problem)
+        """Spec-driven full solve (``spec.method``, ``spec.masks`` applied
+        -- a defrag can no longer move a hop-constrained service out of its
+        radius); an ``incumbent`` result for the SAME problem (the
+        incremental solution, or the live placement on an explicit defrag)
+        is kept when the portfolio fails to beat it, so defrags never
+        regress."""
+        res = embed_mod._embed(self.topo, self._batch_cache, self.spec,
+                               key=self._split_key(), problem=self._problem)
         if incumbent is not None and incumbent.objective < res.objective:
             res = solvers.SolveResult(
                 X=incumbent.X, breakdown=incumbent.breakdown,
@@ -423,7 +457,6 @@ class OnlineEmbedder:
             if s.R != 1:
                 raise ValueError(f"service {k} must be R=1, got R={s.R}")
         self._vsrs = list(services)
-        self._row_masks = [self._hop_mask(int(s.src[0])) for s in services]
         self._sids = (list(range(len(services))) if sids is None
                       else list(sids))
         self._next_sid = max(self._sids, default=-1) + 1
@@ -435,21 +468,25 @@ class OnlineEmbedder:
         self.admission["admitted"] += len(services)
         return self._full_solve("bootstrap")
 
-    def _hop_mask(self, src: int) -> Optional[np.ndarray]:
-        if self.max_hops is None:
-            return None
-        return np.asarray(self.topo.path_hops)[src] <= self.max_hops
+    @property
+    def _positional_constraints(self) -> bool:
+        """True when the spec carries ROW-positional constraints (sequence
+        ``max_hops`` or an explicit ``eligible`` matrix).  Those bind to
+        batch rows; churn shifts row indices on removal, which would
+        silently re-assign SLAs to the wrong services -- so churn events
+        reject them (scalar ``max_hops`` is the online contract)."""
+        return (self.spec.eligible is not None
+                or (self.spec.max_hops is not None
+                    and np.ndim(self.spec.max_hops) > 0))
 
-    def _stacked_eligible(self) -> Optional[np.ndarray]:
-        """[R, P] eligibility from every live row's persisted SLA mask
-        (pad / unconstrained rows all-True); None when nothing is masked."""
-        if all(m is None for m in self._row_masks):
-            return None
-        el = np.ones((self._problem.R, self._problem.P), dtype=bool)
-        for i, m in enumerate(self._row_masks):
-            if m is not None:
-                el[i] = m
-        return el
+    def _check_churn_constraints(self, event: str) -> None:
+        if self._positional_constraints:
+            raise ValueError(
+                f"{event}() with row-positional constraints (sequence "
+                "max_hops / explicit eligible) is unsupported: removal "
+                "shifts row indices, mis-assigning per-service SLAs.  Use "
+                "a scalar max_hops for churn, or positional constraints "
+                "with the static batch path (CFNSession.solve/defrag).")
 
     def _admit_ok(self, res: solvers.SolveResult, prev_power: float,
                   prev_violation: float) -> bool:
@@ -486,17 +523,17 @@ class OnlineEmbedder:
         admitted."""
         if service.R != 1:
             raise ValueError(f"add() takes one service, got R={service.R}")
+        self._check_churn_constraints("add")
         if sid is None:
             sid = self._next_sid
         if sid in self._sids:
             raise ValueError(f"sid {sid} is already live")
         self._next_sid = max(self._next_sid, sid + 1)
-        prev = (self._vsrs[:], self._sids[:], self._row_masks[:],
+        prev = (self._vsrs[:], self._sids[:],
                 self._batch_cache, self._problem, self._X, self._state,
                 self._result, self._events_since_defrag)
         prev_X, prev_loads = self._X, self._carry_loads()
         self._vsrs.append(service)
-        self._row_masks.append(self._hop_mask(int(service.src[0])))
         self._sids.append(sid)
         self._batch_cache = (service if self._batch_cache is None
                              else self._batch_cache.concat(service))
@@ -518,16 +555,15 @@ class OnlineEmbedder:
             row_map = list(range(row)) + [-1] * (self._problem.R - row)
             st = power.warm_state(self._problem, prev_X,
                                   prev_loads=prev_loads, row_map=row_map)
-            prev_power = 0.0 if prev[7] is None else prev[7].power
-            prev_viol = (0.0 if prev[7] is None
-                         else float(prev[7].breakdown.violation))
+            prev_power = 0.0 if prev[6] is None else prev[6].power
+            prev_viol = (0.0 if prev[6] is None
+                         else float(prev[6].breakdown.violation))
         res = solvers.resolve_incremental(
             self._problem, np.asarray(st.X), key=self._split_key(),
-            changed_rows=[row], state=st,
-            eligible=self._stacked_eligible(),
+            changed_rows=[row], state=st, spec=self.spec,
             **self._resolve_kw(self._add_kw))
         if not self._admit_ok(res, prev_power, prev_viol):
-            (self._vsrs, self._sids, self._row_masks, self._batch_cache,
+            (self._vsrs, self._sids, self._batch_cache,
              self._problem, self._X, self._state, self._result,
              self._events_since_defrag) = prev
             if not _retry:
@@ -550,13 +586,13 @@ class OnlineEmbedder:
         """Retire a service: detach its loads in O(V*(N+P)), then let the
         survivors re-settle with polish sweeps (no changed rows).  Freed
         capacity re-admits queued arrivals (``queue_rejected``)."""
+        self._check_churn_constraints("remove")
         row = self._sids.index(sid)
         detached = power.detach_vsrs(self._problem, self._state, [row])
         prev_X = self._X
         surv = [i for i in range(self.n_live) if i != row]
         del self._vsrs[row]
         del self._sids[row]
-        del self._row_masks[row]
         if not self._vsrs:
             self._problem = self._X = self._state = self._result = None
             self._batch_cache = None
@@ -574,7 +610,7 @@ class OnlineEmbedder:
             row_map=row_map)
         res = solvers.resolve_incremental(
             self._problem, np.asarray(st.X), key=self._split_key(),
-            changed_rows=[], state=st, eligible=self._stacked_eligible(),
+            changed_rows=[], state=st, spec=self.spec,
             **self._resolve_kw(self._remove_kw))
         if self._defrag_due():
             res = self._full_solve("remove", incumbent=res)

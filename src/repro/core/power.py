@@ -158,7 +158,8 @@ def substrate_arrays(topo: CFNTopology) -> Dict[str, jnp.ndarray]:
 
 def build_problem(topo: CFNTopology, vsrs: VSRBatch,
                   substrate: Optional[Dict[str, jnp.ndarray]] = None,
-                  pad_to_rows: Optional[int] = None) -> PlacementProblem:
+                  pad_to_rows: Optional[int] = None,
+                  pad_to_cols: Optional[int] = None) -> PlacementProblem:
     """Build the tensor bundle for one workload on one substrate.
 
     ``pad_to_rows`` (shape bucketing, core.dynamic.OnlineEmbedder): pad the
@@ -166,15 +167,31 @@ def build_problem(topo: CFNTopology, vsrs: VSRBatch,
     services whose every VM is PINNED to node 0 -- they contribute exactly
     zero load and zero free positions, so the objective and the solver move
     set are unchanged while jitted solver shapes stay on a fixed bucket.
+
+    ``pad_to_cols`` buckets the VM dimension the same way: the workload is
+    widened to that many columns with zero-demand, link-free VMs PINNED to
+    each row's source node, so a single wide service changes V only up to
+    its power-of-two bucket instead of recompiling every jitted solver
+    shape for the whole concat batch.
     """
     if substrate is None:
         substrate = substrate_arrays(topo)
+    V_nat = vsrs.V
+    if pad_to_cols is not None and pad_to_cols > V_nat:
+        d = pad_to_cols - V_nat
+        vsrs = VSRBatch(
+            F=np.pad(np.asarray(vsrs.F), ((0, 0), (0, d))),
+            H=np.pad(np.asarray(vsrs.H), ((0, 0), (0, d), (0, d))),
+            src=vsrs.src, input_vm=vsrs.input_vm)
     link_src, link_dst, link_h = vsrs.links()
     R, V = vsrs.R, vsrs.V
     fixed_mask = np.zeros((R, V), dtype=bool)
     fixed_mask[np.arange(R), vsrs.input_vm] = True
     fixed_node = np.zeros((R, V), dtype=np.int32)
     fixed_node[np.arange(R), vsrs.input_vm] = vsrs.src
+    if V > V_nat:
+        fixed_mask[:, V_nat:] = True
+        fixed_node[:, V_nat:] = np.asarray(vsrs.src)[:, None]
     F = np.asarray(vsrs.F)
     if pad_to_rows is not None and pad_to_rows > R:
         pad = pad_to_rows - R

@@ -19,11 +19,20 @@ Solvers:
   anneal        -- Metropolis chains on incremental state (delta / fused
                    Pallas / legacy full-objective backends).
   genetic       -- population crossover/mutation search.
-  relax         -- differentiable soft-placement + rounding (beyond-paper).
-  solve_cfn     -- portfolio = best of the above; the "CFN MILP" curve.
+  relax           -- differentiable soft-placement + rounding (beyond-paper).
+  solve_portfolio -- spec-driven portfolio = best of the above; the
+                     "CFN MILP" curve (solve_cfn is its deprecated shim).
+
+Every solver takes an optional ``eligible`` [R, P] mask -- the one
+constraint surface ``repro.api.PlacementSpec.masks`` produces -- so SLA
+hop bounds are enforced identically in coordinate sweeps, every anneal
+backend's Metropolis proposals (one proposal stream feeds the delta scan,
+the fused Pallas kernel, and the legacy full-objective path), genetic
+search, exhaustive enumeration, and the relaxation.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
@@ -127,6 +136,54 @@ def fixed_layer(problem: PlacementProblem, topo: CFNTopology,
 _INELIGIBLE = 1.0e30
 
 
+def _eligible_np(eligible: Optional[np.ndarray]):
+    """Normalize an [R, P] eligibility mask for the solver paths.
+
+    Returns ``(el, cnt, cand)``: the bool mask with no-eligible-node rows
+    fallen back to all-True (a row that cannot satisfy its SLA is placed
+    best-effort rather than nowhere), per-row eligible counts [R], and the
+    per-row candidate table [R, P] (eligible node ids left-packed) that
+    Metropolis destination sampling draws from.  ``(None, None, None)``
+    when unmasked.
+    """
+    if eligible is None:
+        return None, None, None
+    el = np.asarray(eligible, bool).copy()
+    dead = ~el.any(axis=1)
+    el[dead] = True
+    cnt = el.sum(axis=1).astype(np.int32)
+    cand = np.zeros(el.shape, np.int32)
+    for r in range(el.shape[0]):
+        ids = np.nonzero(el[r])[0]
+        cand[r, :len(ids)] = ids
+    return el, cnt, cand
+
+
+def _sample_eligible(u: jnp.ndarray, rows: jnp.ndarray,
+                     cnt: jnp.ndarray, cand: jnp.ndarray) -> jnp.ndarray:
+    """Map uniform draws ``u`` to eligible destination nodes for service
+    rows ``rows`` (broadcast against ``u``) -- the ONE sampling map behind
+    every masked random draw: Metropolis proposal streams (pure-JAX delta
+    scan, fused Pallas kernel, legacy full-objective backend), restart
+    chains, and genetic init/mutation."""
+    c = cnt[rows]
+    idx = jnp.minimum((u * c).astype(jnp.int32), c - 1)
+    return cand[rows, idx]
+
+
+def _project_eligible(problem: PlacementProblem, X,
+                      el_np: np.ndarray) -> jnp.ndarray:
+    """Move every free VM sitting on an ineligible node to its row's first
+    eligible node (warm starts handed to masked solvers must start inside
+    the constraint set; the solver then optimizes within it)."""
+    Xn = np.asarray(X).copy()
+    fixed = np.asarray(problem.fixed_mask)
+    first = el_np.argmax(axis=1).astype(Xn.dtype)
+    rows = np.arange(Xn.shape[0])[:, None]
+    bad = ~el_np[rows, Xn] & ~fixed
+    return jnp.asarray(np.where(bad, first[:, None], Xn), jnp.int32)
+
+
 @jax.jit
 def _sweep(problem: PlacementProblem, aux: PlacementAux,
            state: PlacementState, positions: jnp.ndarray,
@@ -155,17 +212,25 @@ def _sweep(problem: PlacementProblem, aux: PlacementAux,
 
 
 def coordinate(problem: PlacementProblem, X0: np.ndarray,
-               max_sweeps: int = 12, tol: float = 1e-6) -> SolveResult:
+               max_sweeps: int = 12, tol: float = 1e-6,
+               eligible: Optional[np.ndarray] = None) -> SolveResult:
+    """Exact best-single-move sweeps.  ``eligible`` [R, P] (optional) masks
+    each service row's destination nodes in every sweep argmin; X0 need not
+    satisfy the mask (the first sweep moves every free VM onto it, and the
+    incumbent is only ever taken from post-sweep states)."""
     aux = build_aux(problem)
+    el_np, _, _ = _eligible_np(eligible)
+    el_j = None if el_np is None else jnp.asarray(el_np)
     positions = jnp.asarray(np.asarray(aux.free_pos))
     if positions.shape[0] == 0:  # every VM pinned: nothing to move
         return _result(problem, jnp.asarray(X0, jnp.int32), "coordinate")
     state = init_state(problem, jnp.asarray(X0, jnp.int32))
-    best_obj = float(state.obj)
+    # a masked solve may not trust an (ineligible) warm start as incumbent
+    best_obj = float("inf") if el_np is not None else float(state.obj)
     best_X = state.X
     history: List[float] = []
     for _ in range(max_sweeps):
-        state, _ = _sweep(problem, aux, state, positions)
+        state, _ = _sweep(problem, aux, state, positions, el_j)
         # exact refresh once per sweep: kills float32 drift and yields an
         # exact (incumbent-best, hence monotone) history
         state = init_state(problem, state.X)
@@ -183,7 +248,8 @@ def coordinate(problem: PlacementProblem, X0: np.ndarray,
 # ---------------------------------------------------------------------------
 
 def exhaustive(problem: PlacementProblem, max_combos: int = 2_000_000,
-               chunk: int = 8192) -> SolveResult:
+               chunk: int = 8192,
+               eligible: Optional[np.ndarray] = None) -> SolveResult:
     fixed_mask = np.asarray(problem.fixed_mask)
     free = np.argwhere(~fixed_mask)
     P = problem.P
@@ -191,6 +257,7 @@ def exhaustive(problem: PlacementProblem, max_combos: int = 2_000_000,
     n_combos = P ** n_free
     if n_combos > max_combos:
         raise ValueError(f"{n_combos} combos exceed cap {max_combos}")
+    el_np, _, _ = _eligible_np(eligible)
     R, V = fixed_mask.shape
     base = np.zeros((R, V), dtype=np.int32)
     best_obj, best_X = float("inf"), base
@@ -204,9 +271,14 @@ def exhaustive(problem: PlacementProblem, max_combos: int = 2_000_000,
         Xb = np.broadcast_to(base, (len(idx), R, V)).copy()
         Xb[:, free[:, 0], free[:, 1]] = digits
         obj = np.asarray(objective_batch(problem, jnp.asarray(Xb)))
+        if el_np is not None:
+            valid = el_np[free[None, :, 0], digits].all(axis=1)
+            obj = np.where(valid, obj, np.inf)
         k = int(np.argmin(obj))
         if obj[k] < best_obj:
             best_obj, best_X = float(obj[k]), Xb[k]
+    if not np.isfinite(best_obj):
+        raise ValueError("no placement satisfies the eligibility mask")
     return _result(problem, best_X, "exhaustive", [best_obj])
 
 
@@ -232,15 +304,28 @@ def _chain_step(problem: PlacementProblem, aux: PlacementAux,
 
 
 def _anneal_proposals(key: jax.Array, aux: PlacementAux, n_steps: int,
-                      n_chains: int, P: int):
+                      n_chains: int, P: int, V: Optional[int] = None,
+                      cnt: Optional[np.ndarray] = None,
+                      cand: Optional[np.ndarray] = None):
     """Free-position Metropolis proposals: flat VM index, destination, u.
 
     Pinned input VMs are never proposed (their placement is fixed by
-    Eq. 4), so every step is a real move."""
+    Eq. 4), so every step is a real move.  With ``cnt``/``cand`` (an
+    eligibility table from ``_eligible_np``), destinations are sampled
+    from the proposed VM's row-eligible set only -- the single proposal
+    stream every anneal backend (delta scan, fused Pallas kernel, legacy
+    full-objective) consumes, so SLA masking is enforced identically in
+    all of them."""
     kf, kp, ka = jax.random.split(key, 3)
     M = aux.free_pos.shape[0]
     fi = jax.random.randint(kf, (n_steps, n_chains), 0, M)
-    p_prop = jax.random.randint(kp, (n_steps, n_chains), 0, P, jnp.int32)
+    if cnt is None:
+        p_prop = jax.random.randint(kp, (n_steps, n_chains), 0, P, jnp.int32)
+    else:
+        rows = aux.free_flat[fi] // V
+        u_dst = jax.random.uniform(kp, (n_steps, n_chains))
+        p_prop = _sample_eligible(u_dst, rows, jnp.asarray(cnt),
+                                  jnp.asarray(cand))
     u = jax.random.uniform(ka, (n_steps, n_chains))
     return fi, p_prop, u
 
@@ -248,7 +333,8 @@ def _anneal_proposals(key: jax.Array, aux: PlacementAux, n_steps: int,
 def anneal(problem: PlacementProblem, key: jax.Array, X0: np.ndarray,
            n_chains: int = 32, n_steps: int = 4000,
            t0: float = 50.0, t1: float = 0.05,
-           backend: str = "auto") -> SolveResult:
+           backend: str = "auto",
+           eligible: Optional[np.ndarray] = None) -> SolveResult:
     """Batched Metropolis chains on incremental (delta-evaluated) state.
 
     backend:
@@ -260,6 +346,12 @@ def anneal(problem: PlacementProblem, key: jax.Array, X0: np.ndarray,
       * ``"full"``  -- legacy full `objective_batch` per step (kept as the
         benchmark baseline).
       * ``"auto"``  -- fused on TPU, delta elsewhere.
+
+    ``eligible`` [R, P] (optional) restricts each service row's destination
+    nodes: the warm start is projected onto the mask, restart chains are
+    sampled from it, and every backend's proposal destinations are drawn
+    from it (one proposal stream feeds all three), so no chain ever leaves
+    the constraint set.
     """
     R, V, P = problem.R, problem.V, problem.P
     if backend == "auto":
@@ -270,22 +362,33 @@ def anneal(problem: PlacementProblem, key: jax.Array, X0: np.ndarray,
     if aux.free_pos.shape[0] == 0:
         # every VM is pinned (e.g. single-VM VSRs): nothing to anneal
         return _result(problem, jnp.asarray(X0, jnp.int32), "anneal")
+    el_np, cnt_np, cand_np = _eligible_np(eligible)
     k_init, k_prop = jax.random.split(key)
     X = apply_pins(problem, jnp.asarray(X0, jnp.int32))
+    if el_np is not None:
+        X = apply_pins(problem, _project_eligible(problem, X, el_np))
     Xc = jnp.broadcast_to(X, (n_chains, R, V)).copy()
     # randomize all but chain 0 (keep one chain at the warm start)
-    rand = jax.random.randint(k_init, (n_chains, R, V), 0, P, jnp.int32)
+    if el_np is None:
+        rand = jax.random.randint(k_init, (n_chains, R, V), 0, P, jnp.int32)
+    else:
+        # restarted chains must also start on eligible nodes
+        u_r = jax.random.uniform(k_init, (n_chains, R, V))
+        rand = _sample_eligible(u_r, jnp.arange(R)[None, :, None],
+                                jnp.asarray(cnt_np), jnp.asarray(cand_np))
     keep = (jnp.arange(n_chains) == 0)[:, None, None]
     Xc = jax.vmap(lambda x: apply_pins(problem, x))(jnp.where(keep, Xc, rand))
 
     temps = t0 * (t1 / t0) ** (jnp.arange(n_steps) / max(1, n_steps - 1))
-    fi, p_prop, u_prop = _anneal_proposals(k_prop, aux, n_steps, n_chains, P)
+    fi, p_prop, u_prop = _anneal_proposals(k_prop, aux, n_steps, n_chains, P,
+                                           V=V, cnt=cnt_np, cand=cand_np)
     j_prop = aux.free_flat[fi]                            # [n_steps, n_chains]
 
     if backend == "fused":
         from ..kernels import ops as kops
+        el_j = None if el_np is None else jnp.asarray(el_np)
         bXc, stats = kops.fused_anneal(problem, aux, Xc, j_prop.T, p_prop.T,
-                                       u_prop.T, temps)
+                                       u_prop.T, temps, eligible=el_j)
         k = int(jnp.argmin(stats[:, 0]))
         return _result(problem, np.asarray(bXc[k]), "anneal(fused)",
                        [float(stats[k, 0])])
@@ -373,11 +476,25 @@ def _anneal_scan_full(problem: PlacementProblem, Xc, j_prop, p_prop,
 # ---------------------------------------------------------------------------
 
 def genetic(problem: PlacementProblem, key: jax.Array, X0: np.ndarray,
-            pop: int = 64, gens: int = 300, p_mut: float = 0.08) -> SolveResult:
+            pop: int = 64, gens: int = 300, p_mut: float = 0.08,
+            eligible: Optional[np.ndarray] = None) -> SolveResult:
+    """Population search.  ``eligible`` [R, P] (optional): the elite is
+    projected onto the mask, the initial population and every mutation are
+    sampled from it, and crossover swaps whole service rows between two
+    eligible parents -- so every individual ever evaluated is eligible."""
     R, V, P = problem.R, problem.V, problem.P
+    el_np, cnt_np, cand_np = _eligible_np(eligible)
     k_init, k_scan = jax.random.split(key)
     elite = jnp.asarray(X0, jnp.int32)
-    Xp = jax.random.randint(k_init, (pop, R, V), 0, P, jnp.int32)
+    if el_np is None:
+        Xp = jax.random.randint(k_init, (pop, R, V), 0, P, jnp.int32)
+        cnt_j = cand_j = None
+    else:
+        elite = _project_eligible(problem, elite, el_np)
+        cnt_j, cand_j = jnp.asarray(cnt_np), jnp.asarray(cand_np)
+        u0 = jax.random.uniform(k_init, (pop, R, V))
+        Xp = _sample_eligible(u0, jnp.arange(R)[None, :, None],
+                              cnt_j, cand_j)
     Xp = Xp.at[0].set(elite)
 
     @jax.jit
@@ -393,10 +510,15 @@ def genetic(problem: PlacementProblem, key: jax.Array, X0: np.ndarray,
             mask = jax.random.bernoulli(k3, 0.5, (pop, R))[:, :, None]
             mates = jnp.roll(parents, 1, axis=0)
             children = jnp.where(mask, parents, mates)
-            # mutation
+            # mutation (masked: drawn from each row's eligible set)
             km1, km2 = jax.random.split(k4)
             mut = jax.random.bernoulli(km1, p_mut, (pop, R, V))
-            rnd = jax.random.randint(km2, (pop, R, V), 0, P, jnp.int32)
+            if cnt_j is None:
+                rnd = jax.random.randint(km2, (pop, R, V), 0, P, jnp.int32)
+            else:
+                u_m = jax.random.uniform(km2, (pop, R, V))
+                rnd = _sample_eligible(u_m, jnp.arange(R)[None, :, None],
+                                       cnt_j, cand_j)
             children = jnp.where(mut, rnd, children)
             # elitism: keep the best individual
             best = jnp.argmin(fit)
@@ -419,13 +541,20 @@ def genetic(problem: PlacementProblem, key: jax.Array, X0: np.ndarray,
 
 def relax(problem: PlacementProblem, key: jax.Array,
           steps: int = 800, lr: float = 0.3,
-          temp0: float = 5.0, temp1: float = 0.05) -> SolveResult:
+          temp0: float = 5.0, temp1: float = 0.05,
+          eligible: Optional[np.ndarray] = None) -> SolveResult:
     """Soft placement: logits -> softmax assignment, smooth power surrogate,
-    Adam descent with annealed temperature, then argmax + coordinate repair."""
+    Adam descent with annealed temperature, then argmax + coordinate repair.
+    ``eligible`` [R, P] (optional) pins ineligible nodes' logits to -inf in
+    the softmax (zero probability mass) and masks the final repair."""
     R, V, P = problem.R, problem.V, problem.P
     logits = 0.01 * jax.random.normal(key, (R, V, P))
+    el_np, _, _ = _eligible_np(eligible)
+    bias = (0.0 if el_np is None
+            else jnp.where(jnp.asarray(el_np)[:, None, :], 0.0, -1e9))
 
     def loss_fn(logits, temp):
+        logits = logits + bias
         soft = jax.nn.softmax(logits / jnp.maximum(temp, 1e-3), axis=-1)
         bd = evaluate(problem, soft, hard=False, temp=temp)
         # entropy push towards one-hot as temp decays
@@ -447,8 +576,8 @@ def relax(problem: PlacementProblem, key: jax.Array,
         logits = logits - lr * mh / (jnp.sqrt(vh) + eps)
         if i % max(1, steps // 40) == 0:
             history.append(float(loss))
-    X = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
-    res = coordinate(problem, X, max_sweeps=4)
+    X = np.asarray(jnp.argmax(logits + bias, axis=-1), np.int32)
+    res = coordinate(problem, X, max_sweeps=4, eligible=eligible)
     return SolveResult(X=res.X, breakdown=res.breakdown, method="relax",
                        history=history + res.history)
 
@@ -475,13 +604,15 @@ def resolve_incremental(problem: PlacementProblem, prev_X: np.ndarray,
                         key: Optional[jax.Array] = None,
                         changed_rows: Optional[Sequence[int]] = None,
                         state: Optional[PlacementState] = None,
-                        sweeps: int = 2, anneal_steps: int = 600,
-                        anneal_chains: int = 8, anneal_t0: float = 5.0,
-                        anneal_t1: float = 0.05,
-                        polish_sweeps: int = 2,
+                        sweeps: Optional[int] = None,
+                        anneal_steps: Optional[int] = None,
+                        anneal_chains: Optional[int] = None,
+                        anneal_t0: Optional[float] = None,
+                        anneal_t1: Optional[float] = None,
+                        polish_sweeps: Optional[int] = None,
                         eligible: Optional[np.ndarray] = None,
-                        pad_positions_to: Optional[int] = None
-                        ) -> SolveResult:
+                        pad_positions_to: Optional[int] = None,
+                        spec=None) -> SolveResult:
     """Warm-start re-solve after service churn: surviving services stay at
     their previous nodes, only the VMs of ``changed_rows`` (new arrivals /
     rows the caller distrusts) are actively re-placed.
@@ -495,16 +626,31 @@ def resolve_incremental(problem: PlacementProblem, prev_X: np.ndarray,
          free VMs with random-restart chains, re-packing survivors;
       3. ``polish_sweeps`` full sweeps over ALL free VMs (monotone).
 
-    ``eligible`` [R, P] bool (optional) restricts each row's destination
-    nodes -- the SLA hop mask of ``embed.embed_latency_bounded`` threaded
-    through every phase (sweep argmins are masked; Metropolis destinations
-    are sampled from each row's eligible set).  ``pad_positions_to`` pads
-    the all-free-VM sweep lists to a fixed length so the jitted sweep
-    compiles once per shape bucket (core.dynamic.OnlineEmbedder).
+    ``spec`` (a ``repro.api.PlacementSpec``, optional) supplies the solver
+    knobs and -- unless ``eligible`` is passed explicitly -- the constraint
+    masks via ``spec.masks(problem)``; explicit keyword arguments override
+    the spec.  ``eligible`` [R, P] bool restricts each row's destination
+    nodes through every phase (sweep argmins are masked; Metropolis
+    destinations are sampled from each row's eligible set).
+    ``pad_positions_to`` pads the all-free-VM sweep lists to a fixed length
+    so the jitted sweep compiles once per shape bucket
+    (core.dynamic.OnlineEmbedder).
 
     This is LOCAL re-optimization -- a periodic full-portfolio defrag
-    (`solve_cfn`) bounds its drift; see core.dynamic.OnlineEmbedder.
+    (`solve_portfolio`) bounds its drift; see core.dynamic.OnlineEmbedder.
     """
+    pick = lambda v, sv, d: (v if v is not None
+                             else (sv if sv is not None else d))
+    sweeps = pick(sweeps, getattr(spec, "sweeps", None), 2)
+    anneal_steps = pick(anneal_steps, getattr(spec, "anneal_steps", None), 600)
+    anneal_chains = pick(anneal_chains,
+                         getattr(spec, "anneal_chains", None), 8)
+    anneal_t0 = pick(anneal_t0, getattr(spec, "anneal_t0", None), 5.0)
+    anneal_t1 = pick(anneal_t1, getattr(spec, "anneal_t1", None), 0.05)
+    polish_sweeps = pick(polish_sweeps,
+                         getattr(spec, "polish_sweeps", None), 2)
+    if eligible is None and spec is not None:
+        eligible = spec.masks(problem)
     key = jax.random.PRNGKey(0) if key is None else key
     aux = build_aux(problem)
     if state is None:
@@ -516,13 +662,8 @@ def resolve_incremental(problem: PlacementProblem, prev_X: np.ndarray,
     free = np.asarray(aux.free_pos)
     if free.shape[0] == 0:  # everything pinned: nothing to re-place
         return _result(problem, state.X, "incremental")
-    el_np = None
-    el_j = None
-    if eligible is not None:
-        el_np = np.asarray(eligible, bool).copy()
-        dead = ~el_np.any(axis=1)
-        el_np[dead] = True          # no eligible node: fall back to all
-        el_j = jnp.asarray(el_np)
+    el_np, cnt_np, cand_np = _eligible_np(eligible)
+    el_j = None if el_np is None else jnp.asarray(el_np)
     cands = [state.X]
     pos_changed = free[np.isin(free[:, 0], changed_rows)]
 
@@ -548,16 +689,10 @@ def resolve_incremental(problem: PlacementProblem, prev_X: np.ndarray,
                                         0, P, jnp.int32)
         else:
             # destinations sampled from each proposal row's eligible set
-            cnt = el_np.sum(axis=1).astype(np.int32)          # [R] >= 1
-            cand_tbl = np.zeros((problem.R, P), np.int32)
-            for rr in range(problem.R):
-                ids = np.nonzero(el_np[rr])[0]
-                cand_tbl[rr, :len(ids)] = ids
             rows = j_prop // V
             u_dst = jax.random.uniform(kp, (anneal_steps, anneal_chains))
-            cnt_j = jnp.asarray(cnt)[rows]
-            idx = jnp.minimum((u_dst * cnt_j).astype(jnp.int32), cnt_j - 1)
-            p_prop = jnp.asarray(cand_tbl)[rows, idx]
+            p_prop = _sample_eligible(u_dst, rows, jnp.asarray(cnt_np),
+                                      jnp.asarray(cand_np))
         u_prop = jax.random.uniform(ka, (anneal_steps, anneal_chains))
         temps = anneal_t0 * (anneal_t1 / anneal_t0) ** (
             jnp.arange(anneal_steps) / max(1, anneal_steps - 1))
@@ -567,11 +702,9 @@ def resolve_incremental(problem: PlacementProblem, prev_X: np.ndarray,
         else:
             # restarted chains must also start on eligible nodes
             u_r = jax.random.uniform(kx, Xc.shape)
-            cnt_rv = jnp.asarray(cnt)[:, None]                # [R, 1]
-            idx_r = jnp.minimum((u_r * cnt_rv).astype(jnp.int32),
-                                cnt_rv - 1)
-            rand = jnp.asarray(cand_tbl)[
-                jnp.arange(problem.R)[None, :, None], idx_r]
+            rand = _sample_eligible(
+                u_r, jnp.arange(problem.R)[None, :, None],
+                jnp.asarray(cnt_np), jnp.asarray(cand_np))
         # chain 0 stays warm; the rest restart at the target positions only
         tgt_mask = np.zeros((problem.R, V), dtype=bool)
         tgt_mask[target[:, 0], target[:, 1]] = True
@@ -604,26 +737,86 @@ def resolve_incremental(problem: PlacementProblem, prev_X: np.ndarray,
 # Portfolio solver: the "CFN (MILP)" stand-in
 # ---------------------------------------------------------------------------
 
-def solve_cfn(problem: PlacementProblem, topo: CFNTopology,
-              key: Optional[jax.Array] = None,
-              effort: str = "standard") -> SolveResult:
-    """Best-of portfolio.  On instances small enough for `exhaustive` this is
-    provably optimal; tests pin the portfolio to the exhaustive optimum."""
+def solve_portfolio(problem: PlacementProblem, topo: CFNTopology,
+                    spec=None, key: Optional[jax.Array] = None,
+                    eligible: Optional[np.ndarray] = None) -> SolveResult:
+    """Best-of portfolio driven by a ``repro.api.PlacementSpec``: effort
+    tier, anneal backend, and constraint masks all come from the spec
+    (``eligible`` overrides ``spec.masks(problem)`` when given explicitly),
+    so a full-portfolio solve -- including the online engine's defrag --
+    enforces exactly the constraint set every other path enforces.
+
+    On instances small enough for `exhaustive` the unconstrained portfolio
+    is provably optimal; tests pin it to the exhaustive optimum.
+    """
     key = jax.random.PRNGKey(0) if key is None else key
+    effort = getattr(spec, "effort", "standard")
+    backend = getattr(spec, "backend", "auto")
+    if eligible is None and spec is not None:
+        eligible = spec.masks(problem)
     cdc = topo.layer_indices("cdc")[0]
     candidates: List[SolveResult] = []
-    # warm starts: CDC-everything and IoT-first-fit
+    # warm starts: CDC-everything and IoT-first-fit (the masked coordinate
+    # sweeps project both onto the eligible set in their first pass)
     base_cdc = np.full((problem.R, problem.V), cdc, dtype=np.int32)
-    candidates.append(coordinate(problem, base_cdc))
+    candidates.append(coordinate(problem, base_cdc, eligible=eligible))
     iot_ff = fixed_layer(problem, topo, "iot")
-    candidates.append(coordinate(problem, iot_ff.X))
+    candidates.append(coordinate(problem, iot_ff.X, eligible=eligible))
     if effort in ("standard", "high"):
         k1, k2 = jax.random.split(key)
         warm = min(candidates, key=lambda r: r.objective).X
         n_steps = 4000 if effort == "standard" else 12000
-        candidates.append(anneal(problem, k1, warm, n_steps=n_steps))
+        candidates.append(anneal(problem, k1, warm, n_steps=n_steps,
+                                 backend=backend, eligible=eligible))
         if effort == "high":
-            candidates.append(genetic(problem, k2, warm))
+            candidates.append(genetic(problem, k2, warm, eligible=eligible))
     best = min(candidates, key=lambda r: r.objective)
     return SolveResult(X=best.X, breakdown=best.breakdown,
                        method=f"cfn-milp({best.method})", history=best.history)
+
+
+def solve_cfn(problem: PlacementProblem, topo: CFNTopology,
+              key: Optional[jax.Array] = None,
+              effort: str = "standard") -> SolveResult:
+    """Deprecated shim: constructs a ``PlacementSpec`` and routes through
+    ``solve_portfolio`` (use ``repro.api.CFNSession`` / ``solve_portfolio``
+    directly).  Results are identical to the pre-spec portfolio."""
+    from . import api
+    warnings.warn(
+        "solve_cfn() is deprecated; build a repro.api.PlacementSpec and "
+        "call solve_portfolio() (or use repro.api.CFNSession)",
+        DeprecationWarning, stacklevel=2)
+    return solve_portfolio(problem, topo, api.PlacementSpec(effort=effort),
+                           key)
+
+
+def repair_to_eligible(problem: PlacementProblem, res: SolveResult,
+                       eligible: np.ndarray) -> SolveResult:
+    """Force a solved placement onto an [R, P] eligibility mask.
+
+    Free VMs already inside their row's eligible set are untouched; each
+    violator is moved to its masked ``delta_sweep`` argmin (live state kept
+    consistent so later repairs see earlier ones).  The safety net that
+    makes every ``spec.masks`` consumer -- including solvers with no native
+    masking, like the fixed-layer baselines -- end on an eligible
+    placement.  A no-op (the input result is returned as-is, history and
+    all) when nothing violates.
+    """
+    el_np, _, _ = _eligible_np(eligible)
+    X = np.asarray(res.X).copy()
+    fixed = np.asarray(problem.fixed_mask)
+    rows = np.arange(X.shape[0])[:, None]
+    if not np.any(~el_np[rows, X] & ~fixed):
+        return res
+    aux = build_aux(problem)
+    state = init_state(problem, jnp.asarray(X))
+    for r in range(X.shape[0]):
+        mask_r = jnp.asarray(el_np[r])
+        for v in range(X.shape[1]):
+            if fixed[r, v] or el_np[r, X[r, v]]:
+                continue
+            obj_all = delta_sweep(problem, aux, state, r, v)
+            best = int(jnp.argmin(jnp.where(mask_r, obj_all, jnp.inf)))
+            state = apply_move(problem, aux, state, r, v, best)
+            X[r, v] = best
+    return _result(problem, X, res.method, res.history)

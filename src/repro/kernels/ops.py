@@ -54,13 +54,17 @@ def placement_objective(problem: PlacementProblem, Xb: jax.Array, *,
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def fused_anneal(problem: PlacementProblem, aux, Xc: jax.Array,
                  j_prop: jax.Array, p_prop: jax.Array, u_prop: jax.Array,
-                 temps: jax.Array, *,
+                 temps: jax.Array, eligible: Optional[jax.Array] = None, *,
                  interpret: Optional[bool] = None):
     """Fused Metropolis annealing: whole chains in ONE kernel launch.
 
     Xc [C, R, V] int32 starting placements (pins applied by the caller);
     j_prop/p_prop/u_prop [C, T] proposals (flat free-VM index, destination
     node, uniform draw); temps [T]; aux = core.power.build_aux(problem).
+    ``eligible`` [R, P] bool (optional) masks the proposal stream onto each
+    service row's eligible node set (pp.mask_proposals) before it reaches
+    the kernel -- the SLA constraint surface of repro.api.PlacementSpec
+    enforced identically to the pure-JAX backends.
     Returns (best_X [C, R, V], stats [C, 2] = (best obj, final obj)).
     Chain state (placement + live load tensors) stays resident in VMEM
     across all T steps -- no per-step objective launch.  Initial loads are
@@ -69,6 +73,8 @@ def fused_anneal(problem: PlacementProblem, aux, Xc: jax.Array,
     """
     interpret = _default_interpret() if interpret is None else interpret
     C, R, V = Xc.shape
+    if eligible is not None:
+        p_prop = pp.mask_proposals(j_prop, p_prop, eligible, V)
     Xflat = Xc.reshape(C, -1).astype(jnp.int32)
     omega0, theta0, lam0, obj0 = batched_hard_loads(problem, Xc)
     (_, _, F, _, route_flat, proc_params, net_params) = \

@@ -50,6 +50,29 @@ SNAP_GFLOPS = 1.0e-3
 SNAP_MBPS = 1.0e-2
 
 
+def mask_proposals(j_prop, p_prop, eligible, V: int):
+    """Project precomputed proposal destinations onto per-row eligible sets.
+
+    The fused anneal kernel streams its Metropolis proposals from VMEM
+    rather than sampling in-kernel, so SLA eligibility
+    (``repro.api.PlacementSpec.masks``) enters the kernel as proposal
+    masking HERE: any destination outside its service row's eligible set is
+    replaced by that row's first eligible node before the stream reaches
+    the kernel, so the chain can never be asked to accept an ineligible
+    move.  Upstream samplers (``core.solvers._anneal_proposals``) already
+    draw from the eligible set, making this the kernel-side guarantee
+    rather than the primary sampler.
+
+    j_prop/p_prop [C, T] (flat free-VM index, destination node);
+    eligible [R, P] bool; V = VMs per service (flat index stride).
+    """
+    el = jnp.asarray(eligible)
+    rows = j_prop // V
+    ok = el[rows, p_prop]
+    fallback = jnp.argmax(el, axis=1).astype(p_prop.dtype)
+    return jnp.where(ok, p_prop, fallback[rows])
+
+
 def _power_terms(omega, theta, lam, pp, nn):
     """Eq.(1)/(2) from loads; broadcasts over leading dims.
 

@@ -1,28 +1,25 @@
 """Placement-aware serving scheduler: the paper's technique in the serving
-path, now *online*.
+path, now a thin consumer of the unified placement API.
 
 Each inference service (an architecture + token rate) becomes a VSR; the
-scheduler embeds the active fleet into the CFN substrate and accounts
-energy per tenant with the same Eq.(1)/(2) power model.  ``add_service`` /
-``remove_service`` are churn events handled by the core online engine
-(core.dynamic.OnlineEmbedder): the previous embedding is carried through
-``power.warm_state`` and only the churned service's VMs are re-placed by
-``solvers.resolve_incremental`` -- a periodic full-portfolio defrag bounds
-the drift of local re-optimization.  Per-service ``Placement.power_w`` is
-attributed from the per-node breakdown via each service's placed nodes and
-traversed routes (``power.attribute_power``), so tenant numbers sum to the
-fleet total.
+scheduler drives a ``repro.api.CFNSession`` whose declarative
+``PlacementSpec`` carries the constraint set (SLA hop bounds, admission
+power budget) and the portfolio configuration.  ``add_service`` /
+``remove_service`` are churn events on the session: the previous embedding
+is carried through ``power.warm_state`` and only the churned service's VMs
+are re-placed by ``solvers.resolve_incremental`` -- a periodic
+full-portfolio defrag (masked by the same spec) bounds the drift of local
+re-optimization.  Per-service ``Placement.power_w`` is attributed from the
+per-node breakdown via each service's placed nodes and traversed routes
+(``CFNSession.attribute``), so tenant numbers sum to the fleet total.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from typing import Dict, List, Optional
 
-import numpy as np
-
-from ..core import dynamic as cfn_dynamic
+from ..core import api as cfn_api
 from ..core import embed as cfn_embed
-from ..core import power as cfn_power
 from ..core import vsr as cfn_vsr
 from ..core.topology import CFNTopology
 from ..models.config import ArchConfig
@@ -48,21 +45,31 @@ class Placement:
 class EnergyAwareScheduler:
     def __init__(self, topo: CFNTopology, method: str = "cfn-milp",
                  defrag_every: int = 16, max_hops: Optional[int] = None,
-                 admit_power_budget_w: Optional[float] = None):
+                 admit_power_budget_w: Optional[float] = None,
+                 spec: Optional[cfn_api.PlacementSpec] = None):
+        if spec is None:
+            spec = cfn_api.PlacementSpec(
+                method=method, defrag_every=defrag_every, max_hops=max_hops,
+                power_budget_w=admit_power_budget_w)
         self.topo = topo
-        self.method = method
+        self.session = cfn_api.CFNSession(topo, spec)
         self.services: List[Service] = []
         self.rejected: List[str] = []   # names refused by admission control
-        self._engine = cfn_dynamic.OnlineEmbedder(
-            topo, defrag_every=defrag_every, method=method,
-            max_hops=max_hops, admit_power_budget_w=admit_power_budget_w)
         self._by_sid: Dict[int, Service] = {}
+
+    @property
+    def spec(self) -> cfn_api.PlacementSpec:
+        return self.session.spec
+
+    @property
+    def method(self) -> str:
+        return self.session.spec.method
 
     # -- churn events ------------------------------------------------------
     def add_service(self, svc: Service) -> List[Placement]:
         """Admit a service: one incremental re-embedding event.  Names key
         the removal API, so they must be unique among live services.  With
-        SLA admission control configured (max_hops / power budget), a
+        SLA admission control configured (spec.max_hops / power budget), a
         refused service is recorded in ``self.rejected`` and the fleet
         placement is returned unchanged."""
         if any(s.name == svc.name for s in self.services):
@@ -70,11 +77,11 @@ class EnergyAwareScheduler:
         vs = cfn_vsr.from_architecture(
             svc.arch, tokens_per_s=svc.tokens_per_s, n_stages=svc.n_stages,
             source_node=svc.source_node)
-        if self._engine.add(vs) is None:
+        if self.session.add(vs) is None:
             self.rejected.append(svc.name)
             return self.placements()
         self.services.append(svc)
-        self._by_sid[self._engine.sids[-1]] = svc
+        self._by_sid[self.session.sids[-1]] = svc
         return self.placements()
 
     def remove_service(self, name: str) -> List[Placement]:
@@ -83,26 +90,27 @@ class EnergyAwareScheduler:
                     if svc.name == name), None)
         if sid is None:
             raise KeyError(f"no service named {name!r}")
-        self._engine.remove(sid)
+        self.session.remove(sid)
         svc = self._by_sid.pop(sid)
         self.services.remove(svc)    # by identity: exactly this admission
         return self.placements()
 
     def defrag(self) -> List[Placement]:
-        """Force a full-portfolio re-pack of the current fleet."""
-        self._engine.defrag()
+        """Force a full-portfolio re-pack of the current fleet (the spec's
+        constraint masks apply -- hop-bounded services stay in radius)."""
+        self.session.defrag()
         return self.placements()
 
     # -- reporting ---------------------------------------------------------
     def placements(self) -> List[Placement]:
-        res = self._engine.result
+        res = self.session.result
         if res is None:
             return []
-        per_w = self._engine.per_service_power_w()
+        per_w = self.session.attribute()
         placements = []
-        for row, sid in enumerate(self._engine.sids):
+        for row, sid in enumerate(self.session.sids):
             svc = self._by_sid[sid]
-            V = self._engine.service_vms(row)   # rest is concat padding
+            V = self.session.service_vms(row)   # rest is bucket/concat pad
             nodes = [self.topo.proc_names[p] for p in res.X[row][:V]]
             layers = [self.topo.proc_layer[p] for p in res.X[row][:V]]
             placements.append(Placement(
@@ -112,11 +120,11 @@ class EnergyAwareScheduler:
 
     def solve(self) -> List[Placement]:
         """Kept for the one-shot API: returns the current placements (the
-        engine re-solves eagerly on every churn event)."""
+        session re-solves eagerly on every churn event)."""
         return self.placements()
 
     def total_power_w(self) -> float:
-        return self._engine.power_w()
+        return self.session.power_w()
 
     def savings_vs_cloud(self) -> Dict[str, float]:
         vsrs = self._vsrs()

@@ -25,10 +25,60 @@ except ImportError:  # fallback: seeded example sweep
         def sample(self, rng: "_np.random.Generator") -> int:
             return int(rng.integers(self.min_value, self.max_value + 1))
 
+    class _Floats:
+        def __init__(self, min_value: float, max_value: float):
+            self.min_value = min_value
+            self.max_value = max_value
+
+        def sample(self, rng: "_np.random.Generator") -> float:
+            return float(rng.uniform(self.min_value, self.max_value))
+
+    class _Just:
+        def __init__(self, value):
+            self.value = value
+
+        def sample(self, rng):
+            return self.value
+
+    class _SampledFrom:
+        def __init__(self, options):
+            self.options = list(options)
+
+        def sample(self, rng):
+            return self.options[int(rng.integers(0, len(self.options)))]
+
+    class _OneOf:
+        def __init__(self, strategies):
+            self.strategies = strategies
+
+        def sample(self, rng):
+            k = int(rng.integers(0, len(self.strategies)))
+            return self.strategies[k].sample(rng)
+
     class st:  # noqa: N801 - mimics `hypothesis.strategies as st`
         @staticmethod
         def integers(min_value: int, max_value: int) -> _Integers:
             return _Integers(min_value, max_value)
+
+        @staticmethod
+        def floats(min_value: float, max_value: float) -> _Floats:
+            return _Floats(min_value, max_value)
+
+        @staticmethod
+        def none() -> _Just:
+            return _Just(None)
+
+        @staticmethod
+        def booleans() -> _SampledFrom:
+            return _SampledFrom([False, True])
+
+        @staticmethod
+        def sampled_from(options) -> _SampledFrom:
+            return _SampledFrom(options)
+
+        @staticmethod
+        def one_of(*strategies) -> _OneOf:
+            return _OneOf(strategies)
 
     def settings(**kwargs):
         def deco(fn):

@@ -1,0 +1,337 @@
+"""Unified PlacementSpec / CFNSession API tests (the api_redesign PR).
+
+Covers: export consistency across repro.api / repro.core / repro.core.api,
+PlacementSpec pytree round-tripping, spec.masks == the legacy kwarg-path
+masks, shim-vs-session result parity for every deprecated entry point,
+the defrag-respects-max_hops regression (ROADMAP closure), V-width
+bucketing, and the acceptance-criterion churn replay: the same trace
+through CFNSession.replay and the legacy replay(OnlineEmbedder, ...) path
+produces identical placements, power, and admission counters
+(f64-oracle-checked), including a defrag step under an SLA hop bound.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+import repro.api as api_mod
+import repro.core as core_mod
+import repro.core.api as core_api_mod
+from repro.api import CFNSession, PlacementSpec
+from repro.core import dynamic, embed, power, solvers, topology, vsr
+from repro.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def topo():
+    return topology.paper_topology()
+
+
+def _quiet(fn, *a, **kw):
+    """Call a deprecated shim without polluting the warning log, asserting
+    it really does deprecate."""
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        out = fn(*a, **kw)
+    assert any(issubclass(w.category, DeprecationWarning) for w in rec)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# exports (CI satellite): __all__ consistent, no dangling names
+# ---------------------------------------------------------------------------
+
+def test_api_exports_consistent():
+    for mod in (core_mod, core_api_mod, api_mod):
+        for name in mod.__all__:
+            assert hasattr(mod, name), \
+                f"{mod.__name__}.__all__ dangles: {name}"
+    # the facade re-exports exactly the core api surface
+    assert set(api_mod.__all__) == set(core_api_mod.__all__)
+    # the spec/session layer is reachable from both entry points
+    for name in ("PlacementSpec", "CFNSession", "solve_portfolio"):
+        assert name in core_mod.__all__ and name in api_mod.__all__
+
+
+def test_spec_validates_config():
+    with pytest.raises(ValueError):
+        PlacementSpec(method="nope")
+    with pytest.raises(ValueError):
+        PlacementSpec(effort="extreme")
+    with pytest.raises(ValueError):
+        PlacementSpec(backend="cuda")
+    s = PlacementSpec().replace(effort="high")
+    assert s.effort == "high" and PlacementSpec().effort == "standard"
+
+
+# ---------------------------------------------------------------------------
+# spec round-tripping (pytree) and mask equivalence
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=25)
+@given(mh=st.one_of(st.none(), st.integers(0, 6)),
+       effort=st.sampled_from(["quick", "standard", "high"]),
+       steps=st.integers(1, 5000), brow=st.booleans(), bcol=st.booleans(),
+       budget=st.one_of(st.none(), st.floats(0.0, 1e4)),
+       with_el=st.booleans())
+def test_spec_pytree_roundtrip(mh, effort, steps, brow, bcol, budget,
+                               with_el):
+    el = np.ones((3, 5), bool) if with_el else None
+    if el is not None:
+        el[1, ::2] = False
+    spec = PlacementSpec(max_hops=mh, eligible=el, power_budget_w=budget,
+                         effort=effort, anneal_steps=steps,
+                         bucket_rows=brow, bucket_cols=bcol)
+    leaves, treedef = jax.tree_util.tree_flatten(spec)
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    for f in spec.__dataclass_fields__:
+        a, b = getattr(spec, f), getattr(back, f)
+        if isinstance(a, np.ndarray) or isinstance(b, np.ndarray):
+            np.testing.assert_array_equal(a, b)
+        else:
+            assert a == b, f
+    # array-valued constraints are leaves, config is static aux data
+    n_leaves = len(leaves)
+    assert n_leaves == (0 if mh is None else 1) + (1 if with_el else 0)
+
+
+@settings(deadline=None, max_examples=10)
+@given(seed=st.integers(0, 10_000), mh=st.integers(0, 6))
+def test_spec_masks_match_legacy_kwarg_masks(seed, mh):
+    """spec.masks(problem) == the [R, P] stack the old kwarg paths built
+    (hops[src] <= max_hops per service row, from topo.path_hops)."""
+    topo = topology.paper_topology()
+    vs = vsr.random_vsrs(4, rng=seed, source_nodes=[0, 1, 2])
+    prob = power.build_problem(topo, vs)
+    el = PlacementSpec(max_hops=mh).masks(prob)
+    hops = np.asarray(topo.path_hops)
+    want = np.stack([hops[int(s)] <= mh for s in vs.src])
+    np.testing.assert_array_equal(el, want)
+    # unconstrained spec -> no mask at all
+    assert PlacementSpec().masks(prob) is None
+    # explicit eligibility ANDs on top of the hop mask
+    extra = np.ones_like(want)
+    extra[:, 0] = False
+    both = PlacementSpec(max_hops=mh, eligible=extra).masks(prob)
+    np.testing.assert_array_equal(both, want & extra)
+
+
+def test_positional_constraints_rejected_by_churn(topo):
+    """Sequence max_hops / explicit eligible bind to batch rows; a removal
+    would shift rows and silently re-assign SLAs, so churn events refuse
+    them (the static batch path still accepts them)."""
+    vs = vsr.random_vsrs(2, rng=3, source_nodes=[0])
+    spec = PlacementSpec(max_hops=[1, 5], method="coordinate",
+                         bucket_rows=False, bucket_cols=False)
+    ses = CFNSession(topo, spec)
+    res = ses.solve(vs)                      # batch path: fine
+    hops = np.asarray(topo.path_hops)
+    for r, mh in enumerate([1, 5]):
+        assert all(hops[0, p] <= mh for p in res.X[r])
+    with pytest.raises(ValueError):
+        ses.remove(ses.sids[0])
+    with pytest.raises(ValueError):
+        ses.add(vsr.random_vsrs(1, rng=9, source_nodes=[0]))
+    el = np.ones((1, topo.P), bool)
+    ses2 = CFNSession(topo, PlacementSpec(eligible=el))
+    with pytest.raises(ValueError):
+        ses2.add(vsr.random_vsrs(1, rng=9, source_nodes=[0]))
+
+
+def test_spec_masks_per_service_and_padding(topo):
+    """A length-n max_hops constrains the first n rows only; bucket pad
+    rows beyond an explicit mask stay unconstrained."""
+    vs = vsr.random_vsrs(3, rng=0, source_nodes=[0])
+    prob = power.build_problem(topo, vs, pad_to_rows=4)
+    el = PlacementSpec(max_hops=[1, 2, 3]).masks(prob)
+    hops = np.asarray(topo.path_hops)
+    for r, mh in enumerate([1, 2, 3]):
+        np.testing.assert_array_equal(el[r], hops[0] <= mh)
+    assert el[3].all()          # pad row unconstrained
+
+
+# ---------------------------------------------------------------------------
+# shim-vs-session / shim-vs-spec parity
+# ---------------------------------------------------------------------------
+
+def test_shim_embed_matches_session(topo):
+    """embed() (deprecated kwargs) == CFNSession.solve under the same spec
+    (coordinate is deterministic, so parity is exact)."""
+    vs = vsr.random_vsrs(4, rng=11, source_nodes=[0])
+    legacy = _quiet(embed.embed, topo, vs, "coordinate")
+    spec = PlacementSpec(method="coordinate",
+                         bucket_rows=False, bucket_cols=False)
+    res = CFNSession(topo, spec).solve(vs)
+    np.testing.assert_array_equal(legacy.X, res.X)
+    assert legacy.power == pytest.approx(res.power, abs=1e-6)
+
+
+def test_shim_solve_cfn_matches_portfolio(topo):
+    """solve_cfn() (deprecated) == solve_portfolio under an equivalent
+    spec: identical placement, method tag, and objective."""
+    vs = vsr.random_vsrs(3, rng=5, source_nodes=[0])
+    prob = power.build_problem(topo, vs)
+    legacy = _quiet(solvers.solve_cfn, prob, topo, jax.random.PRNGKey(0))
+    res = solvers.solve_portfolio(prob, topo, PlacementSpec(),
+                                  jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(legacy.X, res.X)
+    assert legacy.method == res.method
+    assert legacy.objective == pytest.approx(res.objective, abs=1e-6)
+
+
+def test_resolve_incremental_consumes_spec(topo):
+    """resolve_incremental(spec=...) == the legacy eligible= kwarg path."""
+    vs = vsr.random_vsrs(4, rng=7, source_nodes=[0])
+    prob = power.build_problem(topo, vs)
+    spec = PlacementSpec(max_hops=2, anneal_steps=80, anneal_chains=4)
+    X0 = np.zeros((prob.R, prob.V), np.int32)
+    via_spec = solvers.resolve_incremental(
+        prob, X0, key=jax.random.PRNGKey(0), changed_rows=[3], spec=spec)
+    el = np.asarray(topo.path_hops)[0] <= 2
+    legacy = solvers.resolve_incremental(
+        prob, X0, key=jax.random.PRNGKey(0), changed_rows=[3],
+        anneal_steps=80, anneal_chains=4,
+        eligible=np.broadcast_to(el, (prob.R, prob.P)))
+    np.testing.assert_array_equal(via_spec.X, legacy.X)
+    assert all(el[p] for p in via_spec.X[3])
+
+
+# ---------------------------------------------------------------------------
+# defrag under SLA masks (ROADMAP open-item regression)
+# ---------------------------------------------------------------------------
+
+def test_portfolio_respects_max_hops(topo):
+    """The full portfolio -- the defrag path -- threads spec.masks through
+    coordinate warm starts AND Metropolis proposals: no VM ever lands
+    outside its service's hop radius, so the CDC (5+ hops away) is
+    unreachable under a 2-hop bound."""
+    vs = vsr.random_vsrs(3, rng=1, source_nodes=[0])
+    prob = power.build_problem(topo, vs)
+    spec = PlacementSpec(max_hops=2)
+    res = solvers.solve_portfolio(prob, topo, spec, jax.random.PRNGKey(0))
+    hops = np.asarray(topo.path_hops)
+    assert all(hops[0, p] <= 2 for p in res.X.reshape(-1))
+    assert topo.proc_index("cdc0") not in set(res.X.reshape(-1))
+    assert res.method.startswith("cfn-milp")
+
+
+def test_engine_defrag_never_moves_service_out_of_radius(topo):
+    """A hop-constrained service survives an explicit full-portfolio
+    defrag inside its radius (the hole the spec redesign closes)."""
+    make = lambda sid: vsr.random_vsrs(1, rng=40 + sid, source_nodes=[0])
+    spec = PlacementSpec(max_hops=2, defrag_every=0, anneal_steps=60,
+                         anneal_chains=4, polish_sweeps=1)
+    ses = CFNSession(topo, spec, key=jax.random.PRNGKey(2))
+    for sid in range(3):
+        assert ses.add(make(sid), sid=sid) is not None
+    res = ses.defrag()
+    assert res is not None
+    hops = np.asarray(topo.path_hops)
+    for row in range(ses.n_live):
+        assert all(hops[0, p] <= 2 for p in ses.X[row]), \
+            (row, ses.X[row])
+    # the defrag really ran a full solve against the live incumbent
+    assert ses.stats[-1].event == "defrag"
+
+
+# ---------------------------------------------------------------------------
+# V-width bucketing (satellite): power-of-two VM columns
+# ---------------------------------------------------------------------------
+
+def test_build_problem_col_padding_is_free(topo):
+    """pad_to_cols adds pinned zero-demand columns: objective, loads, and
+    the free-position set are unchanged."""
+    vs = vsr.random_vsrs(3, rng=2, n_vms=3, source_nodes=[0])
+    prob = power.build_problem(topo, vs)
+    prob_p = power.build_problem(topo, vs, pad_to_cols=4)
+    assert prob.V == 3 and prob_p.V == 4
+    aux, aux_p = power.build_aux(prob), power.build_aux(prob_p)
+    assert aux.free_pos.shape[0] == aux_p.free_pos.shape[0]
+    rng = np.random.default_rng(0)
+    X = rng.integers(0, prob.P, size=(3, 3)).astype(np.int32)
+    Xp = np.concatenate([X, np.zeros((3, 1), np.int32)], axis=1)
+    s1 = power.init_state(prob, jnp.asarray(X))
+    s2 = power.init_state(prob_p, jnp.asarray(Xp))
+    assert abs(float(s1.obj) - float(s2.obj)) <= \
+        1e-5 * max(1.0, abs(float(s1.obj)))
+    np.testing.assert_allclose(np.asarray(s1.lam), np.asarray(s2.lam),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1.omega), np.asarray(s2.omega),
+                               atol=1e-4)
+    # pad columns are pinned to each row's source
+    fm = np.asarray(prob_p.fixed_mask)
+    fn = np.asarray(prob_p.fixed_node)
+    assert fm[:, 3].all()
+    np.testing.assert_array_equal(fn[:, 3], np.asarray(vs.src))
+
+
+def test_engine_col_bucketing_bounds_shapes(topo):
+    """Mixing 3-VM and 5-VM services keeps the problem's V on power-of-two
+    buckets (one compile per bucket, not per distinct concat width), and
+    the committed state still matches a from-scratch rebuild."""
+    make = lambda sid, n: vsr.random_vsrs(1, rng=600 + sid, n_vms=n,
+                                          source_nodes=[0])
+    spec = PlacementSpec(defrag_every=0, anneal_steps=60, anneal_chains=4,
+                         polish_sweeps=1)
+    ses = CFNSession(topo, spec, key=jax.random.PRNGKey(4))
+    shapes = set()
+    for sid, n in enumerate((3, 3, 5, 4)):
+        ses.add(make(sid, n), sid=sid)
+        shapes.add((ses.problem.R, ses.problem.V))
+    assert all((v & (v - 1)) == 0 for _, v in shapes), shapes   # pow2 V
+    assert {v for _, v in shapes} <= {4, 8}, shapes
+    fresh = power.init_state(ses.problem, jnp.asarray(ses.X))
+    assert abs(float(fresh.obj) - ses.objective()) <= \
+        1e-3 + 1e-6 * abs(float(fresh.obj))
+    per = ses.attribute()
+    assert abs(sum(per.values()) - ses.power_w()) <= \
+        1e-6 * max(1.0, ses.power_w())
+    # natural service widths are preserved for reporting
+    assert [ses.service_vms(r) for r in range(4)] == [3, 3, 5, 4]
+
+
+# ---------------------------------------------------------------------------
+# acceptance: one churn trace, session vs legacy engine, defrag + SLA
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("max_hops", [None, 2])
+def test_session_replay_matches_legacy_engine(topo, max_hops):
+    """The same churn trace through CFNSession.replay and the legacy
+    replay(OnlineEmbedder(kwargs...)) shim: identical placements, power,
+    and admission counters (f64-oracle-checked), including defrag steps
+    that respect max_hops."""
+    events = dynamic.churn_trace(3, 4, rng=1)
+    make = lambda sid: vsr.random_vsrs(1, rng=700 + sid, source_nodes=[0])
+
+    eng = _quiet(dynamic.OnlineEmbedder, topo, key=jax.random.PRNGKey(7),
+                 defrag_every=3, anneal_steps=60, anneal_chains=4,
+                 polish_sweeps=1, max_hops=max_hops)
+    legacy_stats = dynamic.replay(eng, events, make)
+
+    spec = PlacementSpec(defrag_every=3, anneal_steps=60, anneal_chains=4,
+                         polish_sweeps=1, max_hops=max_hops)
+    ses = CFNSession(topo, spec, key=jax.random.PRNGKey(7))
+    ses_stats = ses.replay(events, make)
+
+    assert eng.sids == ses.sids
+    np.testing.assert_array_equal(eng.X, ses.X)
+    assert eng.power_w() == pytest.approx(ses.power_w(), abs=1e-9)
+    assert eng.admission == ses.admission
+    assert [s.event for s in legacy_stats] == [s.event for s in ses_stats]
+    assert [s.method for s in legacy_stats] == [s.method for s in ses_stats]
+
+    # the engine's reported objective is real: float64 oracle check
+    want = ref.placement_objective_f64(ses.problem, ses.X)
+    assert abs(ses.objective() - want) <= 5e-2 + 1e-5 * abs(want)
+
+    # the trace crossed the defrag cadence: at least one full solve ran
+    full = [s for s in legacy_stats
+            if s.method.startswith(("cfn-milp", "defrag-kept"))]
+    assert full, [s.method for s in legacy_stats]
+    if max_hops is not None:
+        hops = np.asarray(topo.path_hops)
+        for row in range(ses.n_live):
+            assert all(hops[0, p] <= max_hops for p in ses.X[row])
