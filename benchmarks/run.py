@@ -94,6 +94,37 @@ def run_online():
               f"mean_event={d['mean_event_s']*1e3:.1f}ms -> BENCH_online.json")
 
 
+def run_quality():
+    out = kernel_bench.solver_quality()
+    for row in out["quality"]:
+        r = row["reference"]
+        print(f"quality: {row['scenario']:10s} P={row['P']:4d} "
+              f"reference obj={r['objective']:.1f} "
+              f"({r['steps']} steps, {r['wall_s']}s)")
+        for effort, e in row["efforts"].items():
+            print(f"quality:   {effort:9s} obj={e['objective']:.1f} "
+                  f"gap={e['gap_vs_reference']:+.3%} "
+                  f"wall={e['wall_s']}s ({e['method']})"
+                  f" -> BENCH_quality.json")
+
+
+def run_federated():
+    out = kernel_bench.federated_solve()
+    f, d = out["flat"], out["federated"]
+    print(f"federated: flat={f['wall_s']*1e3:.0f}ms "
+          f"obj={f['objective']:.1f} | "
+          f"federated={d['wall_s']*1e3:.0f}ms "
+          f"(cold {d['wall_cold_s']*1e3:.0f}ms, "
+          f"{d['compiles_first_solve']} compile) "
+          f"obj={d['objective']:.1f} "
+          f"({out['speedup_vs_flat']}x, "
+          f"ratio {out['objective_ratio_fed_vs_flat']})")
+    print(f"federated: regional W={d['regional_w']} "
+          f"inter={d['inter_region_w']}W "
+          f"conservation_gap={d['conservation_gap']:.2e} "
+          f"-> BENCH_federated.json")
+
+
 def run_flash():
     rows = kernel_bench.flash_cases()
     for r in rows:
@@ -114,7 +145,8 @@ def run_roofline():
 
 BENCHES = dict(fig3=run_fig3, fig4=run_fig4, gap=run_gap,
                placement=run_placement, solver=run_solver,
-               sparse=run_sparse, online=run_online, flash=run_flash,
+               sparse=run_sparse, online=run_online, quality=run_quality,
+               federated=run_federated, flash=run_flash,
                roofline=run_roofline)
 
 

@@ -1,13 +1,15 @@
 """Public placement API: ``from repro.api import PlacementSpec, CFNSession``.
 
 Re-export of ``repro.core.api`` -- the declarative constraint object
-(``PlacementSpec``) and the session facade (``CFNSession``) every placement
-path (batch, online, serving) consumes.  See that module for the full
-story; ``examples/quickstart.py`` and ``examples/online_day.py`` are the
-walkthroughs.
+(``PlacementSpec``), the session facade (``CFNSession``), and the
+multi-region federation facade (``FederatedSession`` /
+``RegionPartition``) every placement path (batch, online, serving,
+federated) consumes.  See those modules for the full story;
+``examples/quickstart.py``, ``examples/online_day.py`` and
+``examples/federated_regions.py`` are the walkthroughs.
 """
-from .core.api import (CFNSession, PlacementSpec, SolveResult,
-                       solve_portfolio)
+from .core.api import (CFNSession, FederatedSession, PlacementSpec,
+                       RegionPartition, SolveResult, solve_portfolio)
 from .core.api import __all__ as _core_all
 
 __all__ = list(_core_all)

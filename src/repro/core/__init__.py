@@ -1,8 +1,12 @@
 """Paper core: CFN topology, power model (Eq. 1/2), VSRs, placement solvers,
-the online churn engine (dynamic), and the unified declarative API
-(api.PlacementSpec / api.CFNSession)."""
-from . import api, dynamic, embed, hardware, power, solvers, topology, vsr
+the online churn engine (dynamic), the federation layer (federation), and
+the unified declarative API (api.PlacementSpec / api.CFNSession /
+api.FederatedSession)."""
+from . import (api, dynamic, embed, federation, hardware, power, solvers,
+               topology, vsr)
 from .api import CFNSession, PlacementSpec
+from .federation import (FederatedBreakdown, FederatedSession,
+                         RegionPartition, federated_breakdown)
 from .dynamic import (SCENARIOS, ChurnScenario, OnlineEmbedder, ServiceEvent,
                       churn_trace, diurnal_rate, poisson_timeline, replay)
 from .embed import embed as embed_vsrs, savings_vs_baseline
@@ -11,14 +15,17 @@ from .power import (PlacementAux, PlacementProblem, PlacementState,
                     build_problem, delta_move, delta_sweep, detach_vsrs,
                     evaluate, init_state, objective, service_loads,
                     warm_state)
-from .solvers import SolveResult, solve_portfolio
-from .topology import (CFNTopology, datacenter_topology, nsfnet_topology,
-                       paper_topology)
+from .solvers import SolveResult, solve_portfolio, solve_portfolio_batched
+from .topology import (CFNTopology, datacenter_topology, federated_scale,
+                       nsfnet_topology, paper_topology)
 from .vsr import VSRBatch, from_layer_costs, random_vsrs
 
 __all__ = [
-    "api", "dynamic", "embed", "hardware", "power", "solvers", "topology",
-    "vsr", "PlacementSpec", "CFNSession", "SolveResult", "solve_portfolio",
+    "api", "dynamic", "embed", "federation", "hardware", "power", "solvers",
+    "topology", "vsr", "PlacementSpec", "CFNSession", "FederatedSession",
+    "FederatedBreakdown", "RegionPartition", "federated_breakdown",
+    "federated_scale", "SolveResult", "solve_portfolio",
+    "solve_portfolio_batched",
     "embed_vsrs", "savings_vs_baseline", "PlacementProblem", "build_problem",
     "evaluate", "objective", "PlacementAux", "PlacementState", "apply_move",
     "build_aux", "delta_move", "delta_sweep", "init_state", "attach_vsrs",

@@ -51,7 +51,8 @@ from .power import PlacementProblem
 from .solvers import SolveResult, solve_portfolio
 from .topology import CFNTopology
 
-__all__ = ["PlacementSpec", "CFNSession", "SolveResult", "solve_portfolio"]
+__all__ = ["PlacementSpec", "CFNSession", "SolveResult", "solve_portfolio",
+           "FederatedSession", "RegionPartition"]
 
 _EFFORTS = ("quick", "standard", "high")
 _BACKENDS = ("auto", "delta", "fused", "full")
@@ -75,6 +76,22 @@ class PlacementSpec:
     ``remove`` raise: a removal shifts row indices, which would silently
     re-assign SLAs across services); scalar ``max_hops`` is the online
     contract.
+
+    Federation fields (consumed by ``core.federation.FederatedSession``;
+    flat sessions ignore them):
+      * ``region_affinity`` -- per-service target region index (-1 = the
+        service's home region, i.e. the region owning its source node).  A
+        scalar applies to all services; a length-n sequence binds to the
+        first n batch rows.
+      * ``region_anti_affinity`` -- per-service FORBIDDEN region index
+        (-1 = none); a service homed in its forbidden region is migrated
+        out at admission.
+      * ``region_power_budget_w`` -- per-region total-watts budget (scalar
+        = every region; sequence = per region).  The federation coordinator
+        migrates services out of a region whose exact attributed watts
+        exceed its budget.
+      * ``inter_region_hops`` -- cap on shared-core hops a cross-region
+        (migrated) service may traverse between its home and host regions.
 
     Admission budgets (online path; ``None`` disables each):
       * ``power_budget_w`` -- reject an arrival whose incremental fleet
@@ -105,6 +122,13 @@ class PlacementSpec:
     # constraints --------------------------------------------------------
     max_hops: Optional[Union[int, Sequence[int], np.ndarray]] = None
     eligible: Optional[np.ndarray] = None
+    # federation (core.federation.FederatedSession; ignored by flat paths) -
+    region_affinity: Optional[Union[int, Sequence[int], np.ndarray]] = None
+    region_anti_affinity: Optional[Union[int, Sequence[int],
+                                         np.ndarray]] = None
+    region_power_budget_w: Optional[Union[float, Sequence[float],
+                                          np.ndarray]] = None
+    inter_region_hops: Optional[int] = None
     # admission budgets ---------------------------------------------------
     power_budget_w: Optional[float] = None
     violation_tol: Optional[float] = None
@@ -181,7 +205,8 @@ class PlacementSpec:
         return el
 
     # -- pytree protocol --------------------------------------------------
-    _LEAF_FIELDS = ("max_hops", "eligible")
+    _LEAF_FIELDS = ("max_hops", "eligible", "region_affinity",
+                    "region_anti_affinity", "region_power_budget_w")
 
     def tree_flatten(self):
         aux_fields = tuple(f for f in self.__dataclass_fields__
@@ -226,13 +251,19 @@ class CFNSession:
 
     def __init__(self, topo: CFNTopology,
                  spec: Optional[PlacementSpec] = None,
-                 key: Optional[jax.Array] = None):
+                 key: Optional[jax.Array] = None,
+                 monitor=None):
         self.topo = topo
         self._engine = dynamic.OnlineEmbedder(
             topo, spec=spec if spec is not None else PlacementSpec(),
-            key=key)
+            key=key, monitor=monitor)
 
     # -- configuration / introspection ------------------------------------
+    def attach_monitor(self, monitor) -> None:
+        """Attach (or replace) the ``fault.monitor.PlacementMonitor``
+        receiving this session's admission/budget events."""
+        self._engine.monitor = monitor
+
     @property
     def spec(self) -> PlacementSpec:
         return self._engine.spec
@@ -350,3 +381,9 @@ class CFNSession:
         saving = 1.0 - opt.power / max(base.power, 1e-9)
         return dict(baseline_w=base.power, optimized_w=opt.power,
                     saving_frac=saving, baseline=base, optimized=opt)
+
+
+# Federation layer (bottom import: federation builds on PlacementSpec /
+# CFNSession defined above; the lazy `from . import api` inside it resolves
+# against this module mid-initialization without a cycle).
+from .federation import FederatedSession, RegionPartition  # noqa: E402

@@ -183,12 +183,9 @@ def _bucket_rows(n: int, lo: int = 2) -> int:
     `_anneal_scan_delta` variants (~3 s each on a 2-core box), so the online
     engine pads the service dimension to these buckets -- the compile set
     is O(log R) instead of O(distinct R), which kills the p90 latency
-    spikes in examples/online_day.py."""
-    n = max(n, 1)
-    b = lo
-    while b < n:
-        b *= 2
-    return b
+    spikes in examples/online_day.py.  The ONE bucketing policy, shared
+    with the federated batch path (``solvers._pow2``)."""
+    return solvers._pow2(n, lo=lo)
 
 
 class OnlineEmbedder:
@@ -234,7 +231,7 @@ class OnlineEmbedder:
                  admit_power_budget_w: Optional[float] = None,
                  admit_violation_tol: Optional[float] = None,
                  queue_rejected: bool = False,
-                 spec=None):
+                 spec=None, monitor=None):
         if spec is None:
             from . import api
             warnings.warn(
@@ -252,6 +249,9 @@ class OnlineEmbedder:
                 anneal_chains=anneal_chains, polish_sweeps=polish_sweeps)
         self.topo = topo
         self.spec = spec
+        # a fault.monitor.PlacementMonitor (optional): admission rejections
+        # and budget violations are counted there instead of being dropped
+        self.monitor = monitor
         self._key = jax.random.PRNGKey(1) if key is None else key
         self._add_kw = dict(sweeps=spec.sweeps,
                             anneal_steps=spec.anneal_steps,
@@ -443,10 +443,18 @@ class OnlineEmbedder:
 
     # -- the online API ---------------------------------------------------
     def bootstrap(self, services: Sequence[vsr.VSRBatch],
-                  sids: Optional[Sequence[int]] = None) -> solvers.SolveResult:
+                  sids: Optional[Sequence[int]] = None,
+                  X0: Optional[np.ndarray] = None) -> solvers.SolveResult:
         """Cold-start with a whole service set in ONE full-portfolio solve
         (serving restart / benchmark steady state) instead of N incremental
-        admissions."""
+        admissions.
+
+        ``X0`` [len(services), V0] (optional) ADOPTS a placement computed
+        elsewhere (a checkpoint, or the federation's vmapped batch solve)
+        instead of solving: pins are applied, missing columns fill from each
+        row's source, and the engine commits the exact evaluation of that
+        placement as its live state -- churn events then warm-start from it.
+        """
         if self._vsrs:
             raise RuntimeError("bootstrap() requires an empty engine")
         if not services:
@@ -466,6 +474,26 @@ class OnlineEmbedder:
         self._batch_cache = out
         self._rebuild_problem()
         self.admission["admitted"] += len(services)
+        if X0 is not None:
+            X0 = np.asarray(X0)
+            if X0.shape[0] != len(services):
+                raise ValueError(f"X0 has {X0.shape[0]} rows for "
+                                 f"{len(services)} services")
+            # shape-map only (no state rebuild here: _commit re-derives the
+            # incremental state and _result scores the placement exactly):
+            # adopted rows fill the leading block, extra columns / bucket
+            # pad rows fall back to each row's pinned source
+            p = self._problem
+            fixed_node = np.asarray(p.fixed_node)
+            src_of = fixed_node[np.arange(p.R),
+                                np.asarray(p.fixed_mask).argmax(axis=1)]
+            X = np.tile(src_of[:, None], (1, p.V)).astype(np.int32)
+            k = min(p.V, X0.shape[1])
+            X[:X0.shape[0], :k] = X0[:, :k]
+            res = solvers._result(p, X, "bootstrap(adopted)")
+            self._events_since_defrag = 0
+            self._commit(res, "bootstrap")
+            return res
         return self._full_solve("bootstrap")
 
     @property
@@ -488,17 +516,19 @@ class OnlineEmbedder:
                 "a scalar max_hops for churn, or positional constraints "
                 "with the static batch path (CFNSession.solve/defrag).")
 
-    def _admit_ok(self, res: solvers.SolveResult, prev_power: float,
-                  prev_violation: float) -> bool:
-        """SLA admission test on the solved arrival placement."""
+    def _admit_reason(self, res: solvers.SolveResult, prev_power: float,
+                      prev_violation: float) -> Optional[str]:
+        """SLA admission test on the solved arrival placement: ``None`` when
+        admissible, else the monitor counter kind naming the violated
+        budget."""
         if (self.admit_power_budget_w is not None
                 and res.power - prev_power > self.admit_power_budget_w):
-            return False
+            return "power_budget_exceeded"
         if (self.admit_violation_tol is not None
                 and float(res.breakdown.violation) - prev_violation
                 > self.admit_violation_tol):
-            return False
-        return True
+            return "violation_budget_exceeded"
+        return None
 
     @property
     def _admission_active(self) -> bool:
@@ -562,10 +592,16 @@ class OnlineEmbedder:
             self._problem, np.asarray(st.X), key=self._split_key(),
             changed_rows=[row], state=st, spec=self.spec,
             **self._resolve_kw(self._add_kw))
-        if not self._admit_ok(res, prev_power, prev_viol):
+        reason = self._admit_reason(res, prev_power, prev_viol)
+        if reason is not None:
             (self._vsrs, self._sids, self._batch_cache,
              self._problem, self._X, self._state, self._result,
              self._events_since_defrag) = prev
+            if self.monitor is not None and not _retry:
+                # distinct arrivals only (queue re-tries would double-count
+                # against the engine's own admission['rejected'])
+                self.monitor.count("admission_rejected", detail=f"sid={sid}")
+                self.monitor.count(reason, detail=f"sid={sid}")
             if not _retry:
                 self.admission["rejected"] += 1
                 if self.queue_rejected:

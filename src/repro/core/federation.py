@@ -1,0 +1,1079 @@
+"""Federated fog regions: the hierarchical multi-region CFN.
+
+The paper's CFN is one PON/metro tree hanging off one CDC.  Its stated
+future work -- and the meshed-core extension ``topology.nsfnet_topology``
+already anticipates -- is a FEDERATION: several fog regions, each a full
+Fig.-1 fabric, interconnected over a shared IP/WDM core (the cloud-fog
+architectures of arXiv:2008.04004, the geo-distributed service placement
+of arXiv:1808.06120).  This module adds that second level of the embedding
+hierarchy -- service -> region -> node -- while reusing every existing
+solver unchanged underneath:
+
+  * **RegionPartition** maps a merged substrate (``topology.federated_scale``
+    or any topology whose node names carry ``r{g}_`` prefixes) into
+    per-region sub-substrates: each region gets its own padded-CSR route
+    table (region fabrics are trees behind a single core attachment, so
+    intra-region routes never leave the region -- validated at
+    construction), and the regions share an inter-region core-hop table
+    over the unprefixed ``nsf*`` IP/WDM mesh.  For the batched solve the
+    partition pads every region onto ONE (P, N, K) shape bucket
+    (nonexistent pad nodes carry deterrent parameters and are masked out
+    of every solver move), so a single compile covers the fleet.
+
+  * **FederatedSession** is the facade: ``solve(vsrs)`` assigns each
+    service to a region (home region of its source node, overridden by
+    ``PlacementSpec.region_affinity`` / ``region_anti_affinity``),
+    decomposes the workload into per-region placement problems, and runs
+    the per-region portfolios through
+    ``solvers.solve_portfolio_batched`` -- the existing delta-engine
+    sweep/anneal primitives vmapped across the region axis under one
+    trace.  A top-level coordinator pass then prices inter-region traffic
+    into Eq.(1) (exact float64 per-node accounting, see
+    ``federated_breakdown``) and, when a region's attributed watts exceed
+    its ``region_power_budget_w``, migrates services to cooler regions.
+    ``add``/``remove`` are region-aware churn events on per-region
+    ``dynamic.OnlineEmbedder`` engines seeded from the batch solve.
+
+  * **Cross-region services.**  A service hosted away from its home region
+    keeps its pinned input VM at the physical source: the home region
+    carries a *stub* (the input VM's compute), the host region carries the
+    *body* (the free VMs, input pin re-anchored at the host region's CDC),
+    and the *cut links* between them are priced along the merged route --
+    home egress, shared core, host ingress -- which is exactly where
+    inter-region core traffic enters Eq.(1) network power.
+
+  * **Exactness.**  ``federated_breakdown`` assembles merged-substrate
+    float64 loads from the per-region states plus the cut links and
+    evaluates Eq.(1)/(2) per node, grouped into per-region and
+    inter-region (shared-core) watts.  Regional + inter-region watts sum
+    to the total BY CONSTRUCTION, and the total equals a from-scratch
+    float64 oracle evaluation of the equivalent flat placement
+    (tests/test_federation.py).  A single-region federation routes through
+    the flat ``CFNSession`` unchanged, so 1-region == flat holds exactly.
+
+Admission rejections, regional budget breaches, and migrations are
+reported to a ``fault.monitor.PlacementMonitor`` when one is attached.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from . import dynamic, power, solvers
+from . import vsr as vsr_mod
+from .topology import CFNTopology
+
+__all__ = ["Region", "RegionPartition", "ServicePlan", "FederatedBreakdown",
+           "FederatedResult", "FederatedSession", "federated_breakdown"]
+
+_REGION_RE = re.compile(r"^r(\d+)_")
+
+
+def _region_tag(name: str) -> int:
+    m = _REGION_RE.match(name)
+    return int(m.group(1)) if m else -1
+
+
+# ---------------------------------------------------------------------------
+# The partition: merged substrate -> per-region substrates + core table
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Region:
+    """One fog region of the federation (a dense local index space)."""
+
+    index: int                 # dense federation index in [0, G)
+    name: str
+    topo: CFNTopology          # the region's own finalized sub-topology
+    proc_ids: np.ndarray       # [P_r] merged proc index of local proc p
+    net_ids: np.ndarray        # [N_r] merged net index of local net n
+
+    @property
+    def P(self) -> int:
+        return len(self.proc_ids)
+
+    @property
+    def N(self) -> int:
+        return len(self.net_ids)
+
+    @property
+    def pin_node(self) -> int:
+        """Local node a migrated service's input VM is re-anchored at: the
+        region's CDC (closest processing node to the core ingress), falling
+        back to local node 0.  The pin carries zero demand and no links, so
+        only the hop-mask semantics depend on it: a scalar ``max_hops``
+        constrains a migrated service's VMs to a radius around the region's
+        cloud ingress."""
+        cdc = self.topo.layer_indices("cdc")
+        return cdc[0] if cdc else 0
+
+
+# pad-node parameters for the uniform shape bucket: a VM can never be placed
+# on a pad node (masked out of every solver move), and a pad node with zero
+# load contributes exactly zero power; the deterrent E / zero NS make a
+# stray placement catastrophic rather than silently cheap.
+_PAD_PROC = dict(E=1.0e6, C_pr=1.0, NS=0.0, pi_pr=0.0, pue_pr=1.0,
+                 EL=0.0, C_lan=1.0e9, pi_lan=0.0, lan_share=0.0)
+_PAD_NET = dict(eps=0.0, C_net=1.0e9, pi_net=0.0, pue_net=1.0,
+                idle_share=0.0)
+
+
+class RegionPartition:
+    """Maps a merged CFN substrate into federated per-region substrates.
+
+    Region membership is parsed from the ``r{g}_`` node-name prefixes that
+    ``topology.federated_scale`` emits; unprefixed network nodes form the
+    shared inter-region core.  A topology with no prefixes at all is a
+    single-region federation (``RegionPartition.single``): the one region
+    IS the merged substrate, index spaces untouched.
+    """
+
+    def __init__(self, topo: CFNTopology, regions: List[Region],
+                 proc_region: np.ndarray, net_region: np.ndarray):
+        self.topo = topo
+        self.regions = regions
+        self.proc_region = np.asarray(proc_region)
+        self.net_region = np.asarray(net_region)
+        self.core_net_ids = np.nonzero(self.net_region < 0)[0]
+        # merged proc id -> region-local proc id
+        self._proc_local = np.full(topo.P, -1, np.int64)
+        for reg in regions:
+            self._proc_local[reg.proc_ids] = np.arange(reg.P)
+        self.core_hops = self._core_hop_table()
+        self._padded_cache: Optional[tuple] = None
+
+    # -- construction -----------------------------------------------------
+    @classmethod
+    def from_topology(cls, topo: CFNTopology) -> "RegionPartition":
+        pr = np.array([_region_tag(n) for n in topo.proc_names])
+        nr = np.array([_region_tag(n) for n in topo.net_names])
+        if (pr < 0).all():
+            return cls.single(topo)
+        if (pr < 0).any():
+            bad = [n for n, g in zip(topo.proc_names, pr) if g < 0]
+            raise ValueError(f"processing nodes without an r<g>_ region "
+                             f"prefix: {bad[:5]}")
+        tags = sorted(set(pr.tolist()))
+        regions: List[Region] = []
+        proc_region = np.zeros(topo.P, np.int64)
+        net_region = np.full(topo.N, -1, np.int64)
+        for i, g in enumerate(tags):
+            proc_ids = np.nonzero(pr == g)[0]
+            net_ids = np.nonzero(nr == g)[0]
+            proc_region[proc_ids] = i
+            net_region[net_ids] = i
+            sub = CFNTopology()
+            names = set()
+            for p in proc_ids:
+                sub.add_proc(topo.proc_names[p], topo.proc_hw[p],
+                             topo.proc_layer[p])
+                names.add(topo.proc_names[p])
+            for n in net_ids:
+                sub.add_net(topo.net_names[n], topo.net_hw[n])
+                names.add(topo.net_names[n])
+            for a, b in topo.edges:
+                if a in names and b in names:
+                    sub.connect(a, b)
+            sub.finalize()
+            # closure guard: every merged intra-region route must stay on
+            # region network nodes with the same hop count the region's own
+            # router finds (the tree-behind-one-attachment property the
+            # decomposition relies on)
+            rt = np.asarray(topo.route_idx)[np.ix_(proc_ids, proc_ids)]
+            real = rt[rt < topo.N]
+            if real.size and not np.all(net_region[real] == i):
+                raise ValueError(
+                    f"region r{g} is not closed: an intra-region route "
+                    "traverses out-of-region network nodes")
+            if not np.array_equal(
+                    np.asarray(sub.route_len),
+                    np.asarray(topo.route_len)[np.ix_(proc_ids, proc_ids)]):
+                raise ValueError(f"region r{g} sub-routes disagree with the "
+                                 "merged route table")
+            regions.append(Region(i, f"r{g}", sub, proc_ids, net_ids))
+        return cls(topo, regions, proc_region, net_region)
+
+    @classmethod
+    def single(cls, topo: CFNTopology) -> "RegionPartition":
+        """The identity partition: one region whose sub-topology IS the
+        merged topology (index spaces untouched, no padding) -- the
+        1-region-federation == flat-session contract."""
+        reg = Region(0, "all", topo, np.arange(topo.P), np.arange(topo.N))
+        return cls(topo, [reg], np.zeros(topo.P, np.int64),
+                   np.zeros(topo.N, np.int64))
+
+    # -- introspection ----------------------------------------------------
+    @property
+    def G(self) -> int:
+        return len(self.regions)
+
+    def local_proc(self, merged_id: int) -> int:
+        return int(self._proc_local[merged_id])
+
+    def home_region(self, merged_proc_id: int) -> int:
+        return int(self.proc_region[merged_proc_id])
+
+    def _core_hop_table(self) -> np.ndarray:
+        """[G, G] shared-core hops between region pairs (the inter-region
+        core-link table: how many unassigned -- core -- network nodes the
+        merged route between the two regions traverses)."""
+        G = self.G
+        out = np.zeros((G, G), np.int64)
+        rt = np.asarray(self.topo.route_idx)
+        for a in range(G):
+            for b in range(G):
+                if a == b:
+                    continue
+                ids = rt[self.regions[a].proc_ids[0],
+                         self.regions[b].proc_ids[0]]
+                ids = ids[ids < self.topo.N]
+                out[a, b] = int((self.net_region[ids] < 0).sum())
+        return out
+
+    # -- the uniform shape bucket (batched solving) ------------------------
+    def padded_substrates(self):
+        """Per-region ``power.build_problem`` substrate dicts on ONE
+        (P_pad, N_pad, K_pad) bucket, plus the per-region real-node masks.
+
+        Returns ``(substrates, real_masks, (P_pad, N_pad, K_pad))``;
+        cached (the partition is immutable)."""
+        if self._padded_cache is not None:
+            return self._padded_cache
+        import jax.numpy as jnp
+        P_pad = max(r.P for r in self.regions)
+        N_pad = max(r.N for r in self.regions)
+        K_pad = max(r.topo.K for r in self.regions)
+        subs, masks = [], []
+        for reg in self.regions:
+            d: Dict[str, np.ndarray] = {}
+            for k, v in reg.topo.proc_param_arrays().items():
+                d[k] = np.concatenate(
+                    [v, np.full(P_pad - reg.P, _PAD_PROC[k], np.float32)])
+            for k, v in reg.topo.net_param_arrays().items():
+                d[k] = np.concatenate(
+                    [v, np.full(N_pad - reg.N, _PAD_NET[k], np.float32)])
+            rt = np.full((P_pad, P_pad, K_pad), N_pad, np.int32)
+            r0 = np.asarray(reg.topo.route_idx)
+            rt[:reg.P, :reg.P, :r0.shape[2]] = np.where(r0 == reg.N, N_pad,
+                                                        r0)
+            out = {k: jnp.asarray(v) for k, v in d.items()}
+            out["route_idx"] = jnp.asarray(rt)
+            if P_pad <= power.DENSE_ROUTE_MAX_P:
+                dense = np.zeros((P_pad * P_pad, N_pad + 1), np.float32)
+                bb, ee, _ = np.indices(rt.shape)
+                dense[(bb * P_pad + ee).reshape(-1), rt.reshape(-1)] = 1.0
+                out["route_dense"] = jnp.asarray(dense[:, :N_pad])
+            else:
+                out["route_dense"] = None
+            subs.append(out)
+            m = np.zeros(P_pad, bool)
+            m[:reg.P] = True
+            masks.append(m)
+        self._padded_cache = (subs, masks, (P_pad, N_pad, K_pad))
+        return self._padded_cache
+
+
+# ---------------------------------------------------------------------------
+# Service plans: the service -> region level of the hierarchy
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ServicePlan:
+    """Where one service lives in the federation.
+
+    ``body`` is the region-local VSR hosted in ``assigned`` (source index
+    localized); for a cross-region service ``stub`` carries the pinned
+    input VM's compute in ``home`` and ``cuts`` lists the severed virtual
+    links ``(h_mbps, vm_col, input_is_src)`` to be priced along the merged
+    home<->host route."""
+
+    sid: int
+    home: int
+    assigned: int
+    vsr: vsr_mod.VSRBatch
+    body: vsr_mod.VSRBatch
+    stub: Optional[vsr_mod.VSRBatch] = None
+    cuts: List[Tuple[float, int, bool]] = field(default_factory=list)
+    body_row: int = -1
+    stub_row: int = -1
+
+    @property
+    def migrated(self) -> bool:
+        return self.stub is not None
+
+
+def make_plan(partition: RegionPartition, service: vsr_mod.VSRBatch,
+              sid: int, assigned: int) -> ServicePlan:
+    """Split one R=1 service (merged source index) into its regional parts."""
+    if service.R != 1:
+        raise ValueError(f"services are R=1, got R={service.R}")
+    src_m = int(service.src[0])
+    home = partition.home_region(src_m)
+    src_local = partition.local_proc(src_m)
+    iv = int(service.input_vm[0])
+    if assigned == home:
+        body = vsr_mod.VSRBatch(
+            F=service.F.copy(), H=service.H.copy(),
+            src=np.array([src_local], np.int32),
+            input_vm=service.input_vm.copy())
+        return ServicePlan(sid=sid, home=home, assigned=assigned,
+                           vsr=service, body=body)
+    F = service.F.copy()
+    H = service.H.copy()
+    V = service.V
+    cuts: List[Tuple[float, int, bool]] = []
+    self_h = float(H[0, iv, iv])
+    H[0, iv, iv] = 0.0
+    for d in range(V):
+        if d == iv:
+            continue
+        if H[0, iv, d] > 0:
+            cuts.append((float(H[0, iv, d]), d, True))
+            H[0, iv, d] = 0.0
+        if H[0, d, iv] > 0:
+            cuts.append((float(H[0, d, iv]), d, False))
+            H[0, d, iv] = 0.0
+    F_in = float(F[0, iv])
+    F[0, iv] = 0.0
+    host = partition.regions[assigned]
+    body = vsr_mod.VSRBatch(
+        F=F, H=H, src=np.array([host.pin_node], np.int32),
+        input_vm=service.input_vm.copy())
+    stub_H = np.zeros((1, 2, 2), np.float32)
+    stub_H[0, 0, 0] = self_h
+    stub = vsr_mod.VSRBatch(
+        F=np.array([[F_in, 0.0]], np.float32), H=stub_H,
+        src=np.array([src_local], np.int32),
+        input_vm=np.zeros(1, np.int32))
+    return ServicePlan(sid=sid, home=home, assigned=assigned, vsr=service,
+                       body=body, stub=stub, cuts=cuts)
+
+
+def _placeholder_service() -> vsr_mod.VSRBatch:
+    """A zero service for regions with no assigned workload: pinned input
+    at local node 0, one free zero-demand VM (so the padded problem keeps
+    at least one free position), zero links -- contributes exactly
+    nothing."""
+    return vsr_mod.VSRBatch(F=np.zeros((1, 2), np.float32),
+                            H=np.zeros((1, 2, 2), np.float32),
+                            src=np.zeros(1, np.int32),
+                            input_vm=np.zeros(1, np.int32))
+
+
+# ---------------------------------------------------------------------------
+# Exact federated power accounting (float64, per merged node)
+# ---------------------------------------------------------------------------
+
+class FederatedBreakdown(NamedTuple):
+    total_w: float             # fleet watts (regional + inter-region)
+    regional_w: np.ndarray     # [G] watts on each region's proc+net nodes
+    inter_region_w: float      # Eq.(1) watts on the shared core
+    violation: float           # merged capacity-violation magnitude
+    per_proc_w: np.ndarray     # [P_merged]
+    per_net_w: np.ndarray      # [N_merged]
+
+    @property
+    def objective(self) -> float:
+        return self.total_w + power.PENALTY * self.violation
+
+
+def _loads_f64(problem: power.PlacementProblem, X: np.ndarray):
+    """(omega[P], theta[P], lam[N]) of a whole placement at float64 --
+    the same accumulation ``power._loads`` performs, on numpy."""
+    p = problem
+    X = np.where(np.asarray(p.fixed_mask), np.asarray(p.fixed_node),
+                 np.asarray(X))
+    Xf = X.reshape(-1)
+    omega = np.zeros(p.P, np.float64)
+    theta = np.zeros(p.P, np.float64)
+    lam = np.zeros(p.N, np.float64)
+    np.add.at(omega, Xf, np.asarray(p.F, np.float64).reshape(-1))
+    rt = np.asarray(p.route_idx)
+    for s, d, h in zip(np.asarray(p.link_src), np.asarray(p.link_dst),
+                       np.asarray(p.link_h, np.float64)):
+        b, e = int(Xf[s]), int(Xf[d])
+        theta[b] += h
+        if e != b:
+            theta[e] += h
+            ids = rt[b, e]
+            lam[ids[ids < p.N]] += h
+    return omega, theta, lam
+
+
+def federated_breakdown(partition: RegionPartition,
+                        region_states: Sequence[Tuple[int,
+                                                      power.PlacementProblem,
+                                                      np.ndarray]],
+                        cuts: Sequence[Tuple[float, int, int, bool]] = (),
+                        ) -> FederatedBreakdown:
+    """Exact fleet power: merged-substrate float64 loads assembled from the
+    per-region states plus the inter-region cut links, evaluated per node.
+
+    ``region_states``: ``(region_index, regional_problem, X_local)`` per
+    live region (padded problems allowed -- pad nodes must carry zero
+    load).  ``cuts``: ``(h_mbps, src_merged, dst_merged, src_is_input)``
+    per severed cross-region virtual link; its traffic is accumulated
+    along the merged route (home egress + shared core + host ingress),
+    which is where inter-region traffic is priced into Eq.(1).
+
+    Regional + inter-region watts sum to ``total_w`` by construction; the
+    total equals a from-scratch float64 oracle evaluation of the merged
+    placement (tests/test_federation.py pins this).
+    """
+    topo = partition.topo
+    P, N = topo.P, topo.N
+    omega = np.zeros(P, np.float64)
+    theta = np.zeros(P, np.float64)
+    lam = np.zeros(N, np.float64)
+    for g, prob, X in region_states:
+        reg = partition.regions[g]
+        om, th, lm = _loads_f64(prob, X)
+        if (np.abs(om[reg.P:]).max(initial=0.0) > 0
+                or np.abs(th[reg.P:]).max(initial=0.0) > 0
+                or np.abs(lm[reg.N:]).max(initial=0.0) > 0):
+            raise ValueError(f"region {reg.name}: load on a pad node "
+                             "(placement escaped the real-node mask)")
+        omega[reg.proc_ids] += om[:reg.P]
+        theta[reg.proc_ids] += th[:reg.P]
+        lam[reg.net_ids] += lm[:reg.N]
+    rt = np.asarray(topo.route_idx)
+    for h, src_m, dst_m, src_is_input in cuts:
+        b, e = (src_m, dst_m) if src_is_input else (dst_m, src_m)
+        theta[b] += h
+        if e != b:
+            theta[e] += h
+            ids = rt[b, e]
+            lam[ids[ids < N]] += h
+
+    # the ONE f64 copy of the Eq.(1)/(2) formulas, shared with the oracle
+    from ..kernels.ref import eq_terms_f64
+    per_net, per_proc, violation = eq_terms_f64(
+        topo.proc_param_arrays(), topo.net_param_arrays(), omega, theta,
+        lam)
+    regional = np.zeros(partition.G, np.float64)
+    for reg in partition.regions:
+        regional[reg.index] = (per_proc[reg.proc_ids].sum()
+                               + per_net[reg.net_ids].sum())
+    inter = float(per_net[partition.core_net_ids].sum())
+    return FederatedBreakdown(
+        total_w=float(per_proc.sum() + per_net.sum()),
+        regional_w=regional, inter_region_w=inter,
+        violation=float(violation), per_proc_w=per_proc, per_net_w=per_net)
+
+
+# ---------------------------------------------------------------------------
+# The federation facade
+# ---------------------------------------------------------------------------
+
+class FederatedResult(NamedTuple):
+    X: np.ndarray              # [R, V] merged placement, original row order
+    breakdown: FederatedBreakdown
+    assignments: np.ndarray    # [R] region index per service
+    region_obj: np.ndarray     # [G] per-region solver objectives
+    migrations: int            # coordinator migrations performed
+
+    @property
+    def objective(self) -> float:
+        return self.breakdown.objective
+
+    @property
+    def power(self) -> float:
+        return self.breakdown.total_w
+
+
+class FederatedSession:
+    """Hierarchical multi-region placement: one facade over G regions.
+
+    ``solve(vsrs)`` is the batch path: assign services to regions, solve
+    every region's portfolio under ONE vmapped compile
+    (``solvers.solve_portfolio_batched``), then run the coordinator --
+    exact federated accounting, inter-region pricing, cross-region
+    migration on regional ``region_power_budget_w`` breaches -- and seed
+    the per-region online engines from the result.  ``add``/``remove``
+    are region-aware churn events on those engines; an arrival that
+    pushes its region over budget is migrated to the coolest admissible
+    region (``region_anti_affinity`` and ``inter_region_hops`` respected),
+    with every breach/migration/rejection counted on the attached
+    ``fault.monitor.PlacementMonitor``.
+
+    A single-region federation (a topology with no ``r{g}_`` prefixes, or
+    an explicit ``RegionPartition.single``) delegates wholesale to the
+    flat ``CFNSession`` -- placements and float64 power are IDENTICAL to
+    the non-federated path by construction.
+    """
+
+    MAX_COORD_PASSES = 4
+
+    def __init__(self, topo, spec=None, key: Optional[jax.Array] = None,
+                 monitor=None, partition: Optional[RegionPartition] = None):
+        from . import api as api_mod
+        if partition is None:
+            partition = (topo if isinstance(topo, RegionPartition)
+                         else RegionPartition.from_topology(topo))
+        self.partition = partition
+        self.topo = partition.topo
+        self.spec = spec if spec is not None else api_mod.PlacementSpec()
+        self.monitor = monitor
+        self._key = jax.random.PRNGKey(1) if key is None else key
+        self._plans: Dict[int, ServicePlan] = {}
+        self._order: List[int] = []
+        self._engines: Dict[int, dynamic.OnlineEmbedder] = {}
+        self._next_sid = 0
+        self._last_result: Optional[FederatedResult] = None
+        self._flat = None
+        if partition.G == 1:
+            self._flat = api_mod.CFNSession(self.topo, self.spec,
+                                            key=self._key)
+            self._flat.engine.monitor = monitor
+        else:
+            self._check_spec_supported()
+
+    # -- config helpers ---------------------------------------------------
+    def attach_monitor(self, monitor) -> None:
+        """Attach (or replace) the ``fault.monitor.PlacementMonitor``
+        receiving this federation's breach/migration/admission events --
+        propagated to every live regional engine."""
+        self.monitor = monitor
+        if self._flat is not None:
+            self._flat.attach_monitor(monitor)
+        for eng in self._engines.values():
+            eng.monitor = monitor
+
+    def _check_spec_supported(self) -> None:
+        if self.spec.eligible is not None or (
+                self.spec.max_hops is not None
+                and np.ndim(self.spec.max_hops) > 0):
+            raise ValueError(
+                "multi-region federation supports scalar max_hops only "
+                "(row-positional constraints cannot follow a service "
+                "across regions); use region_affinity for placement "
+                "steering")
+
+    def _split_key(self) -> jax.Array:
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def _local_spec(self):
+        return self.spec.replace(region_affinity=None,
+                                 region_anti_affinity=None,
+                                 region_power_budget_w=None,
+                                 inter_region_hops=None)
+
+    def _engine(self, g: int) -> dynamic.OnlineEmbedder:
+        if g not in self._engines:
+            self._engines[g] = dynamic.OnlineEmbedder(
+                self.partition.regions[g].topo, spec=self._local_spec(),
+                key=self._split_key(), monitor=self.monitor)
+        return self._engines[g]
+
+    def _budget(self, g: int) -> Optional[float]:
+        b = self.spec.region_power_budget_w
+        if b is None:
+            return None
+        b = np.asarray(b, np.float64)
+        return float(b) if b.ndim == 0 else float(b[g])
+
+    def _row_constraint(self, kind: str, row: int) -> int:
+        v = getattr(self.spec, kind)
+        if v is None:
+            return -1
+        v = np.asarray(v)
+        if v.ndim == 0:
+            return int(v)
+        return int(v[row]) if row < v.shape[0] else -1
+
+    def _allowed_regions(self, home: int, anti: int) -> List[int]:
+        """Host-region candidates for a service homed at ``home``: the home
+        region first, then others by core distance, minus the forbidden
+        region and anything past the ``inter_region_hops`` cap."""
+        cap = self.spec.inter_region_hops
+        out = []
+        order = sorted(range(self.partition.G),
+                       key=lambda g: (g != home,
+                                      int(self.partition.core_hops[home, g])))
+        for g in order:
+            if g == anti:
+                continue
+            if (g != home and cap is not None
+                    and int(self.partition.core_hops[home, g]) > cap):
+                continue
+            out.append(g)
+        return out
+
+    # -- introspection ----------------------------------------------------
+    @property
+    def G(self) -> int:
+        return self.partition.G
+
+    @property
+    def n_live(self) -> int:
+        return self._flat.n_live if self._flat else len(self._order)
+
+    @property
+    def sids(self) -> List[int]:
+        return self._flat.sids if self._flat else list(self._order)
+
+    @property
+    def result(self):
+        return self._flat.result if self._flat else self._last_result
+
+    def service_vms(self, row: int) -> int:
+        if self._flat:
+            return self._flat.service_vms(row)
+        return self._plans[self._order[row]].vsr.V
+
+    def assignment(self, sid: int) -> int:
+        """The region currently hosting service ``sid``'s free VMs."""
+        if self._flat:
+            return 0
+        return self._plans[sid].assigned
+
+    @property
+    def X(self) -> Optional[np.ndarray]:
+        """The merged-substrate placement [n_live, V_max] (merged proc
+        indices, original service order; a migrated service's input VM
+        shows its true source node)."""
+        if self._flat:
+            return self._flat.X
+        if not self._order:
+            return None
+        V = max(self._plans[s].vsr.V for s in self._order)
+        X = np.zeros((len(self._order), V), np.int32)
+        for r, sid in enumerate(self._order):
+            X[r, :self._plans[sid].vsr.V] = self._service_nodes(sid)
+        return X
+
+    def _service_nodes(self, sid: int) -> np.ndarray:
+        """Merged node per VM of one service (from its host engine)."""
+        plan = self._plans[sid]
+        eng = self._engines[plan.assigned]
+        row = eng.sids.index(sid)
+        reg = self.partition.regions[plan.assigned]
+        V = plan.vsr.V
+        nodes = reg.proc_ids[np.asarray(eng.X[row, :V])]
+        if plan.migrated:
+            nodes = nodes.copy()
+            nodes[int(plan.vsr.input_vm[0])] = int(plan.vsr.src[0])
+        return nodes
+
+    def _cuts_merged(self) -> List[Tuple[float, int, int, bool]]:
+        out = []
+        for sid in self._order:
+            plan = self._plans[sid]
+            if not plan.migrated:
+                continue
+            nodes = self._service_nodes(sid)
+            src_m = int(plan.vsr.src[0])
+            for h, vm_col, src_is_input in plan.cuts:
+                out.append((h, src_m, int(nodes[vm_col]), src_is_input))
+        return out
+
+    def breakdown(self) -> FederatedBreakdown:
+        """Exact (float64) fleet accounting: per-region + inter-region
+        watts; see ``federated_breakdown``."""
+        if self._flat:
+            eng = self._flat.engine
+            if eng.problem is None:
+                raise ValueError("empty session")
+            states = [(0, eng.problem, np.asarray(eng.X))]
+            return federated_breakdown(self.partition, states)
+        states = [(g, e.problem, np.asarray(e.X))
+                  for g, e in self._engines.items() if e.problem is not None]
+        if not states:
+            raise ValueError("empty session")
+        return federated_breakdown(self.partition, states,
+                                   cuts=self._cuts_merged())
+
+    def power_w(self) -> float:
+        return self.breakdown().total_w
+
+    def region_watts(self) -> np.ndarray:
+        return self.breakdown().regional_w
+
+    def attribute(self) -> Dict[int, float]:
+        """Per-tenant watts summing to the exact fleet total: each
+        service's body (+stub) attribution from its regional engines, plus
+        the RESIDUAL -- everything the engines cannot see (cut-link watts
+        on home-egress/shared-core/host-ingress nodes, f32-vs-f64
+        rounding) -- split over the cross-region services by cut-traffic
+        share (over everyone when there are none)."""
+        if self._flat:
+            return self._flat.attribute()
+        out: Dict[int, float] = {s: 0.0 for s in self._order}
+        for g, eng in self._engines.items():
+            for sid, w in eng.per_service_power_w().items():
+                out[sid] += w
+        residual = self.breakdown().total_w - sum(out.values())
+        cut_h = {sid: sum(h for h, _, _ in self._plans[sid].cuts)
+                 for sid in self._order if self._plans[sid].migrated}
+        tot_h = sum(cut_h.values())
+        if tot_h > 0:
+            for sid, h in cut_h.items():
+                out[sid] += residual * h / tot_h
+        elif self._order:
+            for sid in self._order:
+                out[sid] += residual / len(self._order)
+        return out
+
+    # -- batch path -------------------------------------------------------
+    def solve(self, vsrs: Optional[vsr_mod.VSRBatch] = None):
+        """Embed a whole VSR batch across the federation (empty session),
+        or re-pack the live regions (no batch: per-region defrag).
+
+        Multi-region: one vmapped batched portfolio over all regions, a
+        coordinator budget pass (cross-region migration on regional
+        budget breaches), engines seeded from the result.  Returns a
+        ``FederatedResult``.  Single-region: delegates to the flat
+        ``CFNSession`` (identical placements)."""
+        if self._flat:
+            return self._flat.solve(vsrs)
+        if vsrs is None:
+            return self.defrag()
+        if self._order:
+            raise ValueError("session already has live services; use "
+                             "add()/remove() for churn or solve() with no "
+                             "batch to re-pack")
+        services = [vsr_mod.VSRBatch(F=vsrs.F[i:i + 1], H=vsrs.H[i:i + 1],
+                                     src=vsrs.src[i:i + 1],
+                                     input_vm=vsrs.input_vm[i:i + 1])
+                    for i in range(vsrs.R)]
+        sids = list(range(vsrs.R))
+        self._next_sid = vsrs.R
+        assigned = self._assign(services)
+        migrations = 0
+        while True:   # every applied migration is followed by a re-solve
+            plans, problems, eligibles, X0s, region_rows = self._decompose(
+                services, sids, assigned)
+            X, obj = solvers.solve_portfolio_batched(
+                problems, X0s, eligibles, spec=self.spec,
+                key=self._split_key())
+            bd = self._batch_breakdown(plans, problems, X)
+            if migrations >= self.MAX_COORD_PASSES:
+                break
+            move = self._pick_migration(plans, bd, assigned)
+            if move is None:
+                break
+            row, target = move
+            if self.monitor is not None:
+                self.monitor.count("region_budget_breach",
+                                   detail=f"region={assigned[row]}")
+                self.monitor.count(
+                    "cross_region_migration",
+                    detail=f"sid={sids[row]} -> region {target}")
+            assigned[row] = target
+            migrations += 1
+        # commit: seed the per-region engines with the solved placements
+        for g, rows in region_rows.items():
+            if not rows:
+                continue
+            eng = self._engine(g)
+            svc, ss, x0 = [], [], []
+            for plan, kind in rows:
+                r = plan.body_row if kind == "body" else plan.stub_row
+                svc.append(plan.body if kind == "body" else plan.stub)
+                ss.append(plan.sid)
+                x0.append(X[g][r])
+            eng.bootstrap(svc, sids=ss, X0=np.stack(x0))
+        self._plans = {p.sid: p for p in plans}
+        self._order = list(sids)
+        res = FederatedResult(
+            X=self._merged_X_from(plans, X),
+            breakdown=self.breakdown(),
+            assignments=np.asarray(assigned), region_obj=np.asarray(obj),
+            migrations=migrations)
+        self._last_result = res
+        return res
+
+    def _assign(self, services) -> List[int]:
+        out = []
+        for i, s in enumerate(services):
+            home = self.partition.home_region(int(s.src[0]))
+            aff = self._row_constraint("region_affinity", i)
+            anti = self._row_constraint("region_anti_affinity", i)
+            g = aff if aff >= 0 else home
+            if g == anti:
+                allowed = [a for a in self._allowed_regions(home, anti)
+                           if a != g]
+                if not allowed:
+                    raise ValueError(f"service {i}: no admissible region "
+                                     "(anti-affinity + hop cap exclude all)")
+                g = allowed[0]
+            if g != home:
+                cap = self.spec.inter_region_hops
+                if (cap is not None
+                        and int(self.partition.core_hops[home, g]) > cap):
+                    raise ValueError(
+                        f"service {i}: affinity region {g} is "
+                        f"{int(self.partition.core_hops[home, g])} core "
+                        f"hops from home {home}, past inter_region_hops="
+                        f"{cap}")
+            out.append(g)
+        return out
+
+    def _decompose(self, services, sids, assigned):
+        """Per-region plans, padded problems, masks, and warm starts."""
+        part = self.partition
+        subs, real_masks, _ = part.padded_substrates()
+        plans = [make_plan(part, s, sid, g)
+                 for s, sid, g in zip(services, sids, assigned)]
+        region_rows: Dict[int, list] = {g: [] for g in range(part.G)}
+        for plan in plans:
+            plan.body_row = len(region_rows[plan.assigned])
+            region_rows[plan.assigned].append((plan, "body"))
+        for plan in plans:
+            if plan.migrated:
+                plan.stub_row = len(region_rows[plan.home])
+                region_rows[plan.home].append((plan, "stub"))
+        batches = []
+        for g in range(part.G):
+            rows = region_rows[g]
+            if rows:
+                svcs = [p.body if kind == "body" else p.stub
+                        for p, kind in rows]
+                b = svcs[0]
+                for s in svcs[1:]:
+                    b = b.concat(s)
+            else:
+                b = _placeholder_service()
+            if b.V < 2:
+                # all-V=1 region: every VM is pinned, leaving the batched
+                # solver no free position; widening via the placeholder
+                # adds free zero-demand columns (exactly a concat pad)
+                b = b.concat(_placeholder_service())
+            batches.append(b)
+        R_max = max(b.R for b in batches)
+        R_pad = (dynamic._bucket_rows(R_max, lo=self.spec.row_bucket_lo)
+                 if self.spec.bucket_rows else R_max)
+        V_max = max(b.V for b in batches)
+        V_pad = (dynamic._bucket_rows(V_max, lo=self.spec.col_bucket_lo)
+                 if self.spec.bucket_cols else V_max)
+        problems, eligibles, X0s = [], [], []
+        for g, b in enumerate(batches):
+            reg = part.regions[g]
+            prob = power.build_problem(reg.topo, b, substrate=subs[g],
+                                       pad_to_rows=R_pad, pad_to_cols=V_pad)
+            # spec.masks anchors a migrated body's hop radius at its host
+            # pin (the region CDC, see Region.pin_node) -- the SAME
+            # semantics the seeded per-region engines enforce on churn and
+            # defrag, so no path ever yanks a body the batch solve placed
+            el = self.spec.masks(prob)
+            el = (np.ones((prob.R, prob.P), bool) if el is None
+                  else np.asarray(el, bool))
+            el &= real_masks[g][None, :]
+            problems.append(prob)
+            eligibles.append(el)
+            cdc = reg.topo.layer_indices("cdc")
+            start = cdc[0] if cdc else 0
+            X0 = np.full((prob.R, prob.V), start, np.int32)
+            X0s.append(X0)
+        return plans, problems, eligibles, X0s, region_rows
+
+    def _batch_breakdown(self, plans, problems, X) -> FederatedBreakdown:
+        states = [(g, problems[g], X[g]) for g in range(self.partition.G)]
+        cuts = []
+        for plan in plans:
+            if not plan.migrated:
+                continue
+            reg = self.partition.regions[plan.assigned]
+            src_m = int(plan.vsr.src[0])
+            for h, vm_col, src_is_input in plan.cuts:
+                dst_local = int(X[plan.assigned][plan.body_row, vm_col])
+                cuts.append((h, src_m, int(reg.proc_ids[dst_local]),
+                             src_is_input))
+        return federated_breakdown(self.partition, states, cuts=cuts)
+
+    def _pick_migration(self, plans, bd: FederatedBreakdown,
+                        assigned) -> Optional[Tuple[int, int]]:
+        """Coordinator: the (service row, target region) move for the worst
+        budget breach, or None when every region is within budget (or no
+        admissible move exists)."""
+        over = [(bd.regional_w[g] - b, g) for g in range(self.partition.G)
+                if (b := self._budget(g)) is not None
+                and bd.regional_w[g] > b]
+        if not over:
+            return None
+        _, g = max(over)
+        movable = [i for i, p in enumerate(plans)
+                   if assigned[i] == g
+                   and self._row_constraint("region_affinity", i) < 0]
+        if not movable:
+            return None
+        # move the heaviest service to the coolest admissible region
+        row = max(movable,
+                  key=lambda i: float(np.sum(plans[i].vsr.F)))
+        anti = self._row_constraint("region_anti_affinity", row)
+        home = plans[row].home
+        cands = [c for c in self._allowed_regions(home, anti)
+                 if c != g and (self._budget(c) is None
+                                or bd.regional_w[c] < self._budget(c))]
+        if not cands:
+            return None
+        target = min(cands, key=lambda c: bd.regional_w[c])
+        return row, target
+
+    def _merged_X_from(self, plans, X) -> np.ndarray:
+        V = max(p.vsr.V for p in plans)
+        out = np.zeros((len(plans), V), np.int32)
+        for r, plan in enumerate(plans):
+            reg = self.partition.regions[plan.assigned]
+            nodes = reg.proc_ids[X[plan.assigned][plan.body_row,
+                                                  :plan.vsr.V]]
+            if plan.migrated:
+                nodes = nodes.copy()
+                nodes[int(plan.vsr.input_vm[0])] = int(plan.vsr.src[0])
+            out[r, :plan.vsr.V] = nodes
+        return out
+
+    # -- region-aware churn ------------------------------------------------
+    def add(self, service: vsr_mod.VSRBatch, sid: Optional[int] = None,
+            region: Optional[int] = None):
+        """Admit one service: an incremental churn event on its region's
+        engine.  On a regional budget breach the arrival is migrated to
+        the coolest admissible region (stub left at home, cut links priced
+        over the core); ``None`` = rejected everywhere."""
+        if self._flat:
+            return self._flat.add(service, sid=sid)
+        if service.R != 1:
+            raise ValueError(f"add() takes one service, got R={service.R}")
+        for kind in ("region_affinity", "region_anti_affinity"):
+            v = getattr(self.spec, kind)
+            if v is not None and np.ndim(v) > 0:
+                raise ValueError(
+                    f"add() with a sequence {kind} is unsupported: it binds "
+                    "to batch rows, and churn would silently re-assign "
+                    "constraints across services.  Use a scalar, or pass "
+                    "region= explicitly.")
+        if sid is None:
+            sid = self._next_sid
+        if sid in self._plans:
+            raise ValueError(f"sid {sid} is already live")
+        self._next_sid = max(self._next_sid, sid + 1)
+        home = self.partition.home_region(int(service.src[0]))
+        aff = self._row_constraint("region_affinity", 0)
+        anti = self._row_constraint("region_anti_affinity", 0)
+        if region is not None:
+            targets = [region]
+        elif aff >= 0:
+            targets = [aff]
+        else:
+            targets = self._allowed_regions(home, anti)
+        cap = self.spec.inter_region_hops
+        for g in targets:
+            # pinned targets (region= / affinity) get the same hop-cap
+            # validation the batch path's _assign enforces
+            if (g != home and cap is not None
+                    and int(self.partition.core_hops[home, g]) > cap):
+                raise ValueError(
+                    f"region {g} is {int(self.partition.core_hops[home, g])}"
+                    f" core hops from home {home}, past inter_region_hops="
+                    f"{cap}")
+        migrated_off: Optional[int] = None
+        for k, g in enumerate(targets):
+            res = self._try_add(service, sid, g)
+            if res is None:
+                continue
+            budget = self._budget(g)
+            home_budget = self._budget(home)
+            if budget is not None or (g != home and home_budget is not None):
+                bd = self.breakdown()
+                if budget is not None and bd.regional_w[g] > budget:
+                    if self.monitor is not None:
+                        self.monitor.count("region_budget_breach",
+                                           detail=f"region={g} sid={sid}")
+                    if k + 1 < len(targets):
+                        self._drop(sid)
+                        if migrated_off is None:
+                            migrated_off = g
+                        continue
+                    # no cooler region admits it: keep best-effort (breach
+                    # already counted for the operator)
+                if (g != home and home_budget is not None
+                        and bd.regional_w[home] > home_budget
+                        and self.monitor is not None):
+                    # the stub (pinned input compute + cut egress) can push
+                    # the HOME region over budget; it is physically pinned
+                    # there, so this is surfaced rather than migrated
+                    self.monitor.count(
+                        "region_budget_breach",
+                        detail=f"region={home} sid={sid} (stub)")
+            if migrated_off is not None and self.monitor is not None:
+                # ONE migration per arrival that finally landed, counted at
+                # the region where it stays (not at intermediate drops)
+                self.monitor.count(
+                    "cross_region_migration",
+                    detail=f"sid={sid} region {migrated_off} -> {g}")
+            return res
+        return None
+
+    def _try_add(self, service, sid, g):
+        plan = make_plan(self.partition, service, sid, g)
+        eng = self._engine(g)
+        res = eng.add(plan.body, sid=sid)
+        if res is None:
+            return None
+        if plan.migrated:
+            stub_res = self._engine(plan.home).add(plan.stub, sid=sid)
+            if stub_res is None:   # stub refused (pathological budgets)
+                eng.remove(sid)
+                return None
+        self._plans[sid] = plan
+        self._order.append(sid)
+        return res
+
+    def _drop(self, sid: int) -> None:
+        plan = self._plans.pop(sid)
+        self._engines[plan.assigned].remove(sid)
+        if plan.migrated:
+            self._engines[plan.home].remove(sid)
+        self._order.remove(sid)
+
+    def remove(self, sid: int):
+        """Retire a service from its region engine(s) (body + stub)."""
+        if self._flat:
+            return self._flat.remove(sid)
+        if sid not in self._plans:
+            raise KeyError(f"no live service {sid}")
+        plan = self._plans[sid]
+        res = self._engines[plan.assigned].remove(sid)
+        if plan.migrated:
+            self._engines[plan.home].remove(sid)
+        self._plans.pop(sid)
+        self._order.remove(sid)
+        return res
+
+    def defrag(self):
+        """Per-region full-portfolio re-pack (each under the spec masks)."""
+        if self._flat:
+            return self._flat.defrag()
+        out = {}
+        for g, eng in self._engines.items():
+            if eng.problem is not None:
+                out[g] = eng.defrag()
+        return out
+
+    def replay(self, events: Sequence[dynamic.ServiceEvent], make_vsr,
+               on_event=None) -> list:
+        """Drive the federation through a churn timeline (region-aware
+        ``dynamic.replay`` semantics: unknown departures are skipped)."""
+        if self._flat:
+            return self._flat.replay(events, make_vsr, on_event)
+        live = set(self._order)
+        stats = []
+        for ev in events:
+            if ev.kind == "arrive":
+                res = self.add(make_vsr(ev.sid), sid=ev.sid)
+                if res is not None:
+                    live.add(ev.sid)
+            else:
+                if ev.sid not in live:
+                    continue
+                res = self.remove(ev.sid)
+                live.discard(ev.sid)
+            stats.append((ev, res))
+            if on_event is not None:
+                on_event(ev, res)
+        return stats

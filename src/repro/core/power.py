@@ -65,6 +65,13 @@ ACTIVE_EPS = 1.0e-6
 # kernels/placement_power.py.
 SNAP_GFLOPS = 1.0e-3
 SNAP_MBPS = 1.0e-2
+# Substrates up to this many processing nodes additionally carry the dense
+# [P*P, N] route incidence table (``PlacementProblem.route_dense``): at paper
+# scale the table is ~30 KB and turns the delta engine's O(K*N) per-route
+# one-hot expansion back into an O(N) row gather (the ROADMAP "paper-scale
+# delta-move overhead" item).  Above the gate the O(P^2*N) operand is exactly
+# what the CSR representation exists to avoid, so it is never built.
+DENSE_ROUTE_MAX_P = 64
 
 
 class PowerBreakdown(NamedTuple):
@@ -108,6 +115,9 @@ class PlacementProblem:
     link_h: jnp.ndarray       # [L] Mbps
     fixed_mask: jnp.ndarray   # [R, V] bool: True where VM is pinned
     fixed_node: jnp.ndarray   # [R, V] int32: pinned node (src for input VMs)
+    # optional dense route-row cache (small substrates only; see
+    # DENSE_ROUTE_MAX_P): [P*P, N] float32 incidence rows, None above the gate
+    route_dense: Optional[jnp.ndarray] = None
 
     @property
     def P(self) -> int:
@@ -153,6 +163,9 @@ def substrate_arrays(topo: CFNTopology) -> Dict[str, jnp.ndarray]:
     nn = topo.net_param_arrays()
     out = {k: jnp.asarray(v) for k, v in {**pp, **nn}.items()}
     out["route_idx"] = jnp.asarray(topo.route_idx)
+    out["route_dense"] = (
+        jnp.asarray(topo.dense_path_nodes().reshape(topo.P * topo.P, topo.N))
+        if topo.P <= DENSE_ROUTE_MAX_P else None)
     return out
 
 
@@ -231,8 +244,13 @@ def _lam_from_links(problem: PlacementProblem, X_flat: jnp.ndarray
     """lambda [N] for a HARD placement: each virtual link's bitrate
     accumulated along its route's <= K node ids, via a one-hot contraction
     (gathers + matmul only, so it vectorizes cleanly under vmap).
-    O(L * K * N) flops, no O(P^2 * N) operand anywhere."""
+    O(L * K * N) flops, no O(P^2 * N) operand anywhere -- except on small
+    substrates, where the ``route_dense`` cache replaces the one-hot
+    expansion with an O(N) incidence-row gather (same values)."""
     p = problem
+    if p.route_dense is not None:
+        idx = X_flat[p.link_src] * p.P + X_flat[p.link_dst]         # [L]
+        return p.link_h @ p.route_dense[idx]
     ids = p.route_idx[X_flat[p.link_src], X_flat[p.link_dst]]       # [L, K]
     oh = (ids[..., None] == jnp.arange(p.N)).astype(jnp.float32)    # [L,K,N]
     return jnp.einsum("l,lkn->n", p.link_h, oh)
@@ -486,13 +504,20 @@ def _move_core(problem: PlacementProblem, aux: PlacementAux, X_flat,
     # Each route contributes <= K node ids from the CSR table; the sentinel
     # id N never matches iota < N, so padding masks itself out.  O(D*K*N)
     # one-hot contraction -- gathers + matmul only (vmap-safe on XLA CPU),
-    # no [P*P, N] dense incidence operand.
-    rt_flat = p.route_idx.reshape(P * P, p.K)
+    # no [P*P, N] dense incidence operand.  Small substrates carry the
+    # guarded ``route_dense`` cache instead: the same delta as an O(N)
+    # incidence-row gather per touched route, which is the anneal-scan
+    # hot-path fix for the ROADMAP paper-scale delta-move overhead item.
     idx_rm = jnp.where(is_src, p_old * P + q_rm, q_rm * P + p_old)
     idx_in = jnp.where(is_src, p_new * P + q_in, q_in * P + p_new)
-    ids2 = rt_flat[jnp.concatenate([idx_rm, idx_in])]   # [2D, K]
-    oh2 = (ids2[..., None] == jnp.arange(p.N)).astype(jnp.float32)
-    d_lam = jnp.einsum("d,dkn->n", hh, oh2)
+    idx2 = jnp.concatenate([idx_rm, idx_in])            # [2D]
+    if p.route_dense is not None:
+        d_lam = hh @ p.route_dense[idx2]
+    else:
+        rt_flat = p.route_idx.reshape(P * P, p.K)
+        ids2 = rt_flat[idx2]                            # [2D, K]
+        oh2 = (ids2[..., None] == jnp.arange(p.N)).astype(jnp.float32)
+        d_lam = jnp.einsum("d,dkn->n", hh, oh2)
     lam2 = _snap(lam + d_lam, SNAP_MBPS)
 
     idx = jnp.stack([p_old, p_new])

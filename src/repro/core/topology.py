@@ -391,6 +391,100 @@ def city_scale(n_olt: int = 8, onus_per_olt: int = 6, iot_per_onu: int = 5,
     return t.finalize()
 
 
+def federated_scale(n_regions: int = 4, n_olt: int = 2, onus_per_olt: int = 2,
+                    iot_per_onu: int = 3, mf_servers: int = 4,
+                    cdc_servers: int = 16, n_core: int = 14) -> CFNTopology:
+    """Federated fog regions: ``n_regions`` city-style CFN regions stitched
+    over a shared NSFNET-like IP/WDM core (the paper's §4 future work made
+    a preset, after the cloud-fog federations of arXiv:2008.04004).
+
+    Every region ``g`` is a self-contained Fig.-1-style fabric whose node
+    names carry the ``r{g}_`` prefix (the convention
+    ``core.federation.RegionPartition`` parses):
+
+      * access: ``n_olt`` OLT zones of ``onus_per_olt`` ONU APs x
+        ``iot_per_onu`` IoT devices, one AF node per zone behind dedicated
+        low-end gear;
+      * metro: one metro router/switch pair hosting the region's MF node;
+      * region cloud: a CDC behind the region's own IP/WDM ingress/egress
+        pair (``core_in0``/``core_out0``) -- so every intra-region route,
+        including routes to the regional CDC, stays on region-prefixed
+        network nodes.
+
+    The shared core is ``n_core`` unprefixed ``nsf{c}`` IP/WDM nodes --
+    the 14-node NSFNET mesh when ``n_core == 14``, a ring otherwise --
+    and region ``g`` attaches its ``core_in0`` at core node
+    ``(g * n_core) // n_regions``.  Only inter-region traffic ever touches
+    the shared core, which is what lets ``core.federation`` decompose the
+    substrate into per-region placement problems plus an inter-region
+    core-link table.
+
+    Defaults give 4 regions x 16 processing nodes (P = 64) over the NSFNET
+    core; the knobs scale each region like ``city_scale``.
+    """
+    if n_regions < 1:
+        raise ValueError(f"n_regions must be >= 1, got {n_regions}")
+    t = CFNTopology()
+    # processing nodes, region-major (merged proc index order groups regions)
+    for g in range(n_regions):
+        p = f"r{g}_"
+        for z in range(n_olt):
+            for o in range(onus_per_olt):
+                for i in range(iot_per_onu):
+                    t.add_proc(f"{p}iot{z}_{o}_{i}", hw.IOT_RPI4, LAYER_IOT)
+        for z in range(n_olt):
+            t.add_proc(f"{p}af{z}", hw.AF_I5, LAYER_AF)
+        t.add_proc(f"{p}mf0", hw.scaled(hw.MF_I5, n_servers=mf_servers),
+                   LAYER_MF)
+        t.add_proc(f"{p}cdc0", hw.scaled(hw.CDC_XEON, n_servers=cdc_servers),
+                   LAYER_CDC)
+    # network nodes: regions first (region-major), shared core last
+    for g in range(n_regions):
+        p = f"r{g}_"
+        for z in range(n_olt):
+            for o in range(onus_per_olt):
+                t.add_net(f"{p}onu{z}_{o}", hw.ONU_AP)
+            t.add_net(f"{p}olt{z}", hw.OLT)
+            t.add_net(f"{p}af_router{z}", hw.LOW_END_ROUTER)
+            t.add_net(f"{p}af_switch{z}", hw.LOW_END_SWITCH)
+        t.add_net(f"{p}mrouter0", hw.METRO_ROUTER)
+        t.add_net(f"{p}mswitch0", hw.METRO_SWITCH)
+        t.add_net(f"{p}mf_router0", hw.LOW_END_ROUTER)
+        t.add_net(f"{p}mf_switch0", hw.LOW_END_SWITCH)
+        t.add_net(f"{p}core_in0", hw.IPWDM_NODE)
+        t.add_net(f"{p}core_out0", hw.IPWDM_NODE)
+    for c in range(n_core):
+        t.add_net(f"nsf{c}", hw.IPWDM_NODE)
+
+    # wiring: each region is a tree hanging off one shared-core attachment
+    for g in range(n_regions):
+        p = f"r{g}_"
+        for z in range(n_olt):
+            for o in range(onus_per_olt):
+                for i in range(iot_per_onu):
+                    t.connect(f"{p}iot{z}_{o}_{i}", f"{p}onu{z}_{o}")
+                t.connect(f"{p}onu{z}_{o}", f"{p}olt{z}")
+            t.connect(f"{p}olt{z}", f"{p}af_router{z}")
+            t.connect(f"{p}af_router{z}", f"{p}af_switch{z}")
+            t.connect(f"{p}af_switch{z}", f"{p}af{z}")
+            t.connect(f"{p}olt{z}", f"{p}mrouter0")
+        t.connect(f"{p}mrouter0", f"{p}mswitch0")
+        t.connect(f"{p}mswitch0", f"{p}mf_router0")
+        t.connect(f"{p}mf_router0", f"{p}mf_switch0")
+        t.connect(f"{p}mf_switch0", f"{p}mf0")
+        t.connect(f"{p}mswitch0", f"{p}core_in0")
+        t.connect(f"{p}core_in0", f"{p}core_out0")
+        t.connect(f"{p}core_out0", f"{p}cdc0")
+        t.connect(f"{p}core_in0", f"nsf{(g * n_core) // n_regions}")
+    if n_core == 14:
+        for a, b in NSFNET_EDGES:
+            t.connect(f"nsf{a}", f"nsf{b}")
+    else:
+        for c in range(n_core):
+            t.connect(f"nsf{c}", f"nsf{(c + 1) % n_core}")
+    return t.finalize()
+
+
 def datacenter_topology(n_edge: int = 8, n_fog: int = 2) -> CFNTopology:
     """Beyond-paper preset: TPU-pod-class nodes in the same CFN shape.
 

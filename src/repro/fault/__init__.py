@@ -1,2 +1,2 @@
-from .monitor import HeartbeatMonitor, StragglerTracker
+from .monitor import HeartbeatMonitor, PlacementMonitor, StragglerTracker
 from .runner import ResilientTrainer, RunReport, SimulatedFailure

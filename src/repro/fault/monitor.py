@@ -1,4 +1,5 @@
-"""Failure detection: heartbeats and straggler tracking.
+"""Failure detection: heartbeats, straggler tracking, and placement-plane
+counters.
 
 On a real cluster the heartbeat source is the per-host agent (and the
 coordinator is the jax.distributed service); here workers are simulated so
@@ -6,13 +7,20 @@ the detection/reaction logic -- the part that belongs to this framework --
 is real and testable: a missed heartbeat triggers restart-from-checkpoint,
 a straggling step raises a mitigation signal (at scale: evict + elastic
 rescale to the surviving host set).
+
+``PlacementMonitor`` is the placement-plane half: the online engine
+(``core.dynamic.OnlineEmbedder``) and the federation coordinator
+(``core.federation.FederatedSession``) report admission rejections,
+power-budget violations, regional budget breaches, and cross-region
+migrations here instead of dropping them -- the counters an operator
+alerts on.
 """
 from __future__ import annotations
 
 import statistics
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 
 @dataclass
@@ -34,6 +42,48 @@ class HeartbeatMonitor:
 
     def healthy(self) -> bool:
         return not self.dead_workers()
+
+
+@dataclass
+class PlacementMonitor:
+    """Operational counters for the placement control plane.
+
+    Canonical kinds (emitters in parentheses):
+      * ``admission_rejected``    -- an arrival refused by SLA admission
+                                     control (OnlineEmbedder.add).
+      * ``power_budget_exceeded`` -- the refusal was the incremental power
+                                     budget (spec.power_budget_w).
+      * ``violation_budget_exceeded`` -- the refusal was the capacity
+                                     violation tolerance (spec.violation_tol).
+      * ``region_budget_breach``  -- a region's TOTAL watts crossed its
+                                     spec.region_power_budget_w
+                                     (FederatedSession coordinator).
+      * ``cross_region_migration`` -- a service re-homed to another region
+                                     after a breach (FederatedSession).
+
+    ``count`` is also open to new kinds; ``events`` keeps the last
+    ``max_events`` (kind, detail) pairs for debugging.
+    """
+
+    counters: Dict[str, int] = field(default_factory=dict)
+    events: List[Tuple[str, Optional[str]]] = field(default_factory=list)
+    max_events: int = 256
+
+    def count(self, kind: str, detail: Optional[str] = None,
+              n: int = 1) -> None:
+        self.counters[kind] = self.counters.get(kind, 0) + n
+        self.events.append((kind, detail))
+        if len(self.events) > self.max_events:
+            del self.events[:len(self.events) - self.max_events]
+
+    def get(self, kind: str) -> int:
+        return self.counters.get(kind, 0)
+
+    def __getitem__(self, kind: str) -> int:
+        return self.get(kind)
+
+    def snapshot(self) -> Dict[str, int]:
+        return dict(self.counters)
 
 
 @dataclass

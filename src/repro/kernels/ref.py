@@ -67,6 +67,39 @@ def lam_f64_sparse(problem: PlacementProblem, tm: np.ndarray) -> np.ndarray:
     return buf[:p.N]
 
 
+def eq_terms_f64(pp: dict, nn: dict, omega: np.ndarray, theta: np.ndarray,
+                 lam: np.ndarray):
+    """Per-node Eq.(1)/(2) terms at float64 -- THE single f64 copy of the
+    paper's power formulas, shared by ``placement_objective_f64`` and the
+    federation's decomposed accounting (``core.federation``).
+
+    ``pp``/``nn`` map the ``topology.proc_param_arrays`` /
+    ``net_param_arrays`` keys to arrays; returns
+    ``(per_net [N], per_proc [P], violation [])``.
+    """
+    g = lambda a: np.asarray(a, np.float64)
+    n_srv = np.ceil(omega / g(pp["C_pr"]))
+    beta = (lam > ACTIVE_EPS).astype(np.float64)
+    phi = ((omega > ACTIVE_EPS) | (theta > ACTIVE_EPS)).astype(np.float64)
+    per_net = g(nn["pue_net"]) * (g(nn["eps"]) * lam / 1e3
+                                  + beta * g(nn["idle_share"])
+                                  * g(nn["pi_net"]))
+    per_proc = g(pp["pue_pr"]) * (g(pp["E"]) * omega + n_srv * g(pp["pi_pr"])
+                                  + g(pp["EL"]) * theta / 1e3
+                                  + phi * g(pp["lan_share"])
+                                  * g(pp["pi_lan"]))
+    relu = lambda x: np.maximum(x, 0.0)
+    violation = (relu(omega - g(pp["NS"]) * g(pp["C_pr"])).sum()
+                 + relu(lam / 1e3 - g(nn["C_net"])).sum()
+                 + relu(theta / 1e3 - g(pp["C_lan"])).sum())
+    return per_net, per_proc, float(violation)
+
+
+_PP_KEYS = ("E", "C_pr", "NS", "pi_pr", "pue_pr", "EL", "C_lan", "pi_lan",
+            "lan_share")
+_NN_KEYS = ("eps", "C_net", "pi_net", "pue_net", "idle_share")
+
+
 def placement_objective_f64(problem: PlacementProblem, X,
                             path_dense: Optional[np.ndarray] = None
                             ) -> float:
@@ -96,19 +129,9 @@ def placement_objective_f64(problem: PlacementProblem, X,
         lam = np.einsum("pq,pqn->n", tm, np.asarray(path_dense, np.float64))
     theta = (u.T @ h) + (w.T @ h) - intra
 
-    g = lambda a: np.asarray(a, np.float64)
-    n_srv = np.ceil(omega / g(p.C_pr))
-    beta = (lam > ACTIVE_EPS).astype(np.float64)
-    phi = ((omega > ACTIVE_EPS) | (theta > ACTIVE_EPS)).astype(np.float64)
-    per_net = g(p.pue_net) * (g(p.eps) * lam / 1e3
-                              + beta * g(p.idle_share) * g(p.pi_net))
-    per_proc = g(p.pue_pr) * (g(p.E) * omega + n_srv * g(p.pi_pr)
-                              + g(p.EL) * theta / 1e3
-                              + phi * g(p.lan_share) * g(p.pi_lan))
-    relu = lambda x: np.maximum(x, 0.0)
-    violation = (relu(omega - g(p.NS) * g(p.C_pr)).sum()
-                 + relu(lam / 1e3 - g(p.C_net)).sum()
-                 + relu(theta / 1e3 - g(p.C_lan)).sum())
+    per_net, per_proc, violation = eq_terms_f64(
+        {k: getattr(p, k) for k in _PP_KEYS},
+        {k: getattr(p, k) for k in _NN_KEYS}, omega, theta, lam)
     return float(per_net.sum() + per_proc.sum() + PENALTY * violation)
 
 

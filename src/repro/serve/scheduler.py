@@ -2,9 +2,11 @@
 path, now a thin consumer of the unified placement API.
 
 Each inference service (an architecture + token rate) becomes a VSR; the
-scheduler drives a ``repro.api.CFNSession`` whose declarative
+scheduler drives a ``repro.api.CFNSession`` -- or, passed via
+``session=``, a multi-region ``repro.api.FederatedSession``, so serving
+schedules onto a federated fog unchanged -- whose declarative
 ``PlacementSpec`` carries the constraint set (SLA hop bounds, admission
-power budget) and the portfolio configuration.  ``add_service`` /
+power budget, regional budgets) and the portfolio configuration.  ``add_service`` /
 ``remove_service`` are churn events on the session: the previous embedding
 is carried through ``power.warm_state`` and only the churned service's VMs
 are re-placed by ``solvers.resolve_incremental`` -- a periodic
@@ -46,13 +48,25 @@ class EnergyAwareScheduler:
     def __init__(self, topo: CFNTopology, method: str = "cfn-milp",
                  defrag_every: int = 16, max_hops: Optional[int] = None,
                  admit_power_budget_w: Optional[float] = None,
-                 spec: Optional[cfn_api.PlacementSpec] = None):
+                 spec: Optional[cfn_api.PlacementSpec] = None,
+                 session=None, monitor=None):
+        """``session`` (optional) supplies a pre-built placement session --
+        a ``CFNSession`` or a multi-region ``FederatedSession`` -- so the
+        serving path schedules onto a federation unchanged; otherwise a
+        flat session is built from ``spec`` (or the legacy kwargs).
+        ``monitor`` (a ``fault.monitor.PlacementMonitor``) receives
+        admission rejections and budget violations."""
         if spec is None:
             spec = cfn_api.PlacementSpec(
                 method=method, defrag_every=defrag_every, max_hops=max_hops,
                 power_budget_w=admit_power_budget_w)
         self.topo = topo
-        self.session = cfn_api.CFNSession(topo, spec)
+        if session is not None:
+            if monitor is not None:
+                session.attach_monitor(monitor)
+            self.session = session
+        else:
+            self.session = cfn_api.CFNSession(topo, spec, monitor=monitor)
         self.services: List[Service] = []
         self.rejected: List[str] = []   # names refused by admission control
         self._by_sid: Dict[int, Service] = {}
@@ -103,16 +117,16 @@ class EnergyAwareScheduler:
 
     # -- reporting ---------------------------------------------------------
     def placements(self) -> List[Placement]:
-        res = self.session.result
-        if res is None:
+        X = self.session.X   # merged node ids for flat AND federated paths
+        if X is None:
             return []
         per_w = self.session.attribute()
         placements = []
         for row, sid in enumerate(self.session.sids):
             svc = self._by_sid[sid]
             V = self.session.service_vms(row)   # rest is bucket/concat pad
-            nodes = [self.topo.proc_names[p] for p in res.X[row][:V]]
-            layers = [self.topo.proc_layer[p] for p in res.X[row][:V]]
+            nodes = [self.topo.proc_names[p] for p in X[row][:V]]
+            layers = [self.topo.proc_layer[p] for p in X[row][:V]]
             placements.append(Placement(
                 service=svc.name, stage_nodes=nodes, layers=layers,
                 power_w=per_w[sid]))

@@ -1,0 +1,423 @@
+"""Federation subsystem tests (the federated-fog-regions PR).
+
+Covers: RegionPartition structure (region closure, route-table agreement
+with the merged substrate, core-hop table), the acceptance criteria --
+1-region federation == flat CFNSession exactly (placements AND float64
+power), the 4-region batched solve under ONE vmapped compile -- exact
+multi-region power conservation (regional + inter-region watts == the
+float64 oracle on the equivalent flat placement, batch and churn), region
+affinity under churn replay, cross-region migration on regional budget
+breaches, and the fault-monitor wiring for admission/budget events.
+"""
+import numpy as np
+import jax
+import pytest
+
+from repro.api import CFNSession, FederatedSession, PlacementSpec
+from repro.core import dynamic, federation, power, solvers, topology, vsr
+from repro.fault.monitor import PlacementMonitor
+from repro.kernels import ref as kref
+
+
+def _fed_topo(n_regions=3, n_core=6):
+    """A small federated substrate: P_r = 7 per region."""
+    return topology.federated_scale(n_regions=n_regions, n_olt=1,
+                                    onus_per_olt=2, iot_per_onu=2,
+                                    n_core=n_core)
+
+
+@pytest.fixture(scope="module")
+def ftopo():
+    return _fed_topo()
+
+
+@pytest.fixture(scope="module")
+def fpart(ftopo):
+    return federation.RegionPartition.from_topology(ftopo)
+
+
+def _region_sources(part):
+    return [int(r.proc_ids[0]) for r in part.regions]
+
+
+def _oracle_gap(topo, vsrs, X, objective):
+    prob = power.build_problem(topo, vsrs)
+    X = np.asarray(X)[:vsrs.R, :vsrs.V]   # strip bucket padding
+    oracle = kref.placement_objective_f64(prob, X)
+    return abs(oracle - objective), oracle
+
+
+# ---------------------------------------------------------------------------
+# partition structure
+# ---------------------------------------------------------------------------
+
+def test_partition_structure(ftopo, fpart):
+    assert fpart.G == 3
+    # every processing node in exactly one region; shared core unassigned
+    assert sorted(np.concatenate([r.proc_ids for r in fpart.regions])
+                  .tolist()) == list(range(ftopo.P))
+    assert len(fpart.core_net_ids) == 6
+    assert all(ftopo.net_names[n].startswith("nsf")
+               for n in fpart.core_net_ids)
+    # core-hop table: symmetric, zero diagonal, positive off-diagonal
+    assert np.array_equal(fpart.core_hops, fpart.core_hops.T)
+    assert np.all(np.diag(fpart.core_hops) == 0)
+    off = fpart.core_hops[~np.eye(fpart.G, dtype=bool)]
+    assert np.all(off > 0)
+
+
+def test_region_routes_match_merged(ftopo, fpart):
+    """Each region's own route table == the merged table restricted to the
+    region (ids remapped) -- the closure property the exact decomposition
+    rests on."""
+    rt_merged = np.asarray(ftopo.route_idx)
+    for reg in fpart.regions:
+        lut = np.full(ftopo.N + 1, reg.N, np.int64)
+        lut[reg.net_ids] = np.arange(reg.N)
+        mapped = lut[rt_merged[np.ix_(reg.proc_ids, reg.proc_ids)]]
+        local = np.asarray(reg.topo.route_idx)
+        K = max(mapped.shape[2], local.shape[2])
+        pad = lambda a: np.concatenate(
+            [a, np.full(a.shape[:2] + (K - a.shape[2],), reg.N, a.dtype)],
+            axis=2)
+        np.testing.assert_array_equal(pad(mapped), pad(local))
+
+
+def test_partition_single_identity(ftopo):
+    part = federation.RegionPartition.single(ftopo)
+    assert part.G == 1
+    assert part.regions[0].topo is ftopo
+    np.testing.assert_array_equal(part.regions[0].proc_ids,
+                                  np.arange(ftopo.P))
+
+
+# ---------------------------------------------------------------------------
+# acceptance: 1-region federation == flat session, exactly
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_single_region_parity_exact(seed):
+    """A federation of one region reproduces the flat CFNSession.solve()
+    placements and float64-oracle power EXACTLY (gap 0)."""
+    topo = topology.paper_topology()
+    vs = vsr.random_vsrs(5, rng=seed, source_nodes=[0])
+    spec = PlacementSpec(effort="quick")
+    flat = CFNSession(topo, spec)
+    fed = FederatedSession(topo, spec)
+    rf = flat.solve(vs)
+    rr = fed.solve(vs)
+    np.testing.assert_array_equal(rf.X, rr.X)
+    gap_f, oracle_f = _oracle_gap(topo, vs, rf.X, 0.0)
+    gap_r, oracle_r = _oracle_gap(topo, vs, rr.X, 0.0)
+    assert oracle_f == oracle_r                       # f64 gap is exactly 0
+    # the federated breakdown on the delegated state matches the oracle
+    bd = fed.breakdown()
+    assert bd.objective == oracle_r
+    assert bd.regional_w.shape == (1,)
+    assert bd.inter_region_w == 0.0
+
+
+# ---------------------------------------------------------------------------
+# acceptance: multi-region conservation + single vmapped compile
+# ---------------------------------------------------------------------------
+
+def test_multi_region_conservation(ftopo, fpart):
+    """Sum of regional + inter-region watts == the float64 oracle on the
+    equivalent flat placement, with cross-region services in play."""
+    srcs = _region_sources(fpart)
+    vs = vsr.random_vsrs(6, rng=1, source_nodes=srcs)
+    homes = [fpart.home_region(int(s)) for s in vs.src]
+    aff = np.full(6, -1)
+    aff[0] = (homes[0] + 1) % 3        # force two cross-region services
+    aff[1] = (homes[1] + 2) % 3
+    spec = PlacementSpec(effort="quick", region_affinity=aff)
+    sess = FederatedSession(ftopo, spec)
+    res = sess.solve(vs)
+    bd = res.breakdown
+    # identity: regional + inter == total (by construction, still pinned)
+    assert abs(bd.regional_w.sum() + bd.inter_region_w
+               - bd.total_w) <= 1e-9 * max(1.0, bd.total_w)
+    # exactness: the decomposed evaluation equals a from-scratch f64 oracle
+    gap, oracle = _oracle_gap(ftopo, vs, res.X, bd.objective)
+    assert gap <= 1e-7 * max(1.0, abs(oracle))
+    # the affinity-forced services really are cross-region and priced
+    assert res.assignments[0] == aff[0] and res.assignments[1] == aff[1]
+    assert bd.inter_region_w > 0.0
+    # the session's post-seed (engine-backed) accounting agrees too
+    gap2 = abs(sess.breakdown().objective - oracle)
+    assert gap2 <= 1e-7 * max(1.0, abs(oracle))
+
+
+def test_four_region_single_vmapped_compile():
+    """Acceptance: a 4-region federated_scale solve runs every per-region
+    portfolio under ONE vmapped trace (same shape bucket across regions)."""
+    topo = _fed_topo(n_regions=4, n_core=4)
+    part = federation.RegionPartition.from_topology(topo)
+    # one shape bucket: all regions pad to identical (P, N, K)
+    subs, masks, (P_pad, N_pad, K_pad) = part.padded_substrates()
+    for d in subs:
+        assert d["route_idx"].shape == (P_pad, P_pad, K_pad)
+        assert d["E"].shape == (P_pad,)
+    vs = vsr.random_vsrs(8, rng=0, source_nodes=_region_sources(part))
+    sess = FederatedSession(topo, PlacementSpec(effort="quick"))
+    before = solvers.TRACE_COUNTS.get("solve_regions", 0)
+    res = sess.solve(vs)
+    assert solvers.TRACE_COUNTS.get("solve_regions", 0) == before + 1
+    # placements landed on real (non-pad) nodes of the right regions
+    for i, g in enumerate(res.assignments):
+        reg = part.regions[g]
+        free = ~np.asarray([v == int(vs.input_vm[i])
+                            for v in range(vs.V)])
+        assert np.isin(res.X[i][free], reg.proc_ids).all()
+    # a second same-bucket federation (same service distribution, fresh
+    # demands) re-uses the compiled program
+    vs2 = vsr.random_vsrs(8, rng=5, source_nodes=_region_sources(part))
+    vs2.src[:] = vs.src          # same homes -> same shape bucket
+    sess2 = FederatedSession(topo, PlacementSpec(effort="quick"))
+    sess2.solve(vs2)
+    assert solvers.TRACE_COUNTS.get("solve_regions", 0) == before + 1
+
+
+# ---------------------------------------------------------------------------
+# churn: affinity, conservation, budgets, monitor
+# ---------------------------------------------------------------------------
+
+def test_region_affinity_never_violated_under_churn(ftopo, fpart):
+    """Scalar region_affinity pins every service's free VMs to the target
+    region through a whole churn replay (arrivals AND departures)."""
+    target = 1
+    spec = PlacementSpec(effort="quick", region_affinity=target,
+                         defrag_every=0, anneal_steps=100)
+    sess = FederatedSession(ftopo, spec)
+    srcs = _region_sources(fpart)
+    make = lambda sid: vsr.random_vsrs(1, rng=100 + sid,
+                                       source_nodes=[srcs[sid % 3]])
+    events = [dynamic.ServiceEvent(float(t), "arrive", t) for t in range(4)]
+    events += [dynamic.ServiceEvent(5.0, "depart", 1),
+               dynamic.ServiceEvent(6.0, "arrive", 9),
+               dynamic.ServiceEvent(7.0, "depart", 0)]
+    reg = fpart.regions[target]
+
+    def check(ev, res):
+        X = sess.X
+        for row, sid in enumerate(sess.sids):
+            assert sess.assignment(sid) == target
+            plan = sess._plans[sid]
+            iv = int(plan.vsr.input_vm[0])
+            V = plan.vsr.V
+            for v in range(V):
+                if v == iv:
+                    continue
+                assert X[row, v] in reg.proc_ids, (sid, v, X[row, v])
+
+    sess.replay(events, make, on_event=check)
+    assert sess.n_live == 3
+
+
+def test_online_churn_conservation(ftopo, fpart):
+    """After every add/remove the exact federated accounting equals the
+    float64 oracle of the merged live placement."""
+    srcs = _region_sources(fpart)
+    spec = PlacementSpec(effort="quick", defrag_every=0, anneal_steps=100)
+    sess = FederatedSession(ftopo, spec)
+    live = {}
+    for i in range(3):
+        s = vsr.random_vsrs(1, rng=20 + i, source_nodes=[srcs[i % 3]])
+        assert sess.add(s, sid=i) is not None
+        live[i] = s
+    sess.remove(1)
+    del live[1]
+    s = vsr.random_vsrs(1, rng=40, source_nodes=[srcs[1]])
+    sess.add(s, sid=7)
+    live[7] = s
+    batch = None
+    for sid in sess.sids:
+        batch = live[sid] if batch is None else batch.concat(live[sid])
+    bd = sess.breakdown()
+    gap, oracle = _oracle_gap(ftopo, batch, sess.X, bd.objective)
+    assert gap <= 1e-7 * max(1.0, abs(oracle))
+    assert abs(bd.regional_w.sum() + bd.inter_region_w - bd.total_w) \
+        <= 1e-9 * max(1.0, bd.total_w)
+
+
+def test_budget_breach_migrates_and_counts():
+    """An arrival pushing its region past region_power_budget_w is migrated
+    to the coolest admissible region; breach + migration hit the monitor."""
+    topo = _fed_topo(n_regions=2, n_core=4)
+    part = federation.RegionPartition.from_topology(topo)
+    mon = PlacementMonitor()
+    spec = PlacementSpec(effort="quick", region_power_budget_w=[180.0, 1e9],
+                         defrag_every=0, anneal_steps=100)
+    sess = FederatedSession(topo, spec, monitor=mon)
+    src0 = int(part.regions[0].proc_ids[0])
+    assigned = []
+    for i in range(4):
+        res = sess.add(vsr.random_vsrs(1, rng=i, source_nodes=[src0]))
+        assert res is not None
+        assigned.append(sess.assignment(i))
+    assert assigned[-1] == 1, assigned          # migrated off region 0
+    assert mon.get("region_budget_breach") >= 1
+    assert mon.get("cross_region_migration") >= 1
+    # the migrated service is priced over the core
+    assert sess.breakdown().inter_region_w > 0.0
+    # and the migrated body keeps its pinned source at home
+    plan = sess._plans[3]
+    assert plan.migrated and plan.home == 0 and plan.assigned == 1
+    assert sess.X[3, int(plan.vsr.input_vm[0])] == src0
+
+
+def test_batch_coordinator_migrates_on_budget():
+    """The batch-path coordinator migrates services out of an over-budget
+    region, re-solves after every move, and the result stays exactly
+    conserved with the cut links priced over the core."""
+    topo = _fed_topo(n_regions=2, n_core=4)
+    part = federation.RegionPartition.from_topology(topo)
+    src0 = int(part.regions[0].proc_ids[0])
+    vs = vsr.random_vsrs(5, rng=0, source_nodes=[src0])   # all homed in r0
+    mon = PlacementMonitor()
+    spec = PlacementSpec(effort="quick",
+                         region_power_budget_w=[150.0, 1e9])
+    sess = FederatedSession(topo, spec, monitor=mon)
+    res = sess.solve(vs)
+    assert res.migrations >= 1
+    assert (res.assignments == 1).sum() == res.migrations
+    assert mon.get("cross_region_migration") == res.migrations
+    assert res.breakdown.inter_region_w > 0.0
+    gap, oracle = _oracle_gap(topo, vs, res.X, res.breakdown.objective)
+    assert gap <= 1e-7 * max(1.0, abs(oracle))
+
+
+def test_single_vm_services_solve(ftopo, fpart):
+    """All-pinned workloads (V=1 services: input VM only) solve on the
+    batched path instead of tripping the no-free-position guard."""
+    srcs = _region_sources(fpart)
+    vs = vsr.VSRBatch(F=np.full((3, 1), 0.4, np.float32),
+                      H=np.zeros((3, 1, 1), np.float32),
+                      src=np.asarray(srcs, np.int32),
+                      input_vm=np.zeros(3, np.int32))
+    sess = FederatedSession(ftopo, PlacementSpec(effort="quick"))
+    res = sess.solve(vs)
+    np.testing.assert_array_equal(res.X[:, 0], np.asarray(srcs))
+    gap, oracle = _oracle_gap(ftopo, vs, res.X, res.breakdown.objective)
+    assert gap <= 1e-7 * max(1.0, abs(oracle))
+
+
+def test_attribute_sums_to_total_with_migrations(ftopo, fpart):
+    """Per-tenant watts sum to the exact fleet total even when cut links
+    put watts on regional egress/ingress nodes no engine sees."""
+    srcs = _region_sources(fpart)
+    spec = PlacementSpec(effort="quick", anneal_steps=100, defrag_every=0)
+    sess = FederatedSession(ftopo, spec)
+    for i in range(3):
+        sess.add(vsr.random_vsrs(1, rng=30 + i, source_nodes=[srcs[0]]),
+                 sid=i, region=i)          # two of three are cross-region
+    per = sess.attribute()
+    bd = sess.breakdown()
+    assert bd.inter_region_w > 0.0
+    assert abs(sum(per.values()) - bd.total_w) <= 1e-6 * bd.total_w
+
+
+def test_churn_respects_inter_region_hop_cap(ftopo, fpart):
+    """add(region=) / scalar affinity validate inter_region_hops exactly
+    like the batch path's _assign."""
+    srcs = _region_sources(fpart)
+    far = int(fpart.core_hops[0].max())
+    spec = PlacementSpec(effort="quick", inter_region_hops=far - 1,
+                         anneal_steps=100)
+    sess = FederatedSession(ftopo, spec)
+    over = int(np.argmax(fpart.core_hops[0]))
+    with pytest.raises(ValueError, match="inter_region_hops"):
+        sess.add(vsr.random_vsrs(1, rng=0, source_nodes=[srcs[0]]),
+                 region=over)
+
+
+def test_monitor_counts_admission_rejections():
+    """OnlineEmbedder reports admission rejections (and names the violated
+    budget) on the attached monitor instead of dropping them."""
+    topo = topology.paper_topology()
+    mon = PlacementMonitor()
+    spec = PlacementSpec(power_budget_w=1e-6, effort="quick",
+                         anneal_steps=50)
+    sess = CFNSession(topo, spec, monitor=mon)
+    s0 = vsr.random_vsrs(1, rng=0, source_nodes=[0])
+    s1 = vsr.random_vsrs(1, rng=1, source_nodes=[0])
+    assert sess.add(s0) is None              # even the first add draws power
+    assert sess.add(s1) is None
+    assert mon.get("admission_rejected") == 2
+    assert mon.get("power_budget_exceeded") == 2
+    assert sess.admission["rejected"] == 2
+
+
+def test_spec_rejects_row_positional_for_federation(ftopo):
+    with pytest.raises(ValueError):
+        FederatedSession(ftopo, PlacementSpec(max_hops=[1, 2, 3]))
+
+
+def test_add_explicit_region_and_sequence_guard(ftopo, fpart):
+    """add(region=) pins the host region; sequence region_affinity is
+    refused on the churn path (it binds to batch rows)."""
+    spec = PlacementSpec(effort="quick", anneal_steps=100, defrag_every=0)
+    sess = FederatedSession(ftopo, spec)
+    svc = vsr.random_vsrs(1, rng=0, source_nodes=[_region_sources(fpart)[0]])
+    assert sess.add(svc, sid=0, region=2) is not None
+    assert sess.assignment(0) == 2
+    assert sess._plans[0].migrated    # homed in 0, hosted in 2
+    seq = PlacementSpec(effort="quick", region_affinity=[1, 2])
+    sess2 = FederatedSession(ftopo, seq)
+    with pytest.raises(ValueError, match="sequence region_affinity"):
+        sess2.add(vsr.random_vsrs(1, rng=1,
+                                  source_nodes=[_region_sources(fpart)[0]]))
+
+
+def test_scheduler_drives_federated_session(ftopo, fpart):
+    """EnergyAwareScheduler schedules inference services onto a federation
+    through the session= escape hatch: placements stay in each service's
+    home region and per-tenant watts report."""
+    from repro.serve.scheduler import EnergyAwareScheduler, Service
+    from repro.configs.h2o_danube_3_4b import CONFIG as ARCH
+    spec = PlacementSpec(effort="quick", anneal_steps=100, defrag_every=0)
+    sess = FederatedSession(ftopo, spec)
+    sched = EnergyAwareScheduler(ftopo, session=sess)
+    srcs = _region_sources(fpart)
+    sched.add_service(Service("svc-a", ARCH, tokens_per_s=5.0, n_stages=2,
+                              source_node=srcs[0]))
+    pls = sched.add_service(Service("svc-b", ARCH, tokens_per_s=5.0,
+                                    n_stages=2, source_node=srcs[1]))
+    assert [p.service for p in pls] == ["svc-a", "svc-b"]
+    for p, g in zip(pls, (0, 1)):
+        names = set(fpart.regions[g].topo.proc_names)
+        assert all(n in names for n in p.stage_nodes)
+    assert sched.total_power_w() > 0
+    sched.remove_service("svc-a")
+    assert [p.service for p in sched.placements()] == ["svc-b"]
+
+
+# ---------------------------------------------------------------------------
+# slow smoke: the default 4x16-node federation end to end
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_federated_scale_smoke():
+    """Default federated_scale (4 regions, P=64) batch solve + churn:
+    feasible, conserved, single-compile."""
+    topo = topology.federated_scale()
+    part = federation.RegionPartition.from_topology(topo)
+    assert topo.P == 64 and part.G == 4
+    srcs = _region_sources(part)
+    vs = vsr.random_vsrs(12, rng=0, source_nodes=srcs)
+    spec = PlacementSpec(effort="quick", anneal_steps=150)
+    sess = FederatedSession(topo, spec)
+    before = solvers.TRACE_COUNTS.get("solve_regions", 0)
+    res = sess.solve(vs)
+    assert solvers.TRACE_COUNTS.get("solve_regions", 0) == before + 1
+    assert res.breakdown.violation <= 1e-6
+    gap, oracle = _oracle_gap(topo, vs, res.X, res.breakdown.objective)
+    assert gap <= 1e-7 * max(1.0, abs(oracle))
+    # churn on top of the batch seed
+    extra = vsr.random_vsrs(1, rng=77, source_nodes=[srcs[2]])
+    assert sess.add(extra) is not None
+    sess.remove(3)
+    assert sess.n_live == 12
+    bd = sess.breakdown()
+    assert abs(bd.regional_w.sum() + bd.inter_region_w - bd.total_w) \
+        <= 1e-9 * max(1.0, bd.total_w)
