@@ -35,6 +35,7 @@ BENCH_ONLINE_JSON = Path("BENCH_online.json")
 BENCH_SPARSE_JSON = Path("BENCH_sparse.json")
 BENCH_QUALITY_JSON = Path("BENCH_quality.json")
 BENCH_FEDERATED_JSON = Path("BENCH_federated.json")
+BENCH_FAULT_JSON = Path("BENCH_fault.json")
 
 
 def _write(name: str, rows: List[Dict]) -> None:
@@ -602,6 +603,192 @@ def federated_solve(n_vsrs: int = 16, reps: int = 3,
         objective_ratio_fed_vs_flat=round(
             res.breakdown.objective / flat_res.objective, 4))
     BENCH_FEDERATED_JSON.write_text(json.dumps(out, indent=2) + "\n")
+    return out
+
+
+def fault_storm(n_services: int = 10, n_olt: int = 3, onus_per_olt: int = 3,
+                iot_per_onu: int = 3) -> Dict:
+    """Closed-loop failure storms: availability, recovery latency, watts.
+
+    Two storm presets (``single_node``, ``rack_storm``) replay against a
+    ``city_scale`` substrate carrying ``n_services`` live services, plus a
+    region-blackout evacuation on ``federated_scale``.  Per storm:
+
+      * availability -- 1 - stranded-service-seconds / (horizon * services),
+        measured on the timeline clock through the PlacementMonitor
+        strand/unstrand windows;
+      * recovery latency -- events from the first failure until every
+        admitted service is live again (queue drained);
+      * watts overhead -- peak degraded watts per live service vs the
+        healthy baseline (the price of packing the survivors onto less
+        substrate);
+      * conservation -- |f64 oracle - engine objective| on the DEGRADED
+        problem at maximum degradation (failed elements zeroed, same
+        shapes);
+      * compile stability -- a first storm warms the masked solver
+        variants; the measured storm must replay with ZERO fresh traces
+        (fail/recover events are value-only, never shape-changing).
+
+    Writes BENCH_fault.json.
+    """
+    from repro.api import CFNSession, FederatedSession, PlacementSpec
+    from repro.fault.monitor import PlacementMonitor
+    from repro.kernels import ref as kref
+
+    spec = PlacementSpec(effort="quick", defrag_every=0)
+
+    def run_storm(preset: str) -> Dict:
+        topo = topology.city_scale(n_olt=n_olt, onus_per_olt=onus_per_olt,
+                                   iot_per_onu=iot_per_onu)
+        iot = topo.layer_indices("iot")
+        svcs = [vsr.random_vsrs(1, rng=np.random.default_rng(i), n_vms=3,
+                                source_nodes=iot[:max(4, len(iot) // 3)])
+                for i in range(n_services)]
+        # aim the storm at nodes that actually host VMs (a probe session;
+        # placement is deterministic, so the measured runs land the same
+        # way) -- failing idle substrate would measure nothing
+        probe = CFNSession(topo, spec)
+        for i, sv in enumerate(svcs):
+            probe.add(sv, sid=i)
+        srcs = {int(sv.src[0]) for sv in svcs}
+        cnt: Dict[int, int] = {}
+        Xp = np.asarray(probe.X)
+        for r in range(probe.n_live):
+            for x in Xp[r, :probe.engine._vsrs[r].V]:
+                if int(x) not in srcs:
+                    cnt[int(x)] = cnt.get(int(x), 0) + 1
+        hot = [n for n, _ in sorted(cnt.items(), key=lambda kv: -kv[1])]
+        if preset == "single_node":
+            events = dynamic.fault_preset(
+                preset, topo, node=hot[0] if hot else None)
+        else:
+            # three busy hosts plus one pinned source: the rack storm
+            # exercises both mass re-embedding AND stranding
+            nodes = hot[:3] + [int(svcs[0].src[0])]
+            events = dynamic.fault_preset(preset, topo, nodes=nodes)
+        horizon = max(e.t for e in events) + 1.0
+        last_fail = max(i for i, e in enumerate(events)
+                        if e.kind.startswith("fail"))
+
+        def one_run() -> Dict:
+            mon = PlacementMonitor()
+            s = CFNSession(topo, spec, monitor=mon)
+            for i, sv in enumerate(svcs):
+                s.add(sv, sid=i)
+            healthy_w = float(s.result.breakdown.total)
+            first_fail = last_degraded = None
+            peak = (healthy_w, n_services)
+            gap = 0.0
+            for i, ev in enumerate(events):
+                s.tick(ev.t)
+                s.apply_fault(ev)
+                if first_fail is None and ev.kind.startswith("fail"):
+                    first_fail = i
+                queued = len(s.engine._queue)
+                if first_fail is not None and (s.n_live < n_services
+                                               or queued):
+                    last_degraded = i
+                if s.result is not None:
+                    w = float(s.result.breakdown.total)
+                    if w / max(s.n_live, 1) > peak[0] / max(peak[1], 1):
+                        peak = (w, s.n_live)
+                if i == last_fail and s.result is not None:
+                    # f64 conservation on the degraded substrate
+                    vs = s.engine._vsrs[0]
+                    for b in s.engine._vsrs[1:]:
+                        vs = vs.concat(b)
+                    prob = s.health.degrade(power.build_problem(topo, vs))
+                    X = np.asarray(s.X)[:vs.R, :vs.V]
+                    oracle = kref.placement_objective_f64(prob, X)
+                    gap = abs(oracle - s.objective())
+            mon.close_strands(horizon)
+            return dict(
+                availability=mon.availability(horizon, n_services),
+                stranded_service_s=round(mon.stranded_service_s, 3),
+                n_stranded=mon.get("service_stranded"),
+                n_re_embedded=mon.get("re_embedded"),
+                recovery_latency_events=(
+                    None if first_fail is None else
+                    0 if last_degraded is None else
+                    last_degraded + 1 - first_fail),
+                healthy_w=round(healthy_w, 2),
+                degraded_peak_w=round(peak[0], 2),
+                overhead_per_live_service=round(
+                    (peak[0] / max(peak[1], 1))
+                    / (healthy_w / n_services) - 1.0, 4),
+                conservation_gap_degraded=gap)
+
+        one_run()                                  # warm the masked variants
+        before = dict(solvers.TRACE_COUNTS)
+        out = one_run()                            # measured storm
+        fresh = sum(solvers.TRACE_COUNTS.get(k, 0) - before.get(k, 0)
+                    for k in solvers.TRACE_COUNTS)
+        out["fresh_compiles_measured_run"] = fresh
+        out["n_events"] = len(events)
+        return out
+
+    def run_evacuation() -> Dict:
+        ftopo = topology.federated_scale(n_regions=3, n_olt=2,
+                                         onus_per_olt=2, iot_per_onu=2,
+                                         n_core=6)
+        mon = PlacementMonitor()
+        fed = FederatedSession(ftopo, spec, monitor=mon)
+        srcs = [int(r.proc_ids[0]) for r in fed.partition.regions]
+        sid = 0
+        for g in range(3):
+            for j in range(2):
+                fed.add(vsr.random_vsrs(1,
+                                        rng=np.random.default_rng(10 * g + j),
+                                        n_vms=3, source_nodes=[srcs[g]]),
+                        sid=sid)
+                sid += 1
+        # cross-host two region-0 services into region 1: the blackout
+        # must EVACUATE them, not just strand the locals
+        for j in range(2):
+            fed.add(vsr.random_vsrs(1, rng=np.random.default_rng(100 + j),
+                                    n_vms=3, source_nodes=[srcs[0]]),
+                    sid=sid, region=1)
+            sid += 1
+        healthy_w = sum(float(w) for w in fed.breakdown().regional_w)
+        fed.tick(1.0)
+        n_evac = fed.fail_region(1)
+        bd = fed.breakdown()
+        vs = fed._plans[fed._order[0]].vsr
+        for s2 in fed._order[1:]:
+            vs = vs.concat(fed._plans[s2].vsr)
+        oracle = kref.placement_objective_f64(
+            power.build_problem(ftopo, vs),
+            np.asarray(fed.X)[:vs.R, :vs.V])
+        gap = abs(oracle - bd.objective)
+        fed.tick(3.0)
+        n_back = fed.recover_region(1)
+        mon.close_strands(4.0)
+        return dict(
+            n_services=sid, n_evacuated=n_evac,
+            n_stranded=mon.get("service_stranded"),
+            n_readmitted=n_back,
+            availability=mon.availability(4.0, sid),
+            stranded_service_s=round(mon.stranded_service_s, 3),
+            healthy_fleet_w=round(healthy_w, 2),
+            degraded_fleet_w=round(
+                sum(float(w) for w in bd.regional_w), 2),
+            dark_region_w=round(float(bd.regional_w[1]), 3),
+            conservation_gap_degraded=gap)
+
+    out = dict(
+        scenario=dict(topology="city_scale", n_olt=n_olt,
+                      onus_per_olt=onus_per_olt, iot_per_onu=iot_per_onu,
+                      n_services=n_services, effort=spec.effort,
+                      backend=jax.default_backend(),
+                      note=("storms replay fault_preset timelines against "
+                            "a live online engine; the federated run "
+                            "blacks out one region of a 3-region "
+                            "federated_scale and measures evacuation + "
+                            "exact conservation on the survivors")),
+        storms={name: run_storm(name)
+                for name in ("single_node", "rack_storm")},
+        federated=run_evacuation())
+    BENCH_FAULT_JSON.write_text(json.dumps(out, indent=2) + "\n")
     return out
 
 

@@ -125,6 +125,29 @@ def run_federated():
           f"-> BENCH_federated.json")
 
 
+def run_fault():
+    out = kernel_bench.fault_storm()
+    for name, s in out["storms"].items():
+        lat = s["recovery_latency_events"]
+        print(f"fault-storm: {name:12s} availability={s['availability']:.4f} "
+              f"stranded={s['stranded_service_s']:.1f}svc-h "
+              f"recovery={'n/a' if lat is None else lat}ev "
+              f"watts {s['healthy_w']:.1f}->{s['degraded_peak_w']:.1f}W "
+              f"(overhead/live {s['overhead_per_live_service']:+.2%})")
+        print(f"fault-storm: {name:12s} "
+              f"conservation_gap={s['conservation_gap_degraded']:.2e} "
+              f"fresh_compiles={s['fresh_compiles_measured_run']}")
+    f = out["federated"]
+    print(f"fault-storm: region-evac evacuated={f['n_evacuated']} "
+          f"stranded={f['n_stranded']} readmitted={f['n_readmitted']} "
+          f"availability={f['availability']:.4f} "
+          f"dark_region={f['dark_region_w']}W")
+    print(f"fault-storm: region-evac fleet "
+          f"{f['healthy_fleet_w']:.1f}->{f['degraded_fleet_w']:.1f}W "
+          f"conservation_gap={f['conservation_gap_degraded']:.2e} "
+          f"-> BENCH_fault.json")
+
+
 def run_flash():
     rows = kernel_bench.flash_cases()
     for r in rows:
@@ -146,7 +169,7 @@ def run_roofline():
 BENCHES = dict(fig3=run_fig3, fig4=run_fig4, gap=run_gap,
                placement=run_placement, solver=run_solver,
                sparse=run_sparse, online=run_online, quality=run_quality,
-               federated=run_federated, flash=run_flash,
+               federated=run_federated, fault=run_fault, flash=run_flash,
                roofline=run_roofline)
 
 

@@ -9,7 +9,8 @@ federated) consumes.  See those modules for the full story;
 ``examples/federated_regions.py`` are the walkthroughs.
 """
 from .core.api import (CFNSession, FederatedSession, PlacementSpec,
-                       RegionPartition, SolveResult, solve_portfolio)
+                       RegionPartition, SolveResult, SubstrateHealth,
+                       solve_portfolio)
 from .core.api import __all__ as _core_all
 
 __all__ = list(_core_all)

@@ -47,12 +47,12 @@ import numpy as np
 
 from . import dynamic, embed as embed_mod, vsr as vsr_mod
 from .embed import METHODS
-from .power import PlacementProblem
+from .power import PlacementProblem, SubstrateHealth
 from .solvers import SolveResult, solve_portfolio
 from .topology import CFNTopology
 
 __all__ = ["PlacementSpec", "CFNSession", "SolveResult", "solve_portfolio",
-           "FederatedSession", "RegionPartition"]
+           "FederatedSession", "RegionPartition", "SubstrateHealth"]
 
 _EFFORTS = ("quick", "standard", "high")
 _BACKENDS = ("auto", "delta", "fused", "full")
@@ -70,6 +70,13 @@ class PlacementSpec:
         unconstrained).  ``None`` disables.
       * ``eligible`` -- explicit [R, P] bool mask ANDed on top of the hop
         mask (rows beyond its length are unconstrained).
+      * ``health`` -- ``power.SubstrateHealth`` up/down state of the
+        physical substrate (fault plane).  Dead nodes and nodes behind dead
+        network elements are ANDed out of the mask for EVERY row, and the
+        online engine additionally zeroes dead capacities on the problem
+        (``health.degrade``).  Column-wise and shape-preserving, so it
+        composes with churn: unlike row-positional constraints it never
+        binds to batch rows.
 
     Row-positional forms (sequence ``max_hops``, explicit ``eligible``)
     bind to BATCH rows and are rejected by the churn path (``add`` /
@@ -122,6 +129,8 @@ class PlacementSpec:
     # constraints --------------------------------------------------------
     max_hops: Optional[Union[int, Sequence[int], np.ndarray]] = None
     eligible: Optional[np.ndarray] = None
+    # substrate health (fault plane; see power.SubstrateHealth) -----------
+    health: Optional[SubstrateHealth] = None
     # federation (core.federation.FederatedSession; ignored by flat paths) -
     region_affinity: Optional[Union[int, Sequence[int], np.ndarray]] = None
     region_anti_affinity: Optional[Union[int, Sequence[int],
@@ -181,10 +190,13 @@ class PlacementSpec:
         backends, the portfolio defrag, incremental re-solves) sees the
         identical constraint set.
         """
-        if self.max_hops is None and self.eligible is None:
+        h_active = self.health is not None and not self.health.all_up
+        if self.max_hops is None and self.eligible is None and not h_active:
             return None
         R, P = problem.R, problem.P
         el = np.ones((R, P), dtype=bool)
+        if h_active:
+            el &= self.health.eligibility(problem)
         if self.max_hops is not None:
             hops = (np.asarray(problem.route_idx) < problem.N).sum(axis=-1)
             fixed_mask = np.asarray(problem.fixed_mask)
@@ -205,7 +217,7 @@ class PlacementSpec:
         return el
 
     # -- pytree protocol --------------------------------------------------
-    _LEAF_FIELDS = ("max_hops", "eligible", "region_affinity",
+    _LEAF_FIELDS = ("max_hops", "eligible", "health", "region_affinity",
                     "region_anti_affinity", "region_power_budget_w")
 
     def tree_flatten(self):
@@ -351,6 +363,43 @@ class CFNSession:
         radius.  Keeps the live placement when the portfolio can't beat
         it."""
         return self._engine.defrag()
+
+    # -- fault plane ------------------------------------------------------
+    @property
+    def health(self) -> Optional[SubstrateHealth]:
+        return self._engine.spec.health
+
+    def tick(self, t: float) -> None:
+        """Advance the session clock (availability timestamps)."""
+        self._engine.tick(t)
+
+    def fail_node(self, node: int) -> Optional[SolveResult]:
+        """Fail a processing node: strand services sourced there, mass
+        re-embed displaced VMs on the degraded substrate."""
+        return self._engine.fail_node(node)
+
+    def recover_node(self, node: int) -> Optional[SolveResult]:
+        return self._engine.recover_node(node)
+
+    def fail_link(self, n: int) -> Optional[SolveResult]:
+        """Fail a network element: traffic routed across it is re-embedded
+        around the cut."""
+        return self._engine.fail_link(n)
+
+    def recover_link(self, n: int) -> Optional[SolveResult]:
+        return self._engine.recover_link(n)
+
+    def brownout(self, budget_w: float) -> None:
+        """Tighten the admission power budget mid-run (restore with
+        ``brownout_end``)."""
+        self._engine.brownout(budget_w)
+
+    def brownout_end(self) -> None:
+        self._engine.brownout_end()
+
+    def apply_fault(self, ev: "dynamic.FaultEvent"):
+        """Dispatch one ``core.dynamic.FaultEvent`` to the handlers above."""
+        return self._engine.apply_fault(ev)
 
     def attribute(self) -> Dict[int, float]:
         """Per-tenant watts {sid: W}, summing exactly to the fleet total."""

@@ -163,6 +163,113 @@ SCENARIOS: Dict[str, ChurnScenario] = {
 
 
 # ---------------------------------------------------------------------------
+# Fault timelines: substrate failures composable with service churn
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """One substrate fault at hour ``t``.
+
+    Kinds on flat engines: ``fail_node`` / ``recover_node`` (``target`` =
+    processing-node id), ``fail_link`` / ``recover_link`` (``target`` =
+    network-element id), ``brownout`` / ``brownout_end`` (``value`` = the
+    tightened fleet admission budget in watts).  Federated sessions take
+    region granularity instead: ``fail_region`` / ``recover_region``
+    (``target`` = region index) and ``brownout`` / ``brownout_end`` with
+    ``target`` = the region whose power budget tightens to ``value``.
+    """
+    t: float
+    kind: str
+    target: int = -1
+    value: Optional[float] = None
+
+
+# Tie-break order at equal t: departures free capacity first, failures land
+# before recoveries (a same-instant fail/recover pair nets to a clean
+# recover), and arrivals admit last, onto the settled substrate.
+_EVENT_ORDER = {"depart": 0,
+                "fail_node": 1, "fail_link": 1, "fail_region": 1,
+                "brownout": 1,
+                "recover_node": 2, "recover_link": 2, "recover_region": 2,
+                "brownout_end": 2,
+                "arrive": 3}
+
+
+def merge_timelines(*streams) -> List:
+    """Merge churn (``ServiceEvent``) and fault (``FaultEvent``) streams
+    into one time-sorted list, stable within the tie-break order above;
+    feed the result to ``replay``."""
+    events = [e for s in streams for e in s]
+    events.sort(key=lambda e: (e.t, _EVENT_ORDER.get(e.kind, 9)))
+    return events
+
+
+def _storm_nodes(topo: CFNTopology, n: int) -> List[int]:
+    """The first ``n`` fog-tier nodes to fail in a storm preset: mini-fog
+    servers first (the tier the paper calls "limited ... and highly
+    distributed"), then access fog, then anything non-source."""
+    pool: List[int] = []
+    for layer in ("mf", "af", "cdc"):
+        pool += [p for p in topo.layer_indices(layer) if p not in pool]
+    if len(pool) < n:
+        pool += [p for p in range(topo.P) if p not in pool]
+    return pool[:n]
+
+
+def single_node(topo: CFNTopology, node: Optional[int] = None,
+                t_fail: float = 20.0, outage_h: float = 2.0
+                ) -> List[FaultEvent]:
+    """One fog node dies at the diurnal peak and recovers ``outage_h``
+    later."""
+    if node is None:
+        node = _storm_nodes(topo, 1)[0]
+    return [FaultEvent(t_fail, "fail_node", node),
+            FaultEvent(t_fail + outage_h, "recover_node", node)]
+
+
+def rack_storm(topo: CFNTopology, nodes: Optional[Sequence[int]] = None,
+               n_nodes: int = 4, t_fail: float = 20.0,
+               stagger_h: float = 0.05, outage_h: float = 1.0
+               ) -> List[FaultEvent]:
+    """A cascading rack outage: ``n_nodes`` fog nodes fail in quick
+    succession (``stagger_h`` apart) and recover in the same order after
+    ``outage_h``."""
+    if nodes is None:
+        nodes = _storm_nodes(topo, n_nodes)
+    ev: List[FaultEvent] = []
+    for k, p in enumerate(nodes):
+        ev.append(FaultEvent(t_fail + k * stagger_h, "fail_node", int(p)))
+        ev.append(FaultEvent(t_fail + outage_h + k * stagger_h,
+                             "recover_node", int(p)))
+    return merge_timelines(ev)
+
+
+def brownout_day(topo: CFNTopology, region: int = 0,
+                 budget_w: float = 500.0, t0: float = 10.0,
+                 t1: float = 16.0) -> List[FaultEvent]:
+    """A mid-day brownout: the power budget tightens to ``budget_w`` over
+    ``[t0, t1)`` (region-targeted on a FederatedSession; a flat engine
+    applies it fleet-wide)."""
+    return [FaultEvent(t0, "brownout", region, value=budget_w),
+            FaultEvent(t1, "brownout_end", region)]
+
+
+FAULT_SCENARIOS: Dict[str, Callable] = {
+    "single_node": single_node,
+    "rack_storm": rack_storm,
+    "brownout_day": brownout_day,
+}
+
+
+def fault_preset(name: str, topo: CFNTopology, **kw) -> List[FaultEvent]:
+    """Build a named storm preset on a topology (see FAULT_SCENARIOS)."""
+    if name not in FAULT_SCENARIOS:
+        raise ValueError(f"unknown fault preset {name!r}; choose from "
+                         f"{sorted(FAULT_SCENARIOS)}")
+    return FAULT_SCENARIOS[name](topo, **kw)
+
+
+# ---------------------------------------------------------------------------
 # The online embedding engine
 # ---------------------------------------------------------------------------
 
@@ -279,6 +386,10 @@ class OnlineEmbedder:
         self._result: Optional[solvers.SolveResult] = None
         self._events_since_defrag = 0
         self.stats: List[OnlineStats] = []
+        # fault plane: engine clock (hours; availability timestamps) and the
+        # pre-brownout admission budget to restore on brownout_end
+        self._now = 0.0
+        self._brownout_saved: Optional[tuple] = None
 
     # -- legacy attribute aliases (read/write through the spec) -----------
     def _spec_alias(name):  # noqa: N805 -- descriptor factory, not a method
@@ -343,6 +454,8 @@ class OnlineEmbedder:
         other._result = self._result
         other._events_since_defrag = self._events_since_defrag
         other.stats = list(self.stats)
+        other._now = self._now
+        other._brownout_saved = self._brownout_saved
         return other
 
     def objective(self) -> float:
@@ -390,6 +503,11 @@ class OnlineEmbedder:
                                             substrate=self._substrate,
                                             pad_to_rows=self._pad_rows(),
                                             pad_to_cols=self._pad_cols())
+        h = self.spec.health
+        if h is not None and not h.all_up:
+            # value-only substitution: dead capacities zero, same shapes,
+            # so jitted solver kernels stay on their compile buckets
+            self._problem = h.degrade(self._problem)
 
     def _resolve_kw(self, base: dict) -> dict:
         """Per-event solver kwargs: bucket-stable sweep padding."""
@@ -559,6 +677,21 @@ class OnlineEmbedder:
         if sid in self._sids:
             raise ValueError(f"sid {sid} is already live")
         self._next_sid = max(self._next_sid, sid + 1)
+        h = self.spec.health
+        if h is not None and not bool(h.node_up[int(service.src[0])]):
+            # the service's pinned source node is down: a fault is not an
+            # SLA rejection, so the arrival is always parked (regardless of
+            # queue_rejected) and retried on recovery
+            self._queue.append((service, sid))
+            if not _retry:
+                self.admission["queued"] += 1
+                if self.monitor is not None:
+                    self.monitor.strand(sid, self._now,
+                                        detail=f"sid={sid} source down")
+            self.stats.append(OnlineStats(
+                event="strand", method="fault", objective=self.objective(),
+                power_w=self.power_w(), n_live=self.n_live))
+            return None
         prev = (self._vsrs[:], self._sids[:],
                 self._batch_cache, self._problem, self._X, self._state,
                 self._result, self._events_since_defrag)
@@ -613,6 +746,10 @@ class OnlineEmbedder:
                 power_w=res.power, n_live=self.n_live))
             return None
         self.admission["admitted"] += 1
+        if self.monitor is not None:
+            # closes the availability window if this sid was stranded by a
+            # fault (no-op otherwise)
+            self.monitor.unstrand(sid, self._now)
         if self._defrag_due():
             return self._full_solve("add", incumbent=res)
         self._commit(res, "add")
@@ -673,7 +810,12 @@ class OnlineEmbedder:
         """Drop a parked arrival (its lifetime ended while queued)."""
         n0 = len(self._queue)
         self._queue = [(s, q) for (s, q) in self._queue if q != sid]
-        return len(self._queue) < n0
+        removed = len(self._queue) < n0
+        if removed and self.monitor is not None:
+            # a stranded service departing from the queue closes its
+            # availability window without counting as re-embedded
+            self.monitor.unstrand(sid, self._now, re_embedded=False)
+        return removed
 
     def defrag(self) -> Optional[solvers.SolveResult]:
         """Force a full-portfolio re-pack of the current service set (keeps
@@ -686,6 +828,199 @@ class OnlineEmbedder:
         return (self.defrag_every > 0
                 and self._events_since_defrag >= self.defrag_every)
 
+    # -- fault plane ------------------------------------------------------
+    def tick(self, t: float) -> None:
+        """Advance the engine clock (hours).  Strand / unstrand timestamps
+        -- the availability integral -- come from this clock."""
+        self._now = float(t)
+
+    def _health(self) -> "power.SubstrateHealth":
+        h = self.spec.health
+        return power.SubstrateHealth.fresh(self.topo) if h is None else h
+
+    def _fault_rows(self) -> Tuple[List[int], List[int]]:
+        """(stranded, moved) row indices for the live placement under the
+        just-updated ``spec.health``: stranded rows lost their pinned
+        source -- or every admissible node -- and are parked; moved rows
+        have VMs on dead nodes or traffic routed over dead elements and
+        get mass re-embedded."""
+        h = self.spec.health
+        el = self.spec.masks(self._problem)
+        pair_ok = h.pair_alive(self._problem)
+        all_links = bool(h.link_up.all())
+        X = self._X
+        stranded: List[int] = []
+        moved: List[int] = []
+        for r in range(self.n_live):
+            svc = self._vsrs[r]
+            if not bool(h.node_up[int(svc.src[0])]):
+                stranded.append(r)
+                continue
+            nodes = X[r, :svc.V]
+            hit = bool((~h.node_up[nodes]).any())
+            if not hit and not all_links:
+                H = np.asarray(svc.H)[0]
+                uu, vv = np.nonzero(H > 0)
+                if uu.size:
+                    hit = bool((~pair_ok[nodes[uu], nodes[vv]]).any())
+            if not hit:
+                continue
+            if el is not None and not bool(el[r].any()):
+                # nowhere admissible left: the solvers' best-effort
+                # all-True fallback must never see this row
+                stranded.append(r)
+            else:
+                moved.append(r)
+        return stranded, moved
+
+    def _apply_fault_impl(self, event: str) -> Optional[solvers.SolveResult]:
+        """Shared fail/recover re-embedding: strand rows that lost their
+        source (parked in the retry queue -- never silently dropped), mass
+        re-embed displaced rows through ``warm_state`` +
+        ``resolve_incremental`` on the degraded problem."""
+        if self._X is None:
+            return None  # nothing placed; _rebuild_problem degrades later
+        recovery = event.startswith("recover")
+        stranded, moved = ([], []) if recovery else self._fault_rows()
+        state = self._state
+        prev_X = self._X
+        n0 = self.n_live
+        if stranded:
+            state = power.detach_vsrs(self._problem, state, stranded)
+            for r in sorted(stranded, reverse=True):
+                svc, sid = self._vsrs[r], self._sids[r]
+                self._queue.append((svc, sid))
+                if self.monitor is not None:
+                    self.monitor.strand(sid, self._now,
+                                        detail=f"sid={sid} {event}")
+                del self._vsrs[r]
+                del self._sids[r]
+                self._drop_row(r)
+        if not self._vsrs:
+            self._problem = self._X = self._state = self._result = None
+            self._batch_cache = None
+            self.stats.append(OnlineStats(event, "empty", 0.0, 0.0, 0))
+            return None
+        dead = set(stranded)
+        surv = [i for i in range(n0) if i not in dead]
+        moved_new = [surv.index(r) for r in moved]
+        self._rebuild_problem()
+        self._events_since_defrag += 1
+        row_map = surv + [-1] * (self._problem.R - len(surv))
+        st = power.warm_state(
+            self._problem, prev_X,
+            prev_loads=(state.omega, state.tm, state.theta, state.lam),
+            row_map=row_map)
+        if not recovery and not moved_new and not stranded:
+            # the dead element hosted nothing: re-score the same placement
+            # on the degraded problem, no solver work
+            res = solvers._result(self._problem, st.X, "untouched")
+            self._commit(res, event)
+            return res
+        kw = self._add_kw if moved_new else self._remove_kw
+        res = solvers.resolve_incremental(
+            self._problem, np.asarray(st.X), key=self._split_key(),
+            changed_rows=moved_new, state=st, spec=self.spec,
+            **self._resolve_kw(kw))
+        if self._defrag_due():
+            res = self._full_solve(event, incumbent=res)
+        else:
+            self._commit(res, event)
+        if moved_new and self.monitor is not None:
+            self.monitor.count("re_embedded", n=len(moved_new),
+                               detail=f"{event}: {len(moved_new)} displaced")
+        return res
+
+    def fail_node(self, node: int) -> Optional[solvers.SolveResult]:
+        """Fail a processing node: services sourced there are stranded
+        (queued for recovery), services with VMs there are mass
+        re-embedded on the degraded substrate."""
+        self._check_churn_constraints("fail_node")
+        h = self._health()
+        if not bool(h.node_up[node]):
+            return None
+        self.spec = self.spec.replace(health=h.fail_node(node))
+        if self.monitor is not None:
+            self.monitor.count("node_failed", detail=f"node={node}")
+        return self._apply_fault_impl("fail_node")
+
+    def recover_node(self, node: int) -> Optional[solvers.SolveResult]:
+        """Recover a node: survivors re-settle onto the restored capacity
+        and stranded / parked services retry admission."""
+        self._check_churn_constraints("recover_node")
+        h = self._health()
+        if bool(h.node_up[node]):
+            return None
+        self.spec = self.spec.replace(health=h.recover_node(node))
+        if self.monitor is not None:
+            self.monitor.count("node_recovered", detail=f"node={node}")
+        res = self._apply_fault_impl("recover_node")
+        self._drain_queue()
+        return res
+
+    def fail_link(self, n: int) -> Optional[solvers.SolveResult]:
+        """Fail a network element: traffic routed across it is re-embedded
+        around the cut (zero C_net penalizes any load left there)."""
+        self._check_churn_constraints("fail_link")
+        h = self._health()
+        if not bool(h.link_up[n]):
+            return None
+        self.spec = self.spec.replace(health=h.fail_link(n))
+        if self.monitor is not None:
+            self.monitor.count("link_failed", detail=f"link={n}")
+        return self._apply_fault_impl("fail_link")
+
+    def recover_link(self, n: int) -> Optional[solvers.SolveResult]:
+        self._check_churn_constraints("recover_link")
+        h = self._health()
+        if bool(h.link_up[n]):
+            return None
+        self.spec = self.spec.replace(health=h.recover_link(n))
+        if self.monitor is not None:
+            self.monitor.count("link_recovered", detail=f"link={n}")
+        res = self._apply_fault_impl("recover_link")
+        self._drain_queue()
+        return res
+
+    def brownout(self, budget_w: Optional[float]) -> None:
+        """Tighten the fleet admission power budget mid-run (arrivals
+        beyond it reject/queue through the existing admission path);
+        ``brownout_end`` restores the previous budget."""
+        if self._brownout_saved is None:
+            self._brownout_saved = (self.spec.power_budget_w,)
+        self.spec = self.spec.replace(power_budget_w=budget_w)
+        if self.monitor is not None:
+            self.monitor.count("brownout", detail=f"budget_w={budget_w}")
+
+    def brownout_end(self) -> None:
+        if self._brownout_saved is None:
+            return
+        (prev_budget,) = self._brownout_saved
+        self._brownout_saved = None
+        self.spec = self.spec.replace(power_budget_w=prev_budget)
+        if self.monitor is not None:
+            self.monitor.count("brownout_end",
+                               detail=f"budget_w={prev_budget}")
+        self._drain_queue()
+
+    def apply_fault(self, ev: FaultEvent):
+        """Dispatch one ``FaultEvent`` to the handlers above (region kinds
+        belong to ``FederatedSession``; a flat engine rejects them)."""
+        if ev.kind == "fail_node":
+            return self.fail_node(int(ev.target))
+        if ev.kind == "recover_node":
+            return self.recover_node(int(ev.target))
+        if ev.kind == "fail_link":
+            return self.fail_link(int(ev.target))
+        if ev.kind == "recover_link":
+            return self.recover_link(int(ev.target))
+        if ev.kind == "brownout":
+            return self.brownout(ev.value)
+        if ev.kind == "brownout_end":
+            return self.brownout_end()
+        raise ValueError(f"flat engine cannot apply fault kind {ev.kind!r} "
+                         "(region faults need a FederatedSession)")
+
 
 def replay(engine: OnlineEmbedder, events: Sequence[ServiceEvent],
            make_vsr: Callable[[int], vsr.VSRBatch],
@@ -695,16 +1030,36 @@ def replay(engine: OnlineEmbedder, events: Sequence[ServiceEvent],
     the engine (e.g. bootstrapped) nor admitted by this replay are skipped.
     ``on_event(event, result)`` observes each step (``result`` is None for
     an SLA-rejected arrival).  Admission counters accumulate in
-    ``engine.admission`` (admitted / rejected / queued)."""
+    ``engine.admission`` (admitted / rejected / queued).
+
+    The timeline may interleave ``FaultEvent``s (``merge_timelines``):
+    those dispatch through ``engine.apply_fault``, and the engine clock is
+    ticked to each event's time so strand/unstrand availability windows
+    are measured on the timeline's clock."""
     live = set(engine.sids)
     for ev in events:
+        tick = getattr(engine, "tick", None)
+        if tick is not None:
+            tick(ev.t)
+        if isinstance(ev, FaultEvent):
+            res = engine.apply_fault(ev)
+            # faults strand (sids leave the engine for the retry queue) and
+            # recoveries re-admit: re-sync the live set either way
+            live = set(engine.sids)
+            if on_event is not None:
+                on_event(ev, res)
+            continue
         if ev.kind == "arrive":
             res = engine.add(make_vsr(ev.sid), sid=ev.sid)
             if res is not None:
                 live.add(ev.sid)
         else:
             if ev.sid not in live:
+                # not live -- but it may be parked in the retry queue
+                # (stranded by a fault): a departure cancels the retry
                 engine.cancel_queued(ev.sid)
+                if on_event is not None:
+                    on_event(ev, None)
                 continue
             res = engine.remove(ev.sid)
             live.discard(ev.sid)

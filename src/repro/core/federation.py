@@ -524,6 +524,13 @@ class FederatedSession:
         self._engines: Dict[int, dynamic.OnlineEmbedder] = {}
         self._next_sid = 0
         self._last_result: Optional[FederatedResult] = None
+        # fault plane: down regions, brownout budget overrides, stranded
+        # services parked for retry-on-recovery, and the session clock
+        self._down: set = set()
+        self._budget_override: Dict[int, float] = {}
+        self._fqueue: List[Tuple[vsr_mod.VSRBatch, int]] = []
+        self._now = 0.0
+        self._region_monitors: Dict[int, object] = {}
         self._flat = None
         if partition.G == 1:
             self._flat = api_mod.CFNSession(self.topo, self.spec,
@@ -567,10 +574,40 @@ class FederatedSession:
         if g not in self._engines:
             self._engines[g] = dynamic.OnlineEmbedder(
                 self.partition.regions[g].topo, spec=self._local_spec(),
-                key=self._split_key(), monitor=self.monitor)
+                key=self._split_key(),
+                monitor=self._region_monitors.get(g, self.monitor))
+            self._engines[g].tick(self._now)
         return self._engines[g]
 
+    def attach_region_monitors(self, make=None) -> Dict[int, object]:
+        """Give every region engine its OWN ``PlacementMonitor`` (the
+        session-level monitor keeps receiving coordinator events);
+        ``fleet_monitor()`` rolls them all up.  ``make`` overrides the
+        monitor factory."""
+        from ..fault.monitor import PlacementMonitor
+        make = make or PlacementMonitor
+        for g in range(self.G):
+            self._region_monitors[g] = make()
+        for g, eng in self._engines.items():
+            eng.monitor = self._region_monitors[g]
+        if self._flat is not None:
+            self._flat.engine.monitor = self._region_monitors[0]
+        return dict(self._region_monitors)
+
+    def fleet_monitor(self):
+        """One merged fleet snapshot: the session monitor plus every
+        per-region monitor (``PlacementMonitor.merge`` semantics)."""
+        from ..fault.monitor import PlacementMonitor
+        fleet = PlacementMonitor()
+        if self.monitor is not None:
+            fleet.merge(self.monitor)
+        for g in sorted(self._region_monitors):
+            fleet.merge(self._region_monitors[g])
+        return fleet
+
     def _budget(self, g: int) -> Optional[float]:
+        if g in self._budget_override:
+            return self._budget_override[g]
         b = self.spec.region_power_budget_w
         if b is None:
             return None
@@ -596,7 +633,7 @@ class FederatedSession:
                        key=lambda g: (g != home,
                                       int(self.partition.core_hops[home, g])))
         for g in order:
-            if g == anti:
+            if g == anti or g in self._down:
                 continue
             if (g != home and cap is not None
                     and int(self.partition.core_hops[home, g]) > cap):
@@ -953,6 +990,14 @@ class FederatedSession:
             raise ValueError(f"sid {sid} is already live")
         self._next_sid = max(self._next_sid, sid + 1)
         home = self.partition.home_region(int(service.src[0]))
+        if home in self._down:
+            # the source region is dark: its pinned input VM cannot run, so
+            # the arrival is parked (never dropped) and retried on recovery
+            self._fqueue.append((service, sid))
+            if self.monitor is not None:
+                self.monitor.strand(sid, self._now,
+                                    detail=f"sid={sid} home {home} down")
+            return None
         aff = self._row_constraint("region_affinity", 0)
         anti = self._row_constraint("region_anti_affinity", 0)
         if region is not None:
@@ -961,6 +1006,9 @@ class FederatedSession:
             targets = [aff]
         else:
             targets = self._allowed_regions(home, anti)
+        targets = [g for g in targets if g not in self._down]
+        if not targets:
+            return None
         cap = self.spec.inter_region_hops
         for g in targets:
             # pinned targets (region= / affinity) get the same hop-cap
@@ -1006,6 +1054,10 @@ class FederatedSession:
                 self.monitor.count(
                     "cross_region_migration",
                     detail=f"sid={sid} region {migrated_off} -> {g}")
+            if self.monitor is not None:
+                # closes the availability window of a service stranded by a
+                # region fault (no-op otherwise)
+                self.monitor.unstrand(sid, self._now)
             return res
         return None
 
@@ -1055,24 +1107,212 @@ class FederatedSession:
                 out[g] = eng.defrag()
         return out
 
+    # -- fault plane -------------------------------------------------------
+    def tick(self, t: float) -> None:
+        """Advance the federation clock (hours), propagated to every
+        region engine -- availability windows are timestamped from it."""
+        self._now = float(t)
+        if self._flat is not None:
+            self._flat.tick(t)
+        for eng in self._engines.values():
+            eng.tick(t)
+
+    @property
+    def down_regions(self) -> List[int]:
+        return sorted(self._down)
+
+    def fail_region(self, g: int) -> int:
+        """Fail a whole region: services HOMED there are stranded (their
+        pinned sources died with the region; parked for recovery), services
+        merely HOSTED there are evacuated to the coolest admissible region
+        through the ordinary admission path.  Returns the evacuation
+        count."""
+        if self._flat is not None:
+            raise ValueError("fail_region needs a multi-region federation; "
+                             "use engine-level fail_node on a flat session")
+        if g in self._down:
+            return 0
+        self._down.add(g)
+        if self.monitor is not None:
+            self.monitor.count("region_failed", detail=f"region={g}")
+        # strand first: sources in g are gone no matter where the body sits
+        for sid in [s for s in list(self._order)
+                    if self._plans[s].home == g]:
+            svc = self._plans[sid].vsr
+            self.remove(sid)
+            self._fqueue.append((svc, sid))
+            if self.monitor is not None:
+                self.monitor.strand(sid, self._now,
+                                    detail=f"sid={sid} region {g} failed")
+        # evacuate: bodies hosted in g whose homes survive re-admit through
+        # add() -- the same budget-breach migration path as any arrival,
+        # with g excluded via _allowed_regions
+        n_evac = 0
+        for sid in [s for s in list(self._order)
+                    if self._plans[s].assigned == g]:
+            svc = self._plans[sid].vsr
+            self.remove(sid)
+            res = self.add(svc, sid=sid)
+            if res is None:
+                self._park(svc, sid, f"sid={sid} evacuation refused")
+            else:
+                n_evac += 1
+                if self.monitor is not None:
+                    self.monitor.count(
+                        "evacuation",
+                        detail=f"sid={sid} region {g} -> "
+                               f"{self.assignment(sid)}")
+        return n_evac
+
+    def recover_region(self, g: int) -> int:
+        """Recover a region and retry every parked service (stranded by
+        failures, brownout sheds, or arrivals during the outage).  Returns
+        the number re-admitted."""
+        if self._flat is not None:
+            raise ValueError("recover_region needs a multi-region "
+                             "federation")
+        if g not in self._down:
+            return 0
+        self._down.discard(g)
+        if self.monitor is not None:
+            self.monitor.count("region_recovered", detail=f"region={g}")
+        return self._drain_fqueue()
+
+    def brownout_region(self, g: int, budget_w: float) -> int:
+        """Tighten region ``g``'s power budget mid-run and shed load until
+        the region is within it: heaviest movable services re-admit through
+        the ordinary budget-breach migration path (so each shed counts a
+        ``region_budget_breach`` + ``cross_region_migration``).  Returns
+        the number of services moved or parked."""
+        if self._flat is not None:
+            self._flat.brownout(budget_w)
+            return 0
+        self._budget_override[g] = float(budget_w)
+        if self.monitor is not None:
+            self.monitor.count("brownout",
+                               detail=f"region={g} budget_w={budget_w}")
+        moved = 0
+        prev_w = None
+        for _ in range(len(self._order)):
+            try:
+                bd = self.breakdown()
+            except ValueError:   # empty session
+                break
+            w = float(bd.regional_w[g])
+            if w <= budget_w:
+                break
+            if prev_w is not None and w >= prev_w - 1e-9:
+                # the last shed did not cool the region (stub compute and
+                # cut-link idle watts stay pinned home): stop best-effort
+                break
+            prev_w = w
+            movable = [s for s in self._order
+                       if self._plans[s].assigned == g
+                       and self._row_constraint("region_affinity", 0) < 0]
+            if not movable:
+                break
+            victim = max(movable,
+                         key=lambda s: float(np.sum(self._plans[s].vsr.F)))
+            svc = self._plans[victim].vsr
+            before = self.assignment(victim)
+            self.remove(victim)
+            res = self.add(svc, sid=victim)
+            if res is None:
+                self._park(svc, victim, f"sid={victim} brownout shed")
+                moved += 1
+                continue
+            if self.assignment(victim) == before:
+                break   # nowhere cooler admits it: best-effort stay
+            moved += 1
+        return moved
+
+    def brownout_end_region(self, g: int) -> None:
+        """Restore region ``g``'s configured budget and retry parked
+        services."""
+        if self._flat is not None:
+            self._flat.brownout_end()
+            return
+        if self._budget_override.pop(g, None) is None:
+            return
+        if self.monitor is not None:
+            self.monitor.count("brownout_end", detail=f"region={g}")
+        self._drain_fqueue()
+
+    def _park(self, service, sid: int, detail: str) -> None:
+        if all(q != sid for _, q in self._fqueue):
+            self._fqueue.append((service, sid))
+        if self.monitor is not None:
+            self.monitor.strand(sid, self._now, detail=detail)
+
+    def _drain_fqueue(self) -> int:
+        """Retry every parked service; still-unplaceable ones re-park
+        (never silently dropped)."""
+        queued, self._fqueue = self._fqueue, []
+        admitted = 0
+        for svc, sid in queued:
+            res = self.add(svc, sid=sid)   # re-parks itself if home is down
+            if res is not None:
+                admitted += 1
+            elif all(q != sid for _, q in self._fqueue):
+                self._fqueue.append((svc, sid))
+        return admitted
+
+    def cancel_queued(self, sid: int) -> bool:
+        """Drop a parked service (its lifetime ended while stranded)."""
+        n0 = len(self._fqueue)
+        self._fqueue = [(s, q) for (s, q) in self._fqueue if q != sid]
+        removed = len(self._fqueue) < n0
+        if removed and self.monitor is not None:
+            self.monitor.unstrand(sid, self._now, re_embedded=False)
+        return removed
+
+    def apply_fault(self, ev: dynamic.FaultEvent):
+        """Dispatch one ``FaultEvent`` at region granularity (node/link
+        kinds belong to flat engines; the federated substrate faults whole
+        regions)."""
+        if ev.kind == "fail_region":
+            return self.fail_region(int(ev.target))
+        if ev.kind == "recover_region":
+            return self.recover_region(int(ev.target))
+        if ev.kind == "brownout":
+            return self.brownout_region(int(ev.target), float(ev.value))
+        if ev.kind == "brownout_end":
+            return self.brownout_end_region(int(ev.target))
+        raise ValueError(
+            f"FederatedSession cannot apply fault kind {ev.kind!r}: "
+            "substrate faults are region-granular here (fail_region / "
+            "recover_region / brownout)")
+
     def replay(self, events: Sequence[dynamic.ServiceEvent], make_vsr,
                on_event=None) -> list:
         """Drive the federation through a churn timeline (region-aware
-        ``dynamic.replay`` semantics: unknown departures are skipped)."""
+        ``dynamic.replay`` semantics: unknown departures are skipped).
+        ``FaultEvent``s interleave via ``apply_fault``, with the clock
+        ticked to each event's time."""
         if self._flat:
             return self._flat.replay(events, make_vsr, on_event)
         live = set(self._order)
         stats = []
         for ev in events:
+            self.tick(ev.t)
+            if isinstance(ev, dynamic.FaultEvent):
+                res = self.apply_fault(ev)
+                live = set(self._order)
+                stats.append((ev, res))
+                if on_event is not None:
+                    on_event(ev, res)
+                continue
             if ev.kind == "arrive":
                 res = self.add(make_vsr(ev.sid), sid=ev.sid)
                 if res is not None:
                     live.add(ev.sid)
             else:
                 if ev.sid not in live:
+                    self.cancel_queued(ev.sid)
                     continue
                 res = self.remove(ev.sid)
                 live.discard(ev.sid)
+                live.update(self._order)   # recovery/queue re-admissions
             stats.append((ev, res))
             if on_event is not None:
                 on_event(ev, res)

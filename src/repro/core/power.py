@@ -43,7 +43,7 @@ Units: W, GFLOPS, Mbps (converted to Gbps where eps/EL are W per Gbps).
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Dict, NamedTuple, Optional, Sequence
 
 import jax
@@ -224,6 +224,118 @@ def build_problem(topo: CFNTopology, vsrs: VSRBatch,
 def apply_pins(problem: PlacementProblem, X: jnp.ndarray) -> jnp.ndarray:
     """Force pinned VMs (input VMs) onto their source nodes."""
     return jnp.where(problem.fixed_mask, problem.fixed_node, X)
+
+
+# ---------------------------------------------------------------------------
+# Substrate health: failures degrade capacities in place (no shape changes)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class SubstrateHealth:
+    """Up/down state of the physical substrate.
+
+    ``node_up`` [P] marks processing nodes, ``link_up`` [N] network
+    elements.  Failures never change tensor shapes -- the same bucketing
+    discipline as the row/column padding above: ``degrade`` returns a
+    same-shape ``PlacementProblem`` whose failed elements have zero
+    capacity (NS = 0 servers, C_lan = 0, C_net = 0), so any load left on a
+    dead element draws the capacity penalty, while a *drained* dead element
+    draws zero watts automatically because all idle terms are activity
+    gated.  ``C_pr`` / idle powers / routes are untouched, keeping
+    ``n_srv = ceil(omega / C_pr)`` well defined and jitted solver kernels
+    on their compile buckets across fail/recover events.
+
+    ``eligibility`` is the planning-side view: a [R, P] mask that removes
+    dead nodes -- and every node whose route from the row's source crosses
+    a dead network element -- from the solver move set
+    (``PlacementSpec.masks`` ANDs it with the hop/affinity masks).
+
+    Instances are immutable; the ``fail_*`` / ``recover_*`` methods return
+    updated copies.
+    """
+
+    node_up: np.ndarray   # [P] bool
+    link_up: np.ndarray   # [N] bool
+
+    @classmethod
+    def fresh(cls, topo: CFNTopology) -> "SubstrateHealth":
+        return cls(node_up=np.ones(topo.P, dtype=bool),
+                   link_up=np.ones(topo.N, dtype=bool))
+
+    @property
+    def all_up(self) -> bool:
+        return bool(self.node_up.all()) and bool(self.link_up.all())
+
+    def _set(self, field: str, idx: int, up: bool) -> "SubstrateHealth":
+        arr = np.array(getattr(self, field), dtype=bool)
+        arr[int(idx)] = up
+        return replace(self, **{field: arr})
+
+    def fail_node(self, p: int) -> "SubstrateHealth":
+        return self._set("node_up", p, False)
+
+    def recover_node(self, p: int) -> "SubstrateHealth":
+        return self._set("node_up", p, True)
+
+    def fail_link(self, n: int) -> "SubstrateHealth":
+        return self._set("link_up", n, False)
+
+    def recover_link(self, n: int) -> "SubstrateHealth":
+        return self._set("link_up", n, True)
+
+    def degrade(self, problem: PlacementProblem) -> PlacementProblem:
+        """Same-shape problem with dead elements' capacities zeroed."""
+        if self.all_up:
+            return problem
+        nu = jnp.asarray(self.node_up)
+        lu = jnp.asarray(self.link_up)
+        return replace(
+            problem,
+            NS=jnp.where(nu, problem.NS, 0.0),
+            C_lan=jnp.where(nu, problem.C_lan, 0.0),
+            C_net=jnp.where(lu, problem.C_net, 0.0))
+
+    def route_ok(self) -> np.ndarray:
+        """[P+1] link aliveness lookup with the sentinel slot alive, for
+        indexing ``route_idx`` (pad entries hold id N)."""
+        return np.concatenate([np.asarray(self.link_up, bool), [True]])
+
+    def pair_alive(self, problem: PlacementProblem) -> np.ndarray:
+        """[P, P] bool: route (a, b) traverses no dead network element."""
+        route = np.asarray(problem.route_idx)
+        return self.route_ok()[route].all(axis=-1)
+
+    def eligibility(self, problem: PlacementProblem) -> np.ndarray:
+        """[R, P] bool solver mask under the current health.
+
+        A node is eligible for row r iff it is up AND the route from r's
+        pinned source traverses only live network elements.  Rows whose
+        source node is itself dead keep their route mask (the engine
+        strands them before any solve); rows left with an empty mask must
+        likewise be stranded by the caller -- the solvers' best-effort
+        all-True fallback would otherwise quietly re-enable dead nodes.
+        """
+        if self.all_up:
+            return np.ones((problem.R, problem.P), dtype=bool)
+        fixed_mask = np.asarray(problem.fixed_mask)
+        fixed_node = np.asarray(problem.fixed_node)
+        rows = np.arange(problem.R)
+        src_of = fixed_node[rows, fixed_mask.argmax(axis=1)]         # [R]
+        el = self.pair_alive(problem)[src_of]                        # [R, P]
+        return el & np.asarray(self.node_up, bool)[None, :]
+
+    def tree_flatten(self):
+        return (self.node_up, self.link_up), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    SubstrateHealth,
+    lambda h: h.tree_flatten(),
+    SubstrateHealth.tree_unflatten)
 
 
 def _lam_from_tm(problem: PlacementProblem, tm: jnp.ndarray) -> jnp.ndarray:

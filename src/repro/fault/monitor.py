@@ -32,6 +32,15 @@ class HeartbeatMonitor:
     def register(self, worker: str) -> None:
         self.last_beat[worker] = self.clock()
 
+    def deregister(self, worker: str) -> None:
+        """Forget a worker that was evicted or restarted under a new name:
+        it stops re-alarming ``dead_workers`` forever."""
+        self.last_beat.pop(worker, None)
+
+    def reset(self) -> None:
+        """Forget every worker (fleet restart)."""
+        self.last_beat.clear()
+
     def beat(self, worker: str) -> None:
         self.last_beat[worker] = self.clock()
 
@@ -61,6 +70,30 @@ class PlacementMonitor:
       * ``cross_region_migration`` -- a service re-homed to another region
                                      after a breach (FederatedSession).
 
+    Fault-plane kinds (the closed loop; see core.dynamic FaultEvent):
+      * ``node_failed`` / ``node_recovered`` / ``link_failed`` /
+        ``link_recovered``        -- substrate state transitions
+                                     (OnlineEmbedder fail/recover handlers).
+      * ``region_failed`` / ``region_recovered`` -- federated region faults.
+      * ``service_stranded``      -- a service lost its placement (source
+                                     node died, or no admissible node
+                                     remains) and was parked for retry;
+                                     counted by ``strand``.
+      * ``re_embedded``           -- a displaced service was re-placed: mass
+                                     re-embeds after a fault, and stranded
+                                     services re-admitted on recovery
+                                     (``unstrand``).
+      * ``evacuation``            -- a service moved out of a failed or
+                                     browned-out region (FederatedSession).
+      * ``brownout`` / ``brownout_end`` -- a power budget tightened /
+                                     restored mid-run.
+
+    Availability: ``strand(sid, t)`` opens a window at time ``t`` and
+    ``unstrand(sid, t)`` closes it, accumulating into
+    ``stranded_service_s`` -- the stranded-service-seconds integral (units
+    follow the caller's clock; churn timelines tick in hours).
+    ``availability(horizon, n)`` normalizes it to a [0, 1] fraction.
+
     ``count`` is also open to new kinds; ``events`` keeps the last
     ``max_events`` (kind, detail) pairs for debugging.
     """
@@ -68,6 +101,8 @@ class PlacementMonitor:
     counters: Dict[str, int] = field(default_factory=dict)
     events: List[Tuple[str, Optional[str]]] = field(default_factory=list)
     max_events: int = 256
+    stranded_service_s: float = 0.0
+    stranded_since: Dict[int, float] = field(default_factory=dict)
 
     def count(self, kind: str, detail: Optional[str] = None,
               n: int = 1) -> None:
@@ -85,6 +120,71 @@ class PlacementMonitor:
     def snapshot(self) -> Dict[str, int]:
         return dict(self.counters)
 
+    # -- availability integral --------------------------------------------
+    def strand(self, sid: int, t: float = 0.0,
+               detail: Optional[str] = None) -> None:
+        """Open a stranded window for ``sid`` at time ``t`` (idempotent
+        while the window is open)."""
+        if sid in self.stranded_since:
+            return
+        self.stranded_since[sid] = float(t)
+        self.count("service_stranded", detail or f"sid={sid}")
+
+    def unstrand(self, sid: int, t: float = 0.0,
+                 re_embedded: bool = True) -> bool:
+        """Close ``sid``'s stranded window at ``t``, accumulating the
+        elapsed span into ``stranded_service_s``.  ``re_embedded=False``
+        marks a window closed by departure rather than re-placement.
+        No-op (returns False) when no window is open."""
+        t0 = self.stranded_since.pop(sid, None)
+        if t0 is None:
+            return False
+        self.stranded_service_s += max(0.0, float(t) - t0)
+        if re_embedded:
+            self.count("re_embedded", f"sid={sid}")
+        return True
+
+    def close_strands(self, t: float) -> int:
+        """End-of-horizon flush: close every open window at ``t`` (without
+        counting re-embeds) so the integral covers the full run."""
+        open_sids = list(self.stranded_since)
+        for sid in open_sids:
+            self.unstrand(sid, t, re_embedded=False)
+        return len(open_sids)
+
+    def availability(self, horizon: float, n_services: int) -> float:
+        """1 - stranded time / (horizon * services): the fraction of
+        service-time NOT spent stranded.  Flush open windows with
+        ``close_strands`` first for an end-of-run reading."""
+        denom = float(horizon) * max(int(n_services), 1)
+        if denom <= 0.0:
+            return 1.0
+        return 1.0 - min(self.stranded_service_s / denom, 1.0)
+
+    # -- fleet roll-up -----------------------------------------------------
+    def reset(self) -> None:
+        """Zero all counters, events, and availability state."""
+        self.counters.clear()
+        self.events.clear()
+        self.stranded_service_s = 0.0
+        self.stranded_since.clear()
+
+    def merge(self, other: "PlacementMonitor") -> "PlacementMonitor":
+        """Fold ``other`` into this monitor (per-region monitors roll up
+        into one fleet snapshot): counters add, event logs concatenate in
+        order and keep this monitor's ``max_events`` ring bound, stranded
+        integrals add, and open windows keep the earliest start."""
+        for kind, n in other.counters.items():
+            self.counters[kind] = self.counters.get(kind, 0) + n
+        self.events.extend(other.events)
+        if len(self.events) > self.max_events:
+            del self.events[:len(self.events) - self.max_events]
+        self.stranded_service_s += other.stranded_service_s
+        for sid, t0 in other.stranded_since.items():
+            self.stranded_since[sid] = min(
+                t0, self.stranded_since.get(sid, t0))
+        return self
+
 
 @dataclass
 class StragglerTracker:
@@ -94,6 +194,12 @@ class StragglerTracker:
     window: int = 32
     times: List[float] = field(default_factory=list)
     flagged_steps: List[int] = field(default_factory=list)
+
+    def reset(self) -> None:
+        """Drop the step-time history (restart): pre-failure durations must
+        not poison the rolling median of the new incarnation.  Flagged
+        steps are a report, not detector state, and are kept."""
+        self.times.clear()
 
     def record(self, step: int, duration_s: float) -> bool:
         history = self.times[-self.window:]

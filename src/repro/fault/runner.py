@@ -103,4 +103,9 @@ class ResilientTrainer:
                 restarts += 1
                 if restarts > max_restarts:
                     raise
+                # the new incarnation must not inherit detector state: old
+                # step times would poison the straggler median, and the dead
+                # worker would re-alarm dead_workers() forever
+                self.straggler.reset()
+                self.monitor.deregister("worker0")
                 self.store.wait()

@@ -1,0 +1,458 @@
+"""Fault-plane tests (the failure-storms PR).
+
+Covers: SubstrateHealth degrade/eligibility (shape-preserving, value-only),
+PlacementSpec.health threading through masks and the pytree protocol, the
+closed fail -> mass re-embed -> recover loop on the online engine (objective
+matching the float64 oracle on BOTH the degraded and the recovered
+substrate), the never-silently-dropped guarantee for stranded services,
+compile-count stability across same-bucket fail/recover events, link
+failures rerouting traffic off the cut, brownouts through the admission
+path, fault timelines/presets merged with churn, the availability integral
+and monitor reset/merge roll-up, heartbeat deregistration, straggler-history
+reset, and federated region evacuation with exact conservation on the
+surviving substrate.
+"""
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro.api import (CFNSession, FederatedSession, PlacementSpec,
+                       SubstrateHealth)
+from repro.core import dynamic, power, solvers, topology, vsr
+from repro.fault.monitor import (HeartbeatMonitor, PlacementMonitor,
+                                 StragglerTracker)
+from repro.kernels import ref as kref
+
+
+def _topo():
+    return topology.city_scale(n_olt=2, onus_per_olt=2, iot_per_onu=2)
+
+
+@pytest.fixture(scope="module")
+def topo():
+    return _topo()
+
+
+def _quick_spec(**kw):
+    return PlacementSpec(effort="quick", anneal_steps=0, defrag_every=0,
+                         **kw)
+
+
+def _services(topo, n, seed0=0, n_vms=3):
+    iot = topo.layer_indices("iot")
+    return [vsr.random_vsrs(1, rng=np.random.default_rng(seed0 + i),
+                            n_vms=n_vms, source_nodes=iot[:4])
+            for i in range(n)]
+
+
+def _session(topo, n=5, seed0=0, **spec_kw):
+    mon = PlacementMonitor()
+    s = CFNSession(topo, _quick_spec(**spec_kw), monitor=mon)
+    svcs = _services(topo, n, seed0=seed0)
+    for i, sv in enumerate(svcs):
+        assert s.add(sv, sid=i) is not None
+    return s, svcs, mon
+
+
+def _hosting_non_source(s, svcs):
+    """A node hosting at least one live VM that is no service's source."""
+    srcs = {int(sv.src[0]) for sv in svcs}
+    X = s.X
+    for r in range(s.n_live):
+        for x in X[r, :s.engine._vsrs[r].V]:
+            if int(x) not in srcs:
+                return int(x)
+    return None
+
+
+def _oracle_gap(problem, X, objective):
+    oracle = kref.placement_objective_f64(problem, X)
+    return abs(oracle - objective), oracle
+
+
+# ---------------------------------------------------------------------------
+# SubstrateHealth: degrade + eligibility
+# ---------------------------------------------------------------------------
+
+def test_health_degrade_shapes_and_values(topo):
+    h = SubstrateHealth.fresh(topo)
+    assert h.all_up
+    svcs = _services(topo, 3)
+    b = svcs[0]
+    for sv in svcs[1:]:
+        b = b.concat(sv)
+    prob = power.build_problem(topo, b)
+    assert h.degrade(prob) is prob          # all-up: identity, no copies
+    h2 = h.fail_node(3).fail_link(5)
+    assert not h2.all_up and h.all_up       # immutable updates
+    d = h2.degrade(prob)
+    # value-only substitution: same shapes everywhere
+    assert d.NS.shape == prob.NS.shape
+    assert d.C_net.shape == prob.C_net.shape
+    assert float(d.NS[3]) == 0.0 and float(d.C_lan[3]) == 0.0
+    assert float(d.C_net[5]) == 0.0
+    # untouched fields: C_pr stays nonzero (ceil division), routes intact
+    assert float(d.C_pr[3]) == float(prob.C_pr[3])
+    assert d.route_idx is prob.route_idx
+    h3 = h2.recover_node(3).recover_link(5)
+    assert h3.all_up
+
+
+def test_health_eligibility_masks_dead_elements(topo):
+    svcs = _services(topo, 3)
+    b = svcs[0]
+    for sv in svcs[1:]:
+        b = b.concat(sv)
+    prob = power.build_problem(topo, b)
+    h = SubstrateHealth.fresh(topo).fail_node(2)
+    el = h.eligibility(prob)
+    assert el.shape == (prob.R, prob.P)
+    assert not el[:, 2].any()               # dead node ineligible everywhere
+    # a dead network element removes every node routed through it
+    lam_links = np.asarray(prob.route_idx)
+    n = int(lam_links[lam_links < prob.N].flat[0])
+    h2 = SubstrateHealth.fresh(topo).fail_link(n)
+    el2 = h2.eligibility(prob)
+    pair = h2.pair_alive(prob)
+    src0 = int(b.src[0])
+    assert (el2[0] == pair[src0]).all()
+
+
+def test_spec_health_masks_and_pytree(topo):
+    import jax
+    svcs = _services(topo, 2)
+    prob = power.build_problem(topo, svcs[0].concat(svcs[1]))
+    spec = _quick_spec(health=SubstrateHealth.fresh(topo))
+    assert spec.masks(prob) is None         # all-up: unconstrained fast path
+    spec = spec.replace(health=spec.health.fail_node(1))
+    el = spec.masks(prob)
+    assert el is not None and not el[:, 1].any()
+    # health survives the pytree protocol (vmap/jit closure hygiene)
+    leaves, treedef = jax.tree_util.tree_flatten(spec)
+    spec2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert not spec2.health.node_up[1]
+    el2 = spec2.masks(prob)
+    assert (el == el2).all()
+
+
+# ---------------------------------------------------------------------------
+# the closed loop: fail -> re-embed -> recover on the online engine
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=4)
+@given(seed=st.integers(0, 10_000))
+def test_fail_recover_roundtrip_matches_oracle(seed):
+    topo = _topo()
+    s, svcs, mon = _session(topo, n=5, seed0=seed % 100)
+    node = _hosting_non_source(s, svcs)
+    if node is None:
+        return
+    s.tick(1.0)
+    assert s.fail_node(node) is not None
+    # displaced VMs moved off the dead node
+    X = s.X
+    for r in range(s.n_live):
+        assert node not in X[r, :s.engine._vsrs[r].V]
+    # conservation on the DEGRADED substrate: engine objective == f64
+    # oracle of its own placement on the degraded problem
+    gap, oracle = _oracle_gap(s.problem, X[:, :s.problem.V], s.objective())
+    assert gap <= 1e-3 + 1e-5 * abs(oracle)
+    s.tick(2.0)
+    s.recover_node(node)
+    assert s.health.all_up
+    s.defrag()
+    assert s.n_live == 5                    # everyone survived the storm
+    # and the recovered engine is oracle-exact on the HEALTHY problem
+    gap, oracle = _oracle_gap(s.problem, s.X[:, :s.problem.V],
+                              s.objective())
+    assert gap <= 1e-3 + 1e-5 * abs(oracle)
+    assert float(s.result.breakdown.violation) <= 1e-6
+
+
+@settings(deadline=None, max_examples=4)
+@given(seed=st.integers(0, 10_000))
+def test_stranded_never_silently_dropped(seed):
+    topo = _topo()
+    s, svcs, mon = _session(topo, n=5, seed0=seed % 100)
+    admitted = set(s.sids)
+    src = int(svcs[0].src[0])
+    hit = {i for i, sv in enumerate(svcs) if int(sv.src[0]) == src}
+    s.tick(1.0)
+    s.fail_node(src)
+    live = set(s.sids)
+    queued = {sid for _, sid in s.engine._queue}
+    # every admitted service is accounted for: still live or parked
+    assert live | queued == admitted
+    assert hit <= queued                      # the sourced-there ones parked
+    assert mon["service_stranded"] == len(queued)
+    assert mon.stranded_since.keys() == queued
+    s.tick(4.0)
+    s.recover_node(src)
+    # retry-on-recovery re-admits everyone; none vanished
+    assert set(s.sids) == admitted
+    assert not s.engine._queue
+    assert not mon.stranded_since             # all windows closed
+    assert mon.stranded_service_s >= 3.0 * len(hit) - 1e-9
+    assert mon["re_embedded"] >= len(hit)
+
+
+def test_no_retrace_across_same_bucket_fail_recover(topo):
+    s, svcs, _ = _session(topo, n=5)
+    node = _hosting_non_source(s, svcs)
+    assert node is not None
+    # warm cycle: compiles the eligible-masked variants once
+    s.fail_node(node)
+    s.recover_node(node)
+    before = dict(solvers.TRACE_COUNTS)
+    s.fail_node(node)
+    s.recover_node(node)
+    assert solvers.TRACE_COUNTS == before, \
+        "same-bucket fail/recover events must not retrace solver kernels"
+
+
+def test_link_failure_reroutes_traffic(topo):
+    s, svcs, mon = _session(topo, n=5)
+    lam = np.asarray(s.engine._state.lam)
+    n = int(np.argmax(lam))
+    assert lam[n] > 0
+    s.tick(1.0)
+    s.fail_link(n)
+    assert mon["link_failed"] == 1
+    if s.n_live:
+        # surviving placements carry (essentially) no traffic on the cut
+        assert float(np.asarray(s.engine._state.lam)[n]) <= 1e-2
+    # every service is still live or parked, never dropped
+    assert set(s.sids) | {sid for _, sid in s.engine._queue} == set(range(5))
+    s.recover_link(n)
+    assert s.health.all_up and mon["link_recovered"] == 1
+
+
+def test_brownout_tightens_admission_and_restores(topo):
+    s, svcs, mon = _session(topo, n=2)
+    s.tick(1.0)
+    s.brownout(0.0)   # nothing incremental fits a zero-watt budget
+    extra = _services(topo, 1, seed0=77)[0]
+    assert s.add(extra, sid=50) is None
+    assert s.n_live == 2 and mon["brownout"] == 1
+    assert mon["admission_rejected"] == 1
+    s.tick(2.0)
+    s.brownout_end()
+    assert s.spec.power_budget_w is None      # restored
+    assert mon["brownout_end"] == 1
+
+
+# ---------------------------------------------------------------------------
+# timelines: FaultEvents merged with churn
+# ---------------------------------------------------------------------------
+
+def test_fault_presets_and_merge_order(topo):
+    one = dynamic.fault_preset("single_node", topo)
+    assert [e.kind for e in one] == ["fail_node", "recover_node"]
+    assert one[0].target == one[1].target
+    storm = dynamic.fault_preset("rack_storm", topo, n_nodes=3)
+    assert len(storm) == 6
+    assert [e.t for e in storm] == sorted(e.t for e in storm)
+    assert len({e.target for e in storm}) == 3
+    day = dynamic.fault_preset("brownout_day", topo, budget_w=123.0)
+    assert [e.kind for e in day] == ["brownout", "brownout_end"]
+    assert day[0].value == 123.0
+    with pytest.raises(ValueError):
+        dynamic.fault_preset("nope", topo)
+    churn = [dynamic.ServiceEvent(20.0, "arrive", 7),
+             dynamic.ServiceEvent(20.0, "depart", 3)]
+    merged = dynamic.merge_timelines(
+        churn, [dynamic.FaultEvent(20.0, "fail_node", 2),
+                dynamic.FaultEvent(20.0, "recover_node", 2)])
+    # depart < fail < recover < arrive on exact time ties
+    assert [e.kind for e in merged] == ["depart", "fail_node",
+                                       "recover_node", "arrive"]
+
+
+def test_replay_merged_timeline_closes_the_loop(topo):
+    mon = PlacementMonitor()
+    s = CFNSession(topo, _quick_spec(), monitor=mon)
+    iot = topo.layer_indices("iot")
+
+    def make_vsr(sid):
+        return vsr.random_vsrs(1, rng=np.random.default_rng(sid), n_vms=3,
+                               source_nodes=iot[:4])
+
+    churn = [dynamic.ServiceEvent(float(i), "arrive", i) for i in range(4)]
+    churn.append(dynamic.ServiceEvent(9.0, "depart", 0))
+    src = int(make_vsr(1).src[0])
+    faults = [dynamic.FaultEvent(5.0, "fail_node", src),
+              dynamic.FaultEvent(7.0, "recover_node", src)]
+    events = dynamic.merge_timelines(churn, faults)
+    s.replay(events, make_vsr)
+    kinds = [st_.event for st_ in s.stats]
+    assert "fail_node" in kinds and "recover_node" in kinds
+    assert mon["node_failed"] == 1 and mon["node_recovered"] == 1
+    mon.close_strands(10.0)
+    assert not mon.stranded_since
+    a = mon.availability(horizon=10.0, n_services=4)
+    assert 0.0 <= a < 1.0                   # some service-time was stranded
+    assert mon.stranded_service_s > 0.0
+
+
+# ---------------------------------------------------------------------------
+# monitor: availability integral, reset, merge; heartbeat; straggler
+# ---------------------------------------------------------------------------
+
+def test_monitor_strand_unstrand_integral():
+    m = PlacementMonitor()
+    m.strand(1, t=2.0)
+    m.strand(1, t=3.0)                      # idempotent while open
+    assert m["service_stranded"] == 1
+    assert not m.unstrand(9, t=5.0)         # no window: no-op
+    assert m.unstrand(1, t=5.0)
+    assert m.stranded_service_s == pytest.approx(3.0)
+    assert m["re_embedded"] == 1
+    m.strand(2, t=6.0)
+    m.unstrand(2, t=8.0, re_embedded=False)   # departed while stranded
+    assert m["re_embedded"] == 1
+    assert m.stranded_service_s == pytest.approx(5.0)
+    assert m.availability(horizon=10.0, n_services=2) == pytest.approx(0.75)
+
+
+def test_monitor_reset_and_merge_ring_buffer():
+    a = PlacementMonitor(max_events=4)
+    b = PlacementMonitor()
+    for i in range(3):
+        a.count("x", detail=f"a{i}")
+    for i in range(3):
+        b.count("y", detail=f"b{i}")
+    b.strand(7, t=1.0)
+    b.stranded_service_s = 2.5
+    a.strand(7, t=0.5)
+    a.merge(b)
+    assert a["x"] == 3 and a["y"] == 3
+    assert a["service_stranded"] == 2       # counters simply add
+    assert len(a.events) == 4               # ring bound survives the merge
+    assert a.events[-1] == ("service_stranded", "sid=7")
+    assert a.stranded_service_s == pytest.approx(2.5)
+    assert a.stranded_since[7] == 0.5       # earliest open window wins
+    a.reset()
+    assert not a.counters and not a.events and not a.stranded_since
+    assert a.stranded_service_s == 0.0
+    assert a.availability(10.0, 5) == 1.0
+
+
+def test_heartbeat_deregister_and_reset():
+    clock = {"t": 0.0}
+    m = HeartbeatMonitor(timeout_s=1.0, clock=lambda: clock["t"])
+    m.register("w0")
+    m.register("w1")
+    clock["t"] = 5.0
+    assert sorted(m.dead_workers()) == ["w0", "w1"]
+    m.deregister("w0")                      # evicted: stops re-alarming
+    assert m.dead_workers() == ["w1"]
+    m.deregister("w0")                      # idempotent
+    m.reset()
+    assert m.healthy() and not m.last_beat
+
+
+def test_straggler_reset_clears_history():
+    t = StragglerTracker(threshold=3.0)
+    for i in range(8):
+        t.record(i, 1.0)
+    assert t.record(8, 10.0)                # flagged vs the 1 s median
+    t.reset()
+    assert t.flagged_steps == [8]           # the report survives
+    # post-restart steps judge against FRESH history only: a 10 s step with
+    # no history cannot be flagged against pre-failure 1 s medians
+    assert not t.record(9, 10.0)
+
+
+# ---------------------------------------------------------------------------
+# federated evacuation
+# ---------------------------------------------------------------------------
+
+def _fed_topo():
+    return topology.federated_scale(n_regions=3, n_olt=1, onus_per_olt=2,
+                                    iot_per_onu=2, n_core=6)
+
+
+def test_federated_evacuation_and_conservation():
+    ftopo = _fed_topo()
+    mon = PlacementMonitor()
+    fed = FederatedSession(ftopo, _quick_spec(), monitor=mon)
+    srcs = [int(r.proc_ids[0]) for r in fed.partition.regions]
+
+    def sv(seed, g):
+        return vsr.random_vsrs(1, rng=np.random.default_rng(seed), n_vms=3,
+                               source_nodes=[srcs[g]])
+
+    for i, g in enumerate([0, 0, 2]):
+        assert fed.add(sv(i, g), sid=i) is not None
+    # a cross-hosted body: homed in region 0, explicitly placed in region 1
+    assert fed.add(sv(3, 0), sid=3, region=1) is not None
+    assert fed.assignment(3) == 1
+    fed.tick(1.0)
+    n_evac = fed.fail_region(1)
+    assert n_evac == 1 and mon["evacuation"] == 1
+    assert fed.assignment(3) != 1           # body left the dark region
+    assert fed.down_regions == [1]
+    assert set(fed.sids) == {0, 1, 2, 3}    # nobody homed there: all live
+    # conservation stays f64-oracle-exact on the surviving substrate
+    vs = fed._plans[fed._order[0]].vsr
+    for sid in fed._order[1:]:
+        vs = vs.concat(fed._plans[sid].vsr)
+    bd = fed.breakdown()
+    prob = power.build_problem(ftopo, vs)
+    X = np.asarray(fed.X)[:vs.R, :vs.V]
+    oracle = kref.placement_objective_f64(prob, X)
+    assert abs(oracle - bd.objective) <= 1e-7 * max(1.0, abs(oracle))
+    fed.recover_region(1)
+    assert fed.down_regions == []
+
+
+def test_federated_region_failure_strands_homed_services():
+    ftopo = _fed_topo()
+    mon = PlacementMonitor()
+    fed = FederatedSession(ftopo, _quick_spec(), monitor=mon)
+    srcs = [int(r.proc_ids[0]) for r in fed.partition.regions]
+
+    def sv(seed, g):
+        return vsr.random_vsrs(1, rng=np.random.default_rng(seed), n_vms=3,
+                               source_nodes=[srcs[g]])
+
+    for i, g in enumerate([0, 1, 1, 2]):
+        assert fed.add(sv(i, g), sid=i) is not None
+    fed.tick(2.0)
+    fed.fail_region(1)
+    assert set(fed.sids) == {0, 3}          # homed-in-1 services stranded
+    assert mon["service_stranded"] == 2
+    # arrivals for the dark region park instead of dropping
+    assert fed.add(sv(9, 1), sid=9) is None
+    assert mon["service_stranded"] == 3
+    fed.tick(6.0)
+    assert fed.recover_region(1) == 3       # everyone comes back
+    assert set(fed.sids) == {0, 1, 2, 3, 9}
+    assert not mon.stranded_since
+    assert mon.stranded_service_s >= 4.0 * 2 - 1e-9
+    # the round-trip keeps exact conservation too
+    bd = fed.breakdown()
+    assert float(bd.objective) > 0
+
+
+def test_federated_monitor_rollup():
+    ftopo = _fed_topo()
+    mon = PlacementMonitor()
+    fed = FederatedSession(ftopo, _quick_spec(), monitor=mon)
+    regional = fed.attach_region_monitors()
+    assert set(regional) == {0, 1, 2}
+    srcs = [int(r.proc_ids[0]) for r in fed.partition.regions]
+    for i, g in enumerate([0, 1, 2]):
+        s = vsr.random_vsrs(1, rng=np.random.default_rng(i), n_vms=3,
+                            source_nodes=[srcs[g]])
+        assert fed.add(s, sid=i) is not None
+    fed.tick(1.0)
+    fed.fail_region(1)
+    fed.recover_region(1)
+    fleet = fed.fleet_monitor()
+    # coordinator events (session monitor) and any per-region engine events
+    # roll up into one snapshot; counters add across monitors
+    assert fleet["region_failed"] == 1 and fleet["region_recovered"] == 1
+    total = sum(m.get("service_stranded") for m in regional.values())
+    total += mon.get("service_stranded")
+    assert fleet["service_stranded"] == total == 1
