@@ -10,7 +10,7 @@ over a shared IP/WDM core.  The ``FederatedSession``:
 
   * assigns every service to its HOME region (the region owning its
     source IoT device) and solves all three regional portfolios under ONE
-    vmapped compile (``solvers.solve_portfolio_batched``) -- the scaling
+    vmapped compile (``federation.solve_portfolio_batched``) -- the scaling
     move past the single-substrate ceiling: G small problems instead of
     one ever-bigger flat one;
 

@@ -1,0 +1,68 @@
+#!/usr/bin/env python
+"""Validate BENCH_*.json tracker artifacts before CI uploads them.
+
+Each tracker must parse as JSON and carry its expected top-level keys --
+a renamed or dropped key silently breaks the cross-PR tracking the
+benchmarks exist for, so the bench-artifact CI steps run this right
+before upload.
+
+Usage: python scripts/check_bench_schema.py [BENCH_file.json ...]
+(no arguments: validate every known tracker present in the cwd; a known
+tracker that is absent is skipped, an unknown BENCH file is an error).
+Exit 0 when every checked file conforms.
+"""
+import json
+import sys
+from pathlib import Path
+
+# tracker name -> required top-level keys (extra keys are allowed: new
+# metrics may land; missing keys are what breaks downstream consumers)
+EXPECTED = {
+    "BENCH_fault.json": {"federated", "scenario", "storms"},
+    "BENCH_federated.json": {"federated", "flat",
+                             "objective_ratio_fed_vs_flat", "scenario",
+                             "speedup_vs_flat"},
+    "BENCH_online.json": {"defrag_sweep", "events", "scenario", "summary"},
+    "BENCH_quality.json": {"quality", "scenario"},
+    "BENCH_solver.json": {"anneal", "coordinate_sweep",
+                          "max_delta_speedup_vs_full", "scenario"},
+    "BENCH_sparse.json": {"f64_parity_paper_scale", "scenario", "sweeps"},
+}
+
+
+def check(path: Path) -> str | None:
+    """Return an error string, or None when the tracker conforms."""
+    if path.name not in EXPECTED:
+        return (f"{path}: unknown tracker (add its schema to "
+                f"scripts/check_bench_schema.py EXPECTED)")
+    try:
+        data = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return f"{path}: unreadable ({e})"
+    if not isinstance(data, dict):
+        return f"{path}: top level is {type(data).__name__}, expected object"
+    missing = EXPECTED[path.name] - set(data)
+    if missing:
+        return f"{path}: missing top-level key(s): {sorted(missing)}"
+    return None
+
+
+def main(argv) -> int:
+    if argv:
+        paths = [Path(a) for a in argv]
+    else:
+        paths = [p for name in sorted(EXPECTED) if (p := Path(name)).exists()]
+    if not paths:
+        print("check_bench_schema: no tracker files to check")
+        return 0
+    errors = [e for p in paths if (e := check(p))]
+    for e in errors:
+        print(f"FAIL: {e}")
+    for p in paths:
+        if not check(p):
+            print(f"ok: {p}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,0 +1,45 @@
+"""tracelint: static analysis for the repo's JAX/Pallas discipline.
+
+The codebase's performance story rests on hand-maintained invariants --
+one compile per shape bucket, value-only fault degradation, the f64
+oracle confined to ``kernels/ref.py``, Pallas working sets sized to
+VMEM.  Runtime spot-checks (``solvers.TRACE_COUNTS`` assertions) catch
+some regressions after the fact; this package catches them at PR time
+by walking the AST of ``src/`` against a rule catalog:
+
+  CFN101  retrace hazards -- host-sync / concretization calls
+          (``.item()``, ``float()``, ``int()``, ``bool()``,
+          ``np.asarray()``) inside functions reachable from a
+          ``jax.jit`` / ``lax.scan`` / ``vmap`` body.
+  CFN102  dtype discipline -- float64 literals or casts outside the
+          oracle whitelist, and implicit-promotion hazards.
+  CFN103  pytree hygiene -- frozen-dataclass pytrees must account for
+          every field in ``tree_flatten``; value-only paths
+          (``degrade``-style) must not change shapes.
+  CFN104  trace-counter coverage -- every jitted solver entry must be
+          wrapped by ``solvers.count_traces`` so compile-stability
+          tests can assert on it.
+  CFN105  Pallas VMEM budget -- per-kernel VMEM estimate from
+          BlockSpec shapes at the documented max scale, plus Python
+          loops over non-constant bounds inside kernel bodies.
+
+CLI: ``python -m repro.analysis [--baseline FILE] [--format text|json]
+[paths...]`` (exit 1 on any non-suppressed finding).  Suppression is
+per-line via ``# tracelint: allow[CFN10x]`` pragmas or per-finding via
+a committed baseline file (``analysis/baseline.json``).  The rule
+catalog is documented in ``docs/ANALYSIS.md``.
+"""
+from .engine import (Finding, Module, Rule, analyze_paths, analyze_source,
+                     apply_baseline, baseline_payload, iter_python_files,
+                     load_baseline)
+from .rules import (MAX_SCALE, VMEM_BUDGET_BYTES, DtypeDiscipline,
+                    PallasVmemBudget, PytreeHygiene, RetraceHazards,
+                    TraceCounterCoverage, all_rules)
+
+__all__ = [
+    "Finding", "Module", "Rule", "analyze_paths", "analyze_source",
+    "apply_baseline", "baseline_payload", "iter_python_files",
+    "load_baseline", "all_rules", "RetraceHazards", "DtypeDiscipline",
+    "PytreeHygiene", "TraceCounterCoverage", "PallasVmemBudget",
+    "MAX_SCALE", "VMEM_BUDGET_BYTES",
+]

@@ -1,0 +1,62 @@
+"""CLI: ``python -m repro.analysis [--baseline FILE] [--format text|json]
+[paths...]``.  Exit 0 when every finding is suppressed (pragma or
+baseline), 1 otherwise."""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from . import engine
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="tracelint: JAX/Pallas compile-stability and numerics "
+                    "static analysis (rules CFN101-CFN105; see "
+                    "docs/ANALYSIS.md)")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to analyze (default: src)")
+    ap.add_argument("--baseline", metavar="FILE",
+                    help="JSON baseline of accepted findings "
+                         "(analysis/baseline.json)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--write-baseline", metavar="FILE",
+                    help="write the current findings as a new baseline "
+                         "and exit 0")
+    args = ap.parse_args(argv)
+
+    findings = engine.analyze_paths(args.paths)
+
+    if args.write_baseline:
+        payload = engine.baseline_payload(findings)
+        Path(args.write_baseline).write_text(
+            json.dumps(payload, indent=2, sort_keys=True) + "\n")
+        print(f"wrote {len(payload['suppressions'])} suppression(s) to "
+              f"{args.write_baseline}")
+        return 0
+
+    baseline = (engine.load_baseline(args.baseline)
+                if args.baseline else set())
+    fresh = engine.apply_baseline(findings, baseline)
+    n_suppressed = len(findings) - len(fresh)
+
+    if args.format == "json":
+        print(json.dumps({
+            "findings": [f.to_dict() for f in fresh],
+            "suppressed": n_suppressed,
+            "total": len(findings),
+        }, indent=2))
+    else:
+        for f in fresh:
+            print(f.render())
+        summary = (f"{len(fresh)} finding(s)"
+                   + (f", {n_suppressed} baselined" if n_suppressed else ""))
+        print(("FAIL: " if fresh else "OK: ") + summary)
+    return 1 if fresh else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

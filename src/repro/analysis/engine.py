@@ -1,0 +1,156 @@
+"""tracelint engine: findings, pragma/baseline suppression, runners.
+
+Rules are stateless objects with an ``id``/``severity`` and a
+``check(module) -> findings`` method; the engine owns everything rules
+share -- parsing, the per-line ``# tracelint: allow[...]`` pragma map,
+line-independent baseline fingerprints, and path walking.  Keeping
+suppression out of the rules means a rule only ever reports what it
+sees; policy (accept / pragma / baseline) lives with the code owner.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+from pathlib import Path
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Set
+
+# matches "# tracelint: allow[CFN101]" and "# tracelint: allow[CFN101,CFN102]"
+_PRAGMA_RE = re.compile(r"#\s*tracelint:\s*allow\[([A-Za-z0-9,\s]+)\]")
+
+BASELINE_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str         # "CFN101"
+    severity: str     # "error" | "warning"
+    path: str         # normalized with forward slashes
+    line: int         # 1-based
+    message: str
+
+    @property
+    def key(self) -> str:
+        """Line-independent fingerprint: a baseline entry keeps matching
+        after unrelated edits shift the finding up or down the file."""
+        return f"{self.rule}::{self.path}::{self.message}"
+
+    def to_dict(self) -> dict:
+        return {"rule": self.rule, "severity": self.severity,
+                "path": self.path, "line": self.line,
+                "message": self.message, "key": self.key}
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}: {self.rule} "
+                f"[{self.severity}] {self.message}")
+
+
+def _pragma_lines(lines: Sequence[str]) -> Dict[int, Set[str]]:
+    out: Dict[int, Set[str]] = {}
+    for i, text in enumerate(lines, start=1):
+        m = _PRAGMA_RE.search(text)
+        if m:
+            out[i] = {t.strip() for t in m.group(1).split(",") if t.strip()}
+    return out
+
+
+class Module:
+    """One parsed source file, handed to every rule."""
+
+    def __init__(self, source: str, path: str = "<string>"):
+        self.source = source
+        self.path = str(path).replace("\\", "/")
+        self.tree = ast.parse(source)
+        self.lines = source.splitlines()
+        self.pragmas = _pragma_lines(self.lines)
+
+    def allowed(self, rule_id: str, line: int) -> bool:
+        """A pragma suppresses findings on its own line and, when it sits
+        on a standalone comment line, on the line below it."""
+        for ln in (line, line - 1):
+            if rule_id in self.pragmas.get(ln, ()):
+                return True
+        return False
+
+
+class Rule:
+    """Base rule: subclasses set ``id``/``severity``/``title`` and yield
+    findings from ``check``."""
+
+    id = "CFN000"
+    severity = "error"
+    title = ""
+
+    def check(self, mod: Module) -> Iterable[Finding]:
+        raise NotImplementedError
+
+    def finding(self, mod: Module, node, message: str,
+                severity: Optional[str] = None) -> Finding:
+        line = node if isinstance(node, int) else getattr(node, "lineno", 0)
+        return Finding(rule=self.id, severity=severity or self.severity,
+                       path=mod.path, line=line, message=message)
+
+
+def _default_rules() -> List[Rule]:
+    from . import rules
+    return rules.all_rules()
+
+
+def analyze_source(source: str, path: str = "<string>",
+                   rules: Optional[Sequence[Rule]] = None) -> List[Finding]:
+    """Run the rule catalog over one source string.  Pragma-suppressed
+    findings are dropped here; baseline suppression is the caller's
+    (``apply_baseline``)."""
+    mod = Module(source, path=path)
+    out: List[Finding] = []
+    for rule in (rules if rules is not None else _default_rules()):
+        for f in rule.check(mod):
+            if not mod.allowed(f.rule, f.line):
+                out.append(f)
+    return sorted(out, key=lambda f: (f.path, f.line, f.rule))
+
+
+def iter_python_files(paths: Sequence[str]) -> Iterator[Path]:
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            yield from sorted(path.rglob("*.py"))
+        elif path.suffix == ".py":
+            yield path
+
+
+def analyze_paths(paths: Sequence[str],
+                  rules: Optional[Sequence[Rule]] = None) -> List[Finding]:
+    findings: List[Finding] = []
+    for f in iter_python_files(paths):
+        try:
+            src = f.read_text()
+            findings.extend(analyze_source(src, path=str(f), rules=rules))
+        except SyntaxError as e:
+            findings.append(Finding(
+                rule="E999", severity="error",
+                path=str(f).replace("\\", "/"), line=e.lineno or 0,
+                message=f"syntax error: {e.msg}"))
+    return sorted(findings, key=lambda f: (f.path, f.line, f.rule))
+
+
+# -- baseline ---------------------------------------------------------------
+
+def baseline_payload(findings: Sequence[Finding]) -> dict:
+    return {"version": BASELINE_VERSION,
+            "suppressions": sorted({f.key for f in findings})}
+
+
+def load_baseline(path: str) -> Set[str]:
+    data = json.loads(Path(path).read_text())
+    if data.get("version") != BASELINE_VERSION:
+        raise ValueError(f"baseline {path}: unsupported version "
+                         f"{data.get('version')!r}")
+    return set(data.get("suppressions", ()))
+
+
+def apply_baseline(findings: Sequence[Finding], baseline: Set[str]
+                   ) -> List[Finding]:
+    """Findings NOT covered by the baseline (the ones that fail CI)."""
+    return [f for f in findings if f.key not in baseline]

@@ -1,0 +1,584 @@
+"""The tracelint rule catalog (CFN101-CFN105).
+
+Every rule is a pure AST pass over one ``engine.Module``; cross-file
+state is deliberately avoided so the pass stays O(file) and fixture
+tests can feed single source strings.  Call-graph reachability (CFN101)
+and jit-entry discovery (CFN104) therefore resolve simple-name calls
+within the module -- calls into other modules are checked where those
+functions are defined, which is exactly where the fix belongs.
+
+See docs/ANALYSIS.md for the catalog with examples and suppression
+guidance.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from .engine import Finding, Module, Rule
+
+# The documented maximum deployment scale (ROADMAP city_p468 + federated
+# buckets): CFN105 prices every Pallas BlockSpec at these substrate/problem
+# dims.  Kernel-local tile sizes (bc, block_*) come from each wrapper's
+# keyword defaults, which override these.
+MAX_SCALE: Dict[str, int] = {
+    "P": 468, "N": 160, "K": 14,     # substrate: nodes / net elems / route pad
+    "R": 32, "V": 16, "J": 512,      # services x VMs (J = R * V)
+    "L": 1024,                       # virtual links after _pad_links
+    "T": 4000, "D": 16,              # anneal steps, incident-link degree
+    "S": 4000, "G": 8,               # scan length, federated regions
+}
+
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024   # one TPU core's VMEM
+_BYTES_PER_ELEM = 4                    # f32 / i32 lanes (the kernel dtypes)
+
+_JIT_NAMES = {"jax.jit", "jit", "pjit", "jax.pjit"}
+_PARTIAL_NAMES = {"functools.partial", "partial"}
+_TRACE_BODY_CALLS = {"jax.lax.scan", "lax.scan", "jax.lax.fori_loop",
+                     "lax.fori_loop", "jax.lax.while_loop", "lax.while_loop",
+                     "jax.vmap", "vmap", "jax.pmap", "pmap"}
+_UNWRAP_CALLS = _TRACE_BODY_CALLS | _PARTIAL_NAMES | {
+    "jax.value_and_grad", "jax.grad", "jax.checkpoint", "jax.remat",
+    "count_traces"}
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """'a.b.c' for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _call_target(node: ast.AST) -> Optional[str]:
+    return _dotted(node.func) if isinstance(node, ast.Call) else None
+
+
+def _is_jit_decorator(dec: ast.AST) -> bool:
+    d = _dotted(dec)
+    if d in _JIT_NAMES:
+        return True
+    if isinstance(dec, ast.Call):
+        f = _dotted(dec.func)
+        if f in _JIT_NAMES:
+            return True
+        # functools.partial(jax.jit, static_argnames=...)
+        if f in _PARTIAL_NAMES and dec.args \
+                and _dotted(dec.args[0]) in _JIT_NAMES:
+            return True
+    return False
+
+
+def _is_count_traces_decorator(dec: ast.AST) -> bool:
+    if isinstance(dec, ast.Call):
+        d = _dotted(dec.func)
+        return d is not None and d.split(".")[-1] == "count_traces"
+    return False
+
+
+def _unwrap_to_names(node: ast.AST) -> List[str]:
+    """Function names inside transform wrappers: jax.jit(jax.vmap(f)) -> f,
+    jax.jit(count_traces("x")(f)) -> f, partial(k, P=...) -> k."""
+    out: List[str] = []
+    stack = [node]
+    while stack:
+        n = stack.pop()
+        if isinstance(n, ast.Name):
+            out.append(n.id)
+        elif isinstance(n, ast.Call):
+            t = _dotted(n.func)
+            if t is not None and (t in _UNWRAP_CALLS
+                                  or t.split(".")[-1] == "count_traces"):
+                stack.extend(n.args[:1])
+            elif isinstance(n.func, ast.Call):
+                # decorator-factory application: count_traces("x")(f)
+                stack.extend(n.args[:1])
+    return out
+
+
+def _module_functions(tree: ast.Module) -> Dict[str, ast.FunctionDef]:
+    """Function defs reachable by BARE name (module-level and nested),
+    keyed by name.  Class methods are excluded -- a simple-name call can
+    never hit one, and including them would shadow same-named module
+    functions (e.g. a ``objective`` property vs the jitted ``objective``)."""
+    methods = {m for n in ast.walk(tree) if isinstance(n, ast.ClassDef)
+               for m in n.body
+               if isinstance(m, (ast.FunctionDef, ast.AsyncFunctionDef))}
+    return {n.name: n for n in ast.walk(tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+            and n not in methods}
+
+
+def _toplevel_functions(tree: ast.Module) -> Dict[str, ast.FunctionDef]:
+    return {n.name: n for n in tree.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+
+# ---------------------------------------------------------------------------
+# CFN101: retrace hazards
+# ---------------------------------------------------------------------------
+
+class RetraceHazards(Rule):
+    """Host-sync / concretization calls inside traced code.
+
+    Roots: functions decorated with ``jax.jit`` (incl. the
+    ``functools.partial(jax.jit, ...)`` form), functions passed to
+    ``jax.jit`` / ``vmap`` / ``pmap`` / ``lax.scan`` / ``lax.fori_loop``
+    / ``lax.while_loop`` call sites, and everything those reach through
+    simple-name calls in this module.  Inside that set, ``.item()``,
+    ``float()`` / ``int()`` / ``bool()`` on non-static values, and
+    ``np.asarray`` / ``np.array`` all force a host round trip per trace
+    -- or fail outright on abstract tracers.
+    """
+
+    id = "CFN101"
+    title = "retrace hazard"
+    CASTS = {"float", "int", "bool"}
+    NP_CALLS = {"np.asarray", "np.array", "numpy.asarray", "numpy.array",
+                "onp.asarray", "onp.array"}
+
+    def _roots(self, mod: Module,
+               funcs: Dict[str, ast.FunctionDef]) -> Set[str]:
+        roots: Set[str] = set()
+        for name, fn in funcs.items():
+            if any(_is_jit_decorator(d) for d in fn.decorator_list):
+                roots.add(name)
+        for node in ast.walk(mod.tree):
+            t = _call_target(node)
+            if t in _JIT_NAMES or t in _TRACE_BODY_CALLS:
+                for nm in _unwrap_to_names(node.args[0]) if node.args else []:
+                    if nm in funcs:
+                        roots.add(nm)
+        return roots
+
+    @staticmethod
+    def _static_cast_arg(arg: ast.AST) -> bool:
+        """Casts of shapes/dims/constants are trace-safe."""
+        if isinstance(arg, ast.Constant):
+            return True
+        if isinstance(arg, ast.Call) and _dotted(arg.func) == "len":
+            return True
+        for n in ast.walk(arg):
+            if isinstance(n, ast.Attribute) and n.attr in ("shape", "ndim",
+                                                           "size", "dtype"):
+                return True
+        return False
+
+    def check(self, mod: Module) -> Iterable[Finding]:
+        funcs = _module_functions(mod.tree)
+        roots = self._roots(mod, funcs)
+        if not roots:
+            return
+        # reachability over simple-name calls within the module
+        reach: Set[str] = set()
+        work = list(roots)
+        while work:
+            name = work.pop()
+            if name in reach:
+                continue
+            reach.add(name)
+            for node in ast.walk(funcs[name]):
+                t = _call_target(node)
+                if t in funcs and t not in reach:
+                    work.append(t)
+        seen: Set[Tuple[int, int, str]] = set()
+        for name in sorted(reach):
+            for node in ast.walk(funcs[name]):
+                if not isinstance(node, ast.Call):
+                    continue
+                t = _dotted(node.func)
+                msg = None
+                if isinstance(node.func, ast.Attribute) \
+                        and node.func.attr == "item" and not node.args:
+                    msg = (f"`.item()` in `{name}` (traced from a jit/scan/"
+                           "vmap entry) forces a device sync per trace")
+                elif t in self.CASTS and node.args \
+                        and not self._static_cast_arg(node.args[0]):
+                    msg = (f"`{t}(...)` on a traced value in `{name}` "
+                           "concretizes under jit (TracerError / silent "
+                           "host sync)")
+                elif t in self.NP_CALLS:
+                    msg = (f"`{t}(...)` in `{name}` materializes traced "
+                           "values on host (breaks tracing / forces a "
+                           "round trip)")
+                if msg is not None:
+                    key = (node.lineno, node.col_offset, msg)
+                    if key not in seen:
+                        seen.add(key)
+                        yield self.finding(mod, node, msg)
+
+
+# ---------------------------------------------------------------------------
+# CFN102: dtype discipline
+# ---------------------------------------------------------------------------
+
+class DtypeDiscipline(Rule):
+    """float64 belongs to the oracle (``kernels/ref.py``) and the byte-size
+    table (``launch/roofline.py``); everywhere else it either silently
+    doubles memory traffic (under ``jax_enable_x64``) or silently truncates
+    (without), so every other use must carry an explicit
+    ``# tracelint: allow[CFN102]`` pragma stating why."""
+
+    id = "CFN102"
+    title = "dtype discipline"
+    WHITELIST_SUFFIXES = ("kernels/ref.py", "launch/roofline.py")
+    DTYPE_STRS = {"float64", "f64"}
+    DTYPE_CALLS = {"astype", "asarray", "array", "zeros", "ones", "full",
+                   "empty", "arange"}
+
+    def check(self, mod: Module) -> Iterable[Finding]:
+        if mod.path.endswith(self.WHITELIST_SUFFIXES):
+            return
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Attribute) and node.attr == "float64":
+                yield self.finding(
+                    mod, node,
+                    f"float64 reference `{_dotted(node)}` outside the f64 "
+                    "oracle whitelist")
+            elif isinstance(node, ast.Name) and node.id == "float64":
+                yield self.finding(
+                    mod, node,
+                    "float64 reference outside the f64 oracle whitelist")
+            elif isinstance(node, ast.Call):
+                fn = _dotted(node.func)
+                leaf = fn.split(".")[-1] if fn else ""
+                for kw in node.keywords:
+                    if kw.arg == "dtype":
+                        if isinstance(kw.value, ast.Constant) \
+                                and kw.value.value in self.DTYPE_STRS:
+                            yield self.finding(
+                                mod, node,
+                                f'dtype="{kw.value.value}" outside the f64 '
+                                "oracle whitelist")
+                        elif isinstance(kw.value, ast.Name) \
+                                and kw.value.id == "float":
+                            yield self.finding(
+                                mod, node,
+                                "dtype=float promotes to float64 under "
+                                "jax_enable_x64 (implicit-promotion hazard)",
+                                severity="warning")
+                if leaf in self.DTYPE_CALLS:
+                    for arg in node.args:
+                        if isinstance(arg, ast.Constant) \
+                                and arg.value in self.DTYPE_STRS:
+                            yield self.finding(
+                                mod, node,
+                                f'`{leaf}(..., "{arg.value}")` outside the '
+                                "f64 oracle whitelist")
+                        elif leaf == "astype" and isinstance(arg, ast.Name) \
+                                and arg.id == "float":
+                            yield self.finding(
+                                mod, node,
+                                "astype(float) promotes to float64 under "
+                                "jax_enable_x64 (implicit-promotion hazard)",
+                                severity="warning")
+
+
+# ---------------------------------------------------------------------------
+# CFN103: pytree hygiene
+# ---------------------------------------------------------------------------
+
+class PytreeHygiene(Rule):
+    """Frozen-dataclass pytrees must account for EVERY field in
+    ``tree_flatten`` (a field that is neither leaf nor aux silently
+    disappears through tree_map/jit, resurrected from stale defaults by
+    unflatten), and ``degrade``-style value-only paths must never change
+    array shapes (a shape change retraces every solver kernel that
+    consumes the pytree)."""
+
+    id = "CFN103"
+    title = "pytree hygiene"
+    SHAPE_OPS = {"concatenate", "pad", "stack", "hstack", "vstack", "tile",
+                 "repeat", "append", "delete"}
+    VALUE_ONLY_NAMES = {"degrade"}
+
+    @staticmethod
+    def _is_dataclass_decorated(cls: ast.ClassDef) -> bool:
+        for dec in cls.decorator_list:
+            d = _dotted(dec) or (_dotted(dec.func)
+                                 if isinstance(dec, ast.Call) else None)
+            if d and d.split(".")[-1] == "dataclass":
+                return True
+        return False
+
+    def _check_flatten_coverage(self, mod: Module,
+                                cls: ast.ClassDef) -> Iterable[Finding]:
+        flatten = next((n for n in cls.body
+                        if isinstance(n, ast.FunctionDef)
+                        and n.name == "tree_flatten"), None)
+        if flatten is None:
+            return
+        fields: List[str] = []
+        str_tuples: Dict[str, Set[str]] = {}
+        for stmt in cls.body:
+            if isinstance(stmt, ast.AnnAssign) \
+                    and isinstance(stmt.target, ast.Name):
+                ann = ast.dump(stmt.annotation)
+                if "ClassVar" not in ann:
+                    fields.append(stmt.target.id)
+            elif isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                    and isinstance(stmt.targets[0], ast.Name) \
+                    and isinstance(stmt.value, (ast.Tuple, ast.List)):
+                elts = stmt.value.elts
+                if elts and all(isinstance(e, ast.Constant)
+                                and isinstance(e.value, str) for e in elts):
+                    str_tuples[stmt.targets[0].id] = {e.value for e in elts}
+        covered: Set[str] = set()
+        all_covered = False
+        for node in ast.walk(flatten):
+            if isinstance(node, ast.Attribute):
+                if node.attr == "__dataclass_fields__":
+                    all_covered = True
+                elif isinstance(node.value, ast.Name) \
+                        and node.value.id == "self":
+                    covered.add(node.attr)
+            elif isinstance(node, ast.Name) and node.id in str_tuples:
+                covered |= str_tuples[node.id]
+        if all_covered:
+            return
+        missing = [f for f in fields if f not in covered]
+        if missing:
+            yield self.finding(
+                mod, flatten,
+                f"pytree `{cls.name}`: field(s) {', '.join(missing)} are "
+                "neither leaf nor aux in tree_flatten (dropped through "
+                "tree_map/jit, resurrected stale by unflatten)")
+
+    def _check_value_only(self, mod: Module,
+                          fn: ast.FunctionDef) -> Iterable[Finding]:
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            t = _dotted(node.func)
+            leaf = t.split(".")[-1] if t else ""
+            if leaf in self.SHAPE_OPS:
+                yield self.finding(
+                    mod, node,
+                    f"shape-changing `{leaf}` inside value-only path "
+                    f"`{fn.name}` (fail/recover must keep solver kernels "
+                    "on their compile buckets)")
+            elif leaf == "reshape" and any(
+                    not isinstance(a, (ast.Constant, ast.UnaryOp))
+                    for a in node.args):
+                yield self.finding(
+                    mod, node,
+                    f"`reshape` with non-static args inside value-only "
+                    f"path `{fn.name}`")
+
+    def check(self, mod: Module) -> Iterable[Finding]:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.ClassDef) \
+                    and self._is_dataclass_decorated(node):
+                yield from self._check_flatten_coverage(mod, node)
+            elif isinstance(node, ast.FunctionDef) \
+                    and node.name in self.VALUE_ONLY_NAMES:
+                yield from self._check_value_only(mod, node)
+
+
+# ---------------------------------------------------------------------------
+# CFN104: trace-counter coverage
+# ---------------------------------------------------------------------------
+
+class TraceCounterCoverage(Rule):
+    """Every module-level jitted solver entry in the solver modules must
+    route through ``count_traces`` (under the jit, so the counter ticks
+    per TRACE, not per call) -- that is what lets compile-stability tests
+    assert "zero fresh compiles across this storm".
+
+    Scope: ``core/solvers.py`` and ``core/federation.py`` (the modules
+    whose entries the TRACE_COUNTS tests assert on).  Jit wrappers around
+    functions imported from other modules are exempt: their counter
+    contract belongs to the defining module."""
+
+    id = "CFN104"
+    title = "trace-counter coverage"
+    ENFORCE_SUFFIXES = ("core/solvers.py", "core/federation.py")
+
+    def check(self, mod: Module) -> Iterable[Finding]:
+        if not mod.path.endswith(self.ENFORCE_SUFFIXES):
+            return
+        top = _toplevel_functions(mod.tree)
+        for name, fn in top.items():
+            jit_idx = [i for i, d in enumerate(fn.decorator_list)
+                       if _is_jit_decorator(d)]
+            if not jit_idx:
+                continue
+            ct_idx = [i for i, d in enumerate(fn.decorator_list)
+                      if _is_count_traces_decorator(d)]
+            if not ct_idx:
+                yield self.finding(
+                    mod, fn,
+                    f"jitted solver entry `{name}` does not increment "
+                    "TRACE_COUNTS (add @count_traces under @jax.jit)")
+            elif ct_idx[0] < jit_idx[0]:
+                yield self.finding(
+                    mod, fn,
+                    f"`{name}`: @count_traces must sit UNDER @jax.jit "
+                    "(above it, the counter ticks per call, not per trace)")
+        for node in mod.tree.body:
+            if not (isinstance(node, ast.Assign)
+                    and isinstance(node.value, ast.Call)
+                    and _dotted(node.value.func) in _JIT_NAMES
+                    and node.value.args):
+                continue
+            arg = node.value.args[0]
+            if isinstance(arg, ast.Call):
+                f = _dotted(arg.func)
+                if isinstance(arg.func, ast.Call) or (
+                        f and f.split(".")[-1] == "count_traces"):
+                    continue     # jax.jit(count_traces("x")(f))
+            wrapped = _unwrap_to_names(arg)
+            target = top.get(wrapped[0]) if wrapped else None
+            if target is None:
+                continue         # wraps an imported function: exempt
+            if not any(_is_count_traces_decorator(d)
+                       for d in target.decorator_list):
+                yield self.finding(
+                    mod, node,
+                    f"jitted solver entry `{wrapped[0]}` (via "
+                    "`jax.jit(...)` assignment) does not increment "
+                    "TRACE_COUNTS (decorate it with @count_traces)")
+
+
+# ---------------------------------------------------------------------------
+# CFN105: Pallas VMEM budget
+# ---------------------------------------------------------------------------
+
+def _eval_dim(node: ast.AST, env: Dict[str, int]) -> Optional[int]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return node.value
+    if isinstance(node, ast.Name):
+        return env.get(node.id)
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        v = _eval_dim(node.operand, env)
+        return None if v is None else -v
+    if isinstance(node, ast.BinOp):
+        lo, hi = _eval_dim(node.left, env), _eval_dim(node.right, env)
+        if lo is None or hi is None:
+            return None
+        if isinstance(node.op, ast.Mult):
+            return lo * hi
+        if isinstance(node.op, ast.Add):
+            return lo + hi
+        if isinstance(node.op, ast.Sub):
+            return lo - hi
+        if isinstance(node.op, (ast.FloorDiv, ast.Div)):
+            return lo // hi if hi else None
+        if isinstance(node.op, ast.Pow):
+            return lo ** hi
+    return None
+
+
+class PallasVmemBudget(Rule):
+    """Per ``pallas_call``, the blocks named by in/out BlockSpecs are
+    resident in VMEM together; this rule prices them at the documented
+    max scale (``MAX_SCALE``, bc/tile names overridden by the wrapper's
+    own keyword defaults) and fails anything over ``VMEM_BUDGET_BYTES``.
+    Also flags Python ``for ... in range(non-constant)`` loops inside
+    kernel bodies -- they unroll at trace time into dim-many statements.
+    """
+
+    id = "CFN105"
+    title = "Pallas VMEM budget"
+
+    def _env_for(self, mod: Module, fn: Optional[ast.FunctionDef]
+                 ) -> Dict[str, int]:
+        env = dict(MAX_SCALE)
+        for node in mod.tree.body:
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name) \
+                    and isinstance(node.value, ast.Constant) \
+                    and isinstance(node.value.value, int):
+                env[node.targets[0].id] = node.value.value
+        if fn is not None:
+            args = fn.args
+            defaults = list(args.defaults)
+            names = [a.arg for a in args.args][len(args.args)
+                                               - len(defaults):]
+            for nm, d in zip(names, defaults):
+                if isinstance(d, ast.Constant) and isinstance(d.value, int):
+                    env[nm] = d.value
+            for a, d in zip(args.kwonlyargs, args.kw_defaults):
+                if isinstance(d, ast.Constant) and isinstance(d.value, int):
+                    env[a.arg] = d.value
+        return env
+
+    @staticmethod
+    def _kernel_names(call: ast.Call) -> List[str]:
+        if not call.args:
+            return []
+        return _unwrap_to_names(call.args[0])
+
+    def check(self, mod: Module) -> Iterable[Finding]:
+        funcs = _module_functions(mod.tree)
+        calls: List[Tuple[Optional[ast.FunctionDef], ast.Call]] = []
+        for fn in funcs.values():
+            for node in ast.walk(fn):
+                t = _call_target(node)
+                if t and t.split(".")[-1] == "pallas_call":
+                    calls.append((fn, node))
+        kernel_fns: Set[str] = set()
+        for fn, call in calls:
+            kernel_fns |= {n for n in self._kernel_names(call) if n in funcs}
+            env = self._env_for(mod, fn)
+            total = 0
+            unknown = 0
+            for node in ast.walk(call):
+                t = _call_target(node)
+                if not (t and t.split(".")[-1] == "BlockSpec"):
+                    continue
+                shape = None
+                if node.args and isinstance(node.args[0],
+                                            (ast.Tuple, ast.List)):
+                    shape = node.args[0].elts
+                else:
+                    for kw in node.keywords:
+                        if kw.arg == "block_shape" and isinstance(
+                                kw.value, (ast.Tuple, ast.List)):
+                            shape = kw.value.elts
+                if shape is None:
+                    continue
+                n = _BYTES_PER_ELEM
+                for dim in shape:
+                    v = _eval_dim(dim, env)
+                    if v is None:
+                        unknown += 1
+                        n = 0
+                        break
+                    n *= v
+                total += n
+            if unknown:
+                yield self.finding(
+                    mod, call,
+                    f"pallas_call in `{fn.name if fn else '<module>'}`: "
+                    f"{unknown} BlockSpec shape(s) not statically "
+                    "evaluable at MAX_SCALE -- VMEM estimate is a "
+                    "lower bound", severity="warning")
+            if total > VMEM_BUDGET_BYTES:
+                yield self.finding(
+                    mod, call,
+                    f"pallas_call in `{fn.name if fn else '<module>'}`: "
+                    f"estimated VMEM {total / 2**20:.2f} MiB at max scale "
+                    f"(P={MAX_SCALE['P']}, K={MAX_SCALE['K']}) exceeds the "
+                    f"{VMEM_BUDGET_BYTES / 2**20:.0f} MiB budget")
+        for name in sorted(kernel_fns):
+            for node in ast.walk(funcs[name]):
+                if isinstance(node, ast.For) \
+                        and isinstance(node.iter, ast.Call) \
+                        and _dotted(node.iter.func) == "range" \
+                        and any(not isinstance(a, ast.Constant)
+                                for a in node.iter.args):
+                    yield self.finding(
+                        mod, node,
+                        f"Python loop over a non-constant bound in Pallas "
+                        f"kernel `{name}` unrolls at trace time (use "
+                        "lax.fori_loop or a constant tile)")
+
+
+def all_rules() -> List[Rule]:
+    return [RetraceHazards(), DtypeDiscipline(), PytreeHygiene(),
+            TraceCounterCoverage(), PallasVmemBudget()]

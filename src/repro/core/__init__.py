@@ -6,7 +6,8 @@ from . import (api, dynamic, embed, federation, hardware, power, solvers,
                topology, vsr)
 from .api import CFNSession, PlacementSpec
 from .federation import (FederatedBreakdown, FederatedSession,
-                         RegionPartition, federated_breakdown)
+                         RegionPartition, federated_breakdown,
+                         solve_portfolio_batched)
 from .dynamic import (SCENARIOS, ChurnScenario, OnlineEmbedder, ServiceEvent,
                       churn_trace, diurnal_rate, poisson_timeline, replay)
 from .embed import embed as embed_vsrs, savings_vs_baseline
@@ -15,7 +16,7 @@ from .power import (PlacementAux, PlacementProblem, PlacementState,
                     build_problem, delta_move, delta_sweep, detach_vsrs,
                     evaluate, init_state, objective, service_loads,
                     warm_state)
-from .solvers import SolveResult, solve_portfolio, solve_portfolio_batched
+from .solvers import SolveResult, solve_portfolio
 from .topology import (CFNTopology, datacenter_topology, federated_scale,
                        nsfnet_topology, paper_topology)
 from .vsr import VSRBatch, from_layer_costs, random_vsrs

@@ -44,7 +44,7 @@ def diurnal_rate(t_h, base_rate: float, peak_rate: float,
     ``peak_hour`` -- the evening-peak shape of Yosuf et al.'s demand
     profiles.  Accepts scalars or arrays.
     """
-    phase = 2.0 * np.pi * (np.asarray(t_h, np.float64) - peak_hour) / 24.0
+    phase = 2.0 * np.pi * (np.asarray(t_h, np.float64) - peak_hour) / 24.0  # tracelint: allow[CFN102]
     return base_rate + (peak_rate - base_rate) * 0.5 * (1.0 + np.cos(phase))
 
 
@@ -722,7 +722,7 @@ class OnlineEmbedder:
             prev_viol = (0.0 if prev[6] is None
                          else float(prev[6].breakdown.violation))
         res = solvers.resolve_incremental(
-            self._problem, np.asarray(st.X), key=self._split_key(),
+            self._problem, key=self._split_key(),
             changed_rows=[row], state=st, spec=self.spec,
             **self._resolve_kw(self._add_kw))
         reason = self._admit_reason(res, prev_power, prev_viol)
@@ -782,7 +782,7 @@ class OnlineEmbedder:
                         detached.lam),
             row_map=row_map)
         res = solvers.resolve_incremental(
-            self._problem, np.asarray(st.X), key=self._split_key(),
+            self._problem, key=self._split_key(),
             changed_rows=[], state=st, spec=self.spec,
             **self._resolve_kw(self._remove_kw))
         if self._defrag_due():
@@ -919,7 +919,7 @@ class OnlineEmbedder:
             return res
         kw = self._add_kw if moved_new else self._remove_kw
         res = solvers.resolve_incremental(
-            self._problem, np.asarray(st.X), key=self._split_key(),
+            self._problem, key=self._split_key(),
             changed_rows=moved_new, state=st, spec=self.spec,
             **self._resolve_kw(kw))
         if self._defrag_due():

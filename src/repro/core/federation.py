@@ -25,7 +25,7 @@ solver unchanged underneath:
     ``PlacementSpec.region_affinity`` / ``region_anti_affinity``),
     decomposes the workload into per-region placement problems, and runs
     the per-region portfolios through
-    ``solvers.solve_portfolio_batched`` -- the existing delta-engine
+    ``solve_portfolio_batched`` (below) -- the existing delta-engine
     sweep/anneal primitives vmapped across the region axis under one
     trace.  A top-level coordinator pass then prices inter-region traffic
     into Eq.(1) (exact float64 per-node accounting, see
@@ -61,6 +61,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from . import dynamic, power, solvers
@@ -68,7 +69,8 @@ from . import vsr as vsr_mod
 from .topology import CFNTopology
 
 __all__ = ["Region", "RegionPartition", "ServicePlan", "FederatedBreakdown",
-           "FederatedResult", "FederatedSession", "federated_breakdown"]
+           "FederatedResult", "FederatedSession", "federated_breakdown",
+           "solve_portfolio_batched", "stack_problems", "stack_auxes"]
 
 _REGION_RE = re.compile(r"^r(\d+)_")
 
@@ -388,13 +390,13 @@ def _loads_f64(problem: power.PlacementProblem, X: np.ndarray):
     X = np.where(np.asarray(p.fixed_mask), np.asarray(p.fixed_node),
                  np.asarray(X))
     Xf = X.reshape(-1)
-    omega = np.zeros(p.P, np.float64)
-    theta = np.zeros(p.P, np.float64)
-    lam = np.zeros(p.N, np.float64)
-    np.add.at(omega, Xf, np.asarray(p.F, np.float64).reshape(-1))
+    omega = np.zeros(p.P, np.float64)  # tracelint: allow[CFN102]
+    theta = np.zeros(p.P, np.float64)  # tracelint: allow[CFN102]
+    lam = np.zeros(p.N, np.float64)  # tracelint: allow[CFN102]
+    np.add.at(omega, Xf, np.asarray(p.F, np.float64).reshape(-1))  # tracelint: allow[CFN102]
     rt = np.asarray(p.route_idx)
     for s, d, h in zip(np.asarray(p.link_src), np.asarray(p.link_dst),
-                       np.asarray(p.link_h, np.float64)):
+                       np.asarray(p.link_h, np.float64)):  # tracelint: allow[CFN102]
         b, e = int(Xf[s]), int(Xf[d])
         theta[b] += h
         if e != b:
@@ -426,9 +428,9 @@ def federated_breakdown(partition: RegionPartition,
     """
     topo = partition.topo
     P, N = topo.P, topo.N
-    omega = np.zeros(P, np.float64)
-    theta = np.zeros(P, np.float64)
-    lam = np.zeros(N, np.float64)
+    omega = np.zeros(P, np.float64)  # tracelint: allow[CFN102]
+    theta = np.zeros(P, np.float64)  # tracelint: allow[CFN102]
+    lam = np.zeros(N, np.float64)  # tracelint: allow[CFN102]
     for g, prob, X in region_states:
         reg = partition.regions[g]
         om, th, lm = _loads_f64(prob, X)
@@ -454,7 +456,7 @@ def federated_breakdown(partition: RegionPartition,
     per_net, per_proc, violation = eq_terms_f64(
         topo.proc_param_arrays(), topo.net_param_arrays(), omega, theta,
         lam)
-    regional = np.zeros(partition.G, np.float64)
+    regional = np.zeros(partition.G, np.float64)  # tracelint: allow[CFN102]
     for reg in partition.regions:
         regional[reg.index] = (per_proc[reg.proc_ids].sum()
                                + per_net[reg.net_ids].sum())
@@ -463,6 +465,205 @@ def federated_breakdown(partition: RegionPartition,
         total_w=float(per_proc.sum() + per_net.sum()),
         regional_w=regional, inter_region_w=inter,
         violation=float(violation), per_proc_w=per_proc, per_net_w=per_net)
+
+
+# ---------------------------------------------------------------------------
+# Batched per-region portfolio: stacked problems, ONE vmapped compile
+# ---------------------------------------------------------------------------
+#
+# The partition above decomposes a multi-region substrate into G per-region
+# PlacementProblems padded to ONE shape bucket (P_pad/N_pad/K_pad/R_pad/
+# V_pad identical across regions), so the whole fleet of regional
+# portfolios runs as a single vmapped program: warm-start init, coordinate
+# sweeps, and the Metropolis delta scan are all the EXISTING jitted solver
+# primitives (``solvers._sweep``, ``solvers._anneal_scan_delta``) lifted
+# over a leading region axis.  One trace covers every region -- the compile
+# count lands in ``solvers.TRACE_COUNTS["solve_regions"]`` via
+# ``solvers.count_traces`` (rule CFN104) and is asserted by tests.
+
+
+def _pad_links(problem: power.PlacementProblem, L: int) -> power.PlacementProblem:
+    """Widen the virtual-link arrays to length ``L`` with zero-bitrate
+    self-loops: a 0-Mbps link contributes exactly nothing to any load
+    tensor or delta, so padded problems evaluate identically (regions
+    carry different link counts; stacking needs one L).  Pad loops are
+    spread round-robin over the flat VM space so no single VM's incident
+    degree D inflates with the pad count."""
+    import dataclasses
+    d = L - int(problem.link_src.shape[0])
+    if d <= 0:
+        return problem
+    J = problem.R * problem.V
+    ids = jnp.asarray(np.arange(d) % J, problem.link_src.dtype)
+    return dataclasses.replace(
+        problem,
+        link_src=jnp.concatenate([problem.link_src, ids]),
+        link_dst=jnp.concatenate([problem.link_dst, ids]),
+        link_h=jnp.concatenate([problem.link_h,
+                                jnp.zeros(d, problem.link_h.dtype)]))
+
+
+def stack_problems(problems: Sequence[power.PlacementProblem]
+                   ) -> power.PlacementProblem:
+    """Stack same-shaped problems along a new leading (region) axis.
+
+    Every leaf must already share its shape across regions (the federation
+    pads regions to one bucket and ``_pad_links`` evens the link counts);
+    ``route_dense`` must be all-present or all-absent (same P_pad implies
+    that)."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), problems[0],
+                                  *problems[1:])
+
+
+def stack_auxes(auxes: Sequence[power.PlacementAux],
+                d_pad: Optional[int] = None,
+                m_pad: Optional[int] = None) -> power.PlacementAux:
+    """Stack per-problem auxes, padding the incident-link width D and the
+    free-position count M to the fleet maxima (or the explicit ``d_pad``/
+    ``m_pad`` buckets, so re-solves after workload redistribution keep the
+    compiled shape).
+
+    D padding appends no-op links (``other = self``, zero bitrate); M
+    padding repeats each region's first free position -- a repeated sweep /
+    proposal position is a harmless re-sweep (`solvers._pad_positions`
+    semantics).  Every region must have >= 1 free position (the federation
+    guarantees this by construction)."""
+    D = max(max(int(a.inc_h.shape[1]) for a in auxes), d_pad or 0)
+    M = max(max(int(a.free_pos.shape[0]) for a in auxes), m_pad or 0)
+    io, ih, isrc, fp, ff = [], [], [], [], []
+    for a in auxes:
+        J, d = a.inc_other.shape
+        m = a.free_pos.shape[0]
+        if m == 0:
+            raise ValueError("stack_auxes: a stacked problem has no free "
+                             "position (everything pinned)")
+        self_col = np.broadcast_to(np.arange(J, dtype=np.int32)[:, None],
+                                   (J, D - d))
+        io.append(np.concatenate([np.asarray(a.inc_other), self_col], 1))
+        ih.append(np.concatenate(
+            [np.asarray(a.inc_h), np.zeros((J, D - d), np.float32)], 1))
+        isrc.append(np.concatenate(
+            [np.asarray(a.inc_src), np.zeros((J, D - d), bool)], 1))
+        pos = np.asarray(a.free_pos)
+        fp.append(np.concatenate([pos, np.tile(pos[:1], (M - m, 1))]))
+        flat = np.asarray(a.free_flat)
+        ff.append(np.concatenate([flat, np.tile(flat[:1], M - m)]))
+    j = jnp.asarray
+    return power.PlacementAux(
+        inc_other=j(np.stack(io)), inc_h=j(np.stack(ih)),
+        inc_src=j(np.stack(isrc)), free_pos=j(np.stack(fp)),
+        free_flat=j(np.stack(ff)))
+
+
+@solvers.count_traces("solve_regions")
+def _solve_regions_impl(problems, auxes, X0, eligible, positions, rand_chains,
+                        j_prop, p_prop, u_prop, temps, n_sweeps: int):
+    """One vmapped program over the stacked region axis: init -> n_sweeps
+    coordinate sweeps -> (optional) Metropolis delta scan -> best-of.
+
+    All inputs carry a leading [G] axis except ``temps`` [S]; the anneal
+    phase is compiled in only when the proposal stream is non-empty
+    (static shape)."""
+    S = j_prop.shape[1]
+
+    def one_region(prob, aux, X0r, el, pos, rand, jp, pp_, up):
+        st = power.init_state(prob, X0r)
+        for _ in range(n_sweeps):
+            st, _ = solvers._sweep(prob, aux, st, pos, el)
+        # exact refresh (kills float32 drift before the best-of compare)
+        st = power.init_state(prob, st.X)
+        X_best, obj_best = st.X, st.obj
+        if S > 0:
+            n_chains = rand.shape[0]
+            keep = (jnp.arange(n_chains) == 0)[:, None, None]
+            Xc = jnp.where(keep, X_best[None], rand)
+            Xc = jax.vmap(lambda x: power.apply_pins(prob, x))(Xc)
+            bX, bobj, _ = solvers._anneal_scan_delta(prob, aux, Xc, jp, pp_,
+                                                     up, temps)
+            bobj = power.objective(prob, bX)  # exact re-score (drift hygiene)
+            better = bobj < obj_best
+            X_best = jnp.where(better, bX, X_best)
+            obj_best = jnp.where(better, bobj, obj_best)
+        return X_best, obj_best
+
+    return jax.vmap(one_region)(problems, auxes, X0, eligible, positions,
+                                rand_chains, j_prop, p_prop, u_prop)
+
+
+_solve_regions_jit = jax.jit(_solve_regions_impl,
+                             static_argnames=("n_sweeps",))
+
+# effort tier -> (coordinate sweeps, Metropolis steps, chains) per region
+_BATCH_EFFORT = {"quick": (2, 0, 0), "standard": (2, 2000, 8),
+                 "high": (3, 6000, 16)}
+
+
+def solve_portfolio_batched(problems: Sequence[power.PlacementProblem],
+                            X0: Sequence[np.ndarray],
+                            eligible: Sequence[np.ndarray],
+                            spec=None,
+                            key: Optional[jax.Array] = None,
+                            ) -> tuple[np.ndarray, np.ndarray]:
+    """Solve G same-bucket placement problems under ONE vmapped compile.
+
+    The batched counterpart of ``solvers.solve_portfolio`` for federated
+    fleets: per-region warm starts ``X0`` [G, R, V] are swept and annealed
+    by the same delta-engine primitives the flat portfolio uses, vectorized
+    over the region axis (one trace for any G at a given shape bucket --
+    re-solves after coordinator migrations hit the jit cache).
+
+    ``eligible`` [G][R, P] bool is mandatory here (the federation always
+    carries at least the real-node mask excluding shape-padding nodes).
+    Returns ``(X [G, R, V], objective [G])`` as numpy.
+    """
+    if not problems:
+        raise ValueError("solve_portfolio_batched needs >= 1 problem")
+    key = jax.random.PRNGKey(0) if key is None else key
+    effort = getattr(spec, "effort", "standard")
+    n_sweeps, n_steps, n_chains = _BATCH_EFFORT[effort]
+    G = len(problems)
+    R, V, P = problems[0].R, problems[0].V, problems[0].P
+    # bucket every workload-dependent shape (L links, D degree, M free
+    # positions) so ONE compile covers any service-to-region distribution
+    # at a given substrate bucket -- coordinator migration re-solves and
+    # same-bucket churn all hit the jit cache
+    L = solvers._pow2(max(int(p.link_src.shape[0]) for p in problems))
+    problems = [_pad_links(p, L) for p in problems]
+    auxes = [power.build_aux(p) for p in problems]
+    d_pad = solvers._pow2(max(int(a.inc_h.shape[1]) for a in auxes))
+    m_pad = R * max(1, V - 1)
+    stacked = stack_problems(problems)
+    aux_stacked = stack_auxes(auxes, d_pad=d_pad, m_pad=m_pad)
+    el_j = jnp.asarray(np.stack([np.asarray(e, bool) for e in eligible]))
+    X0_j = jnp.asarray(np.stack([np.asarray(x, np.int32) for x in X0]))
+    # per-region proposal streams + eligible chain restarts (host-side RNG;
+    # the jit consumes them as data, so one trace covers the fleet)
+    n_ch = max(1, n_chains)
+    jp = np.zeros((G, max(0, n_steps), n_ch), np.int32)
+    pp_ = np.zeros_like(jp)
+    up = np.zeros(jp.shape, np.float32)
+    rand = np.zeros((G, n_ch, R, V), np.int32)
+    for g, (prob, aux) in enumerate(zip(problems, auxes)):
+        key, kp, kr = jax.random.split(key, 3)
+        if n_steps > 0:   # rand/proposals are dead when anneal compiles out
+            el_np, cnt, cand = solvers._eligible_np(eligible[g])
+            fi, p_prop, u_prop = solvers._anneal_proposals(
+                kp, aux, n_steps, n_ch, P, V=V, cnt=cnt, cand=cand)
+            jp[g] = np.asarray(aux.free_flat[fi])
+            pp_[g] = np.asarray(p_prop)
+            up[g] = np.asarray(u_prop)
+            u_r = jax.random.uniform(kr, (n_ch, prob.R, V))
+            rand[g] = np.asarray(solvers._sample_eligible(
+                u_r, jnp.arange(prob.R)[None, :, None],
+                jnp.asarray(cnt), jnp.asarray(cand)))
+    temps = jnp.asarray(
+        50.0 * (0.05 / 50.0) ** (np.arange(max(1, n_steps))
+                                 / max(1, n_steps - 1)), jnp.float32)
+    bX, bobj = _solve_regions_jit(
+        stacked, aux_stacked, X0_j, el_j, aux_stacked.free_pos,
+        jnp.asarray(rand), jnp.asarray(jp), jnp.asarray(pp_),
+        jnp.asarray(up), temps, n_sweeps=n_sweeps)
+    return np.asarray(bX), np.asarray(bobj)
 
 
 # ---------------------------------------------------------------------------
@@ -490,7 +691,7 @@ class FederatedSession:
 
     ``solve(vsrs)`` is the batch path: assign services to regions, solve
     every region's portfolio under ONE vmapped compile
-    (``solvers.solve_portfolio_batched``), then run the coordinator --
+    (``solve_portfolio_batched``), then run the coordinator --
     exact federated accounting, inter-region pricing, cross-region
     migration on regional ``region_power_budget_w`` breaches -- and seed
     the per-region online engines from the result.  ``add``/``remove``
@@ -611,7 +812,7 @@ class FederatedSession:
         b = self.spec.region_power_budget_w
         if b is None:
             return None
-        b = np.asarray(b, np.float64)
+        b = np.asarray(b, np.float64)  # tracelint: allow[CFN102]
         return float(b) if b.ndim == 0 else float(b[g])
 
     def _row_constraint(self, kind: str, row: int) -> int:
@@ -785,7 +986,7 @@ class FederatedSession:
         while True:   # every applied migration is followed by a re-solve
             plans, problems, eligibles, X0s, region_rows = self._decompose(
                 services, sids, assigned)
-            X, obj = solvers.solve_portfolio_batched(
+            X, obj = solve_portfolio_batched(
                 problems, X0s, eligibles, spec=self.spec,
                 key=self._split_key())
             bd = self._batch_breakdown(plans, problems, X)

@@ -864,15 +864,15 @@ def service_loads(problem: PlacementProblem, X,
     Xf = X.reshape(-1)
     P, N, V = p.P, p.N, p.V
     rows = np.atleast_1d(np.asarray(rows, np.int64))
-    omega = np.zeros(P, np.float64)
-    tm = np.zeros((P, P), np.float64)
-    theta = np.zeros(P, np.float64)
-    lam = np.zeros(N, np.float64)
-    F = np.asarray(p.F, np.float64)
+    omega = np.zeros(P, np.float64)  # tracelint: allow[CFN102]
+    tm = np.zeros((P, P), np.float64)  # tracelint: allow[CFN102]
+    theta = np.zeros(P, np.float64)  # tracelint: allow[CFN102]
+    lam = np.zeros(N, np.float64)  # tracelint: allow[CFN102]
+    F = np.asarray(p.F, np.float64)  # tracelint: allow[CFN102]
     np.add.at(omega, X[rows].reshape(-1), F[rows].reshape(-1))
     ls = np.asarray(p.link_src)
     ld = np.asarray(p.link_dst)
-    lh = np.asarray(p.link_h, np.float64)
+    lh = np.asarray(p.link_h, np.float64)  # tracelint: allow[CFN102]
     sel = np.isin(ls // V, rows)
     rt = np.asarray(p.route_idx)
     for s, d, h in zip(ls[sel], ld[sel], lh[sel]):
@@ -1017,10 +1017,10 @@ def attribute_power(problem: PlacementProblem, X,
     X = np.asarray(apply_pins(p, jnp.asarray(X, jnp.int32)))
     bd = evaluate(p, jnp.asarray(X)) if breakdown is None else breakdown
     R = p.R if n_rows is None else int(n_rows)
-    per_proc = np.asarray(bd.per_proc, np.float64)
-    per_net = np.asarray(bd.per_net, np.float64)
-    E = np.asarray(p.E, np.float64)
-    EL = np.asarray(p.EL, np.float64)
+    per_proc = np.asarray(bd.per_proc, np.float64)  # tracelint: allow[CFN102]
+    per_net = np.asarray(bd.per_net, np.float64)  # tracelint: allow[CFN102]
+    E = np.asarray(p.E, np.float64)  # tracelint: allow[CFN102]
+    EL = np.asarray(p.EL, np.float64)  # tracelint: allow[CFN102]
     w_proc = np.zeros((R, p.P))
     w_net = np.zeros((R, p.N))
     for r in range(R):

@@ -32,6 +32,7 @@ search, exhaustive enumeration, and the relaxation.
 """
 from __future__ import annotations
 
+import functools
 import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
@@ -68,6 +69,38 @@ class SolveResult:
         return float(self.breakdown.violation) <= 1e-6
 
 
+# Fresh-compile counters for the jitted solver entries.  Tests and
+# benchmarks assert on these to pin the compile-stability story (one trace
+# per shape bucket; fail/recover events never retrace) -- see
+# tests/test_faults.py, tests/test_federation.py, benchmarks/kernel_bench.py.
+TRACE_COUNTS: Dict[str, int] = {}
+
+
+def count_traces(name: str):
+    """Mark a jitted solver entry: ``TRACE_COUNTS[name]`` ticks once per
+    fresh TRACE (i.e. per compile), not per call.
+
+    Apply UNDER ``jax.jit`` -- the wrapper body then runs only while jax
+    traces the function, so cache hits leave the counter untouched::
+
+        @jax.jit
+        @count_traces("sweep")
+        def _sweep(...): ...
+
+    ``functools.wraps`` carries the signature through (``__wrapped__``),
+    so ``jax.jit(..., static_argnames=...)`` over a counted function still
+    resolves argument names.  Rule CFN104 (``repro.analysis``) enforces
+    this pattern on every jitted entry here and in ``core.federation``.
+    """
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            TRACE_COUNTS[name] = TRACE_COUNTS.get(name, 0) + 1
+            return fn(*args, **kwargs)
+        return wrapper
+    return deco
+
+
 _evaluate_jit = jax.jit(evaluate)  # shared wrapper: one trace per shape
 
 
@@ -90,8 +123,10 @@ def fixed_layer(problem: PlacementProblem, topo: CFNTopology,
     (the paper's observed behaviour at 20 VSRs)."""
     nodes = topo.layer_indices(layer)
     spill = topo.layer_indices(spill_layer)
+    # host-side FFD accounting, never traced
     cap = np.array([topo.proc_hw[p].cap_gflops * topo.proc_hw[p].n_servers
-                    for p in range(topo.P)], dtype=np.float64)
+                    for p in range(topo.P)],
+                   dtype=np.float64)  # tracelint: allow[CFN102]
     load = np.zeros(topo.P)
     F = np.asarray(problem.F)
     fixed_mask = np.asarray(problem.fixed_mask)
@@ -172,19 +207,30 @@ def _sample_eligible(u: jnp.ndarray, rows: jnp.ndarray,
 
 
 def _project_eligible(problem: PlacementProblem, X,
-                      el_np: np.ndarray) -> jnp.ndarray:
+                      el_np: np.ndarray):
     """Move every free VM sitting on an ineligible node to its row's first
     eligible node (warm starts handed to masked solvers must start inside
-    the constraint set; the solver then optimizes within it)."""
+    the constraint set; the solver then optimizes within it).
+
+    Returns ``(X_proj, moved)``.  ``moved`` is a host-side bool (any VM
+    actually relocated) computed from the numpy ``bad`` mask, so warm
+    callers can decide whether to rebuild state WITHOUT a device round
+    trip -- comparing ``X_proj`` against the incumbent on-device
+    (``bool((X0 == state.X).all())``) is exactly the per-event blocking
+    sync rule CFN101 exists to flag.  A bad entry always relocates (its
+    current node is ineligible, the target is eligible), and pins are
+    never bad, so ``moved`` is exact."""
     Xn = np.asarray(X).copy()
     fixed = np.asarray(problem.fixed_mask)
     first = el_np.argmax(axis=1).astype(Xn.dtype)
     rows = np.arange(Xn.shape[0])[:, None]
     bad = ~el_np[rows, Xn] & ~fixed
-    return jnp.asarray(np.where(bad, first[:, None], Xn), jnp.int32)
+    proj = jnp.asarray(np.where(bad, first[:, None], Xn), jnp.int32)
+    return proj, bool(bad.any())
 
 
 @jax.jit
+@count_traces("sweep")
 def _sweep(problem: PlacementProblem, aux: PlacementAux,
            state: PlacementState, positions: jnp.ndarray,
            eligible: Optional[jnp.ndarray] = None):
@@ -196,10 +242,6 @@ def _sweep(problem: PlacementProblem, aux: PlacementAux,
     the SLA hop/eligibility constraint of embed_latency_bounded threaded
     into the sweep.  ``positions`` may contain repeated rows (shape-bucket
     padding): re-sweeping a VM is idempotent up to its own argmin."""
-    # runs at TRACE time only: each increment is one fresh compile of this
-    # kernel (benchmarks assert fail/recover events stay on warm buckets)
-    TRACE_COUNTS["sweep"] = TRACE_COUNTS.get("sweep", 0) + 1
-
     def body(state, pos):
         r, v = pos[0], pos[1]
         obj_all = delta_sweep(problem, aux, state, r, v)
@@ -369,7 +411,8 @@ def anneal(problem: PlacementProblem, key: jax.Array, X0: np.ndarray,
     k_init, k_prop = jax.random.split(key)
     X = apply_pins(problem, jnp.asarray(X0, jnp.int32))
     if el_np is not None:
-        X = apply_pins(problem, _project_eligible(problem, X, el_np))
+        Xp, _ = _project_eligible(problem, X, el_np)
+        X = apply_pins(problem, Xp)
     Xc = jnp.broadcast_to(X, (n_chains, R, V)).copy()
     # randomize all but chain 0 (keep one chain at the warm start)
     if el_np is None:
@@ -407,11 +450,11 @@ def anneal(problem: PlacementProblem, key: jax.Array, X0: np.ndarray,
 
 
 @jax.jit
+@count_traces("anneal_delta")
 def _anneal_scan_delta(problem: PlacementProblem, aux: PlacementAux,
                        Xc, j_prop, p_prop, u_prop, temps):
     """Metropolis chains on incremental per-chain load state (module-level
     jit: compiles once per problem/chain/step shape, not per solve)."""
-    TRACE_COUNTS["anneal_delta"] = TRACE_COUNTS.get("anneal_delta", 0) + 1
     n_chains, R, V = Xc.shape
     Xf = Xc.reshape(n_chains, -1)
     omega, theta, lam, obj = batched_hard_loads(problem, Xc)
@@ -445,6 +488,7 @@ def _anneal_scan_delta(problem: PlacementProblem, aux: PlacementAux,
 
 
 @jax.jit
+@count_traces("anneal_full")
 def _anneal_scan_full(problem: PlacementProblem, Xc, j_prop, p_prop,
                       u_prop, temps):
     """Legacy annealing: one full batched objective per Metropolis step.
@@ -494,7 +538,7 @@ def genetic(problem: PlacementProblem, key: jax.Array, X0: np.ndarray,
         Xp = jax.random.randint(k_init, (pop, R, V), 0, P, jnp.int32)
         cnt_j = cand_j = None
     else:
-        elite = _project_eligible(problem, elite, el_np)
+        elite, _ = _project_eligible(problem, elite, el_np)
         cnt_j, cand_j = jnp.asarray(cnt_np), jnp.asarray(cand_np)
         u0 = jax.random.uniform(k_init, (pop, R, V))
         Xp = _sample_eligible(u0, jnp.arange(R)[None, :, None],
@@ -604,7 +648,8 @@ def _pad_positions(pos: np.ndarray, m: Optional[int]) -> np.ndarray:
         [pos, np.tile(pos[:1], (m - pos.shape[0], 1))])
 
 
-def resolve_incremental(problem: PlacementProblem, prev_X: np.ndarray,
+def resolve_incremental(problem: PlacementProblem,
+                        prev_X: Optional[np.ndarray] = None,
                         key: Optional[jax.Array] = None,
                         changed_rows: Optional[Sequence[int]] = None,
                         state: Optional[PlacementState] = None,
@@ -642,6 +687,11 @@ def resolve_incremental(problem: PlacementProblem, prev_X: np.ndarray,
 
     This is LOCAL re-optimization -- a periodic full-portfolio defrag
     (`solve_portfolio`) bounds its drift; see core.dynamic.OnlineEmbedder.
+
+    Warm callers that already carry a ``state`` (``power.warm_state``)
+    should pass ``prev_X=None``: the previous placement is only read when
+    ``state`` is absent, and materializing ``np.asarray(state.X)`` just to
+    fill the argument is a dead device->host transfer per churn event.
     """
     pick = lambda v, sv, d: (v if v is not None
                              else (sv if sv is not None else d))
@@ -658,6 +708,8 @@ def resolve_incremental(problem: PlacementProblem, prev_X: np.ndarray,
     key = jax.random.PRNGKey(0) if key is None else key
     aux = build_aux(problem)
     if state is None:
+        if prev_X is None:
+            raise ValueError("resolve_incremental needs prev_X or state")
         state = init_state(problem, jnp.asarray(prev_X, jnp.int32))
     # else: the caller-carried state (power.warm_state) is trusted as-is --
     # that's the O(V*(N+P)) event path; candidates are re-scored exactly
@@ -672,9 +724,9 @@ def resolve_incremental(problem: PlacementProblem, prev_X: np.ndarray,
         # the warm incumbent may predate the mask (a substrate fault can
         # arrive after placement): project it first, so a mask-violating
         # placement can never win the exact-objective argmin below
-        X0 = apply_pins(problem, _project_eligible(problem, state.X, el_np))
-        if not bool((X0 == state.X).all()):
-            state = init_state(problem, X0)
+        X0, moved = _project_eligible(problem, state.X, el_np)
+        if moved:
+            state = init_state(problem, apply_pins(problem, X0))
     cands = [state.X]
     pos_changed = free[np.isin(free[:, 0], changed_rows)]
 
@@ -786,24 +838,11 @@ def solve_portfolio(problem: PlacementProblem, topo: CFNTopology,
                        method=f"cfn-milp({best.method})", history=best.history)
 
 
-# ---------------------------------------------------------------------------
-# Batched (federated) portfolio: stacked problems, ONE vmapped compile
-# ---------------------------------------------------------------------------
-#
-# The federation layer (core.federation) decomposes a multi-region substrate
-# into G per-region PlacementProblems padded to ONE shape bucket
-# (P_pad/N_pad/K_pad/R_pad/V_pad identical across regions), so the whole
-# fleet of regional portfolios runs as a single vmapped program: warm-start
-# init, coordinate sweeps, and the Metropolis delta scan are all the
-# EXISTING jitted solver primitives (`_sweep`, `_anneal_scan_delta`) lifted
-# over a leading region axis.  One trace covers every region -- the compile
-# count is asserted by tests via TRACE_COUNTS.
-
-TRACE_COUNTS: Dict[str, int] = {}
-
-
 def _pow2(n: int, lo: int = 2) -> int:
-    """Next power-of-two bucket >= max(n, 1) (compile-shape hygiene)."""
+    """Next power-of-two bucket >= max(n, 1) (compile-shape hygiene): the
+    ONE bucketing policy, shared by the online engine's row/column padding
+    (``core.dynamic._bucket_rows``) and the federated batch path
+    (``core.federation.solve_portfolio_batched``)."""
     n = max(n, 1)
     b = lo
     while b < n:
@@ -811,186 +850,20 @@ def _pow2(n: int, lo: int = 2) -> int:
     return b
 
 
-def _pad_links(problem: PlacementProblem, L: int) -> PlacementProblem:
-    """Widen the virtual-link arrays to length ``L`` with zero-bitrate
-    self-loops: a 0-Mbps link contributes exactly nothing to any load
-    tensor or delta, so padded problems evaluate identically (regions
-    carry different link counts; stacking needs one L).  Pad loops are
-    spread round-robin over the flat VM space so no single VM's incident
-    degree D inflates with the pad count."""
-    import dataclasses
-    d = L - int(problem.link_src.shape[0])
-    if d <= 0:
-        return problem
-    J = problem.R * problem.V
-    ids = jnp.asarray(np.arange(d) % J, problem.link_src.dtype)
-    return dataclasses.replace(
-        problem,
-        link_src=jnp.concatenate([problem.link_src, ids]),
-        link_dst=jnp.concatenate([problem.link_dst, ids]),
-        link_h=jnp.concatenate([problem.link_h,
-                                jnp.zeros(d, problem.link_h.dtype)]))
+# The batched (federated) portfolio -- stack_problems / stack_auxes /
+# solve_portfolio_batched, the vmapped-over-regions lift of the jitted
+# primitives above -- lives in core.federation, its only consumer.  Lazy
+# aliases keep the old ``solvers.solve_portfolio_batched`` imports working.
+_FEDERATION_MOVED = ("solve_portfolio_batched", "stack_problems",
+                     "stack_auxes", "_pad_links", "_solve_regions_impl",
+                     "_solve_regions_jit", "_BATCH_EFFORT")
 
 
-def stack_problems(problems: Sequence[PlacementProblem]) -> PlacementProblem:
-    """Stack same-shaped problems along a new leading (region) axis.
-
-    Every leaf must already share its shape across regions (the federation
-    pads regions to one bucket and ``_pad_links`` evens the link counts);
-    ``route_dense`` must be all-present or all-absent (same P_pad implies
-    that)."""
-    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), problems[0],
-                                  *problems[1:])
-
-
-def stack_auxes(auxes: Sequence[PlacementAux],
-                d_pad: Optional[int] = None,
-                m_pad: Optional[int] = None) -> PlacementAux:
-    """Stack per-problem auxes, padding the incident-link width D and the
-    free-position count M to the fleet maxima (or the explicit ``d_pad``/
-    ``m_pad`` buckets, so re-solves after workload redistribution keep the
-    compiled shape).
-
-    D padding appends no-op links (``other = self``, zero bitrate); M
-    padding repeats each region's first free position -- a repeated sweep /
-    proposal position is a harmless re-sweep (`solvers._pad_positions`
-    semantics).  Every region must have >= 1 free position (the federation
-    guarantees this by construction)."""
-    D = max(max(int(a.inc_h.shape[1]) for a in auxes), d_pad or 0)
-    M = max(max(int(a.free_pos.shape[0]) for a in auxes), m_pad or 0)
-    io, ih, isrc, fp, ff = [], [], [], [], []
-    for a in auxes:
-        J, d = a.inc_other.shape
-        m = a.free_pos.shape[0]
-        if m == 0:
-            raise ValueError("stack_auxes: a stacked problem has no free "
-                             "position (everything pinned)")
-        self_col = np.broadcast_to(np.arange(J, dtype=np.int32)[:, None],
-                                   (J, D - d))
-        io.append(np.concatenate([np.asarray(a.inc_other), self_col], 1))
-        ih.append(np.concatenate(
-            [np.asarray(a.inc_h), np.zeros((J, D - d), np.float32)], 1))
-        isrc.append(np.concatenate(
-            [np.asarray(a.inc_src), np.zeros((J, D - d), bool)], 1))
-        pos = np.asarray(a.free_pos)
-        fp.append(np.concatenate([pos, np.tile(pos[:1], (M - m, 1))]))
-        flat = np.asarray(a.free_flat)
-        ff.append(np.concatenate([flat, np.tile(flat[:1], M - m)]))
-    j = jnp.asarray
-    return PlacementAux(inc_other=j(np.stack(io)), inc_h=j(np.stack(ih)),
-                        inc_src=j(np.stack(isrc)), free_pos=j(np.stack(fp)),
-                        free_flat=j(np.stack(ff)))
-
-
-def _solve_regions_impl(problems, auxes, X0, eligible, positions, rand_chains,
-                        j_prop, p_prop, u_prop, temps, n_sweeps: int):
-    """One vmapped program over the stacked region axis: init -> n_sweeps
-    coordinate sweeps -> (optional) Metropolis delta scan -> best-of.
-
-    All inputs carry a leading [G] axis except ``temps`` [S]; the anneal
-    phase is compiled in only when the proposal stream is non-empty
-    (static shape)."""
-    TRACE_COUNTS["solve_regions"] = TRACE_COUNTS.get("solve_regions", 0) + 1
-    S = j_prop.shape[1]
-
-    def one_region(prob, aux, X0r, el, pos, rand, jp, pp_, up):
-        st = init_state(prob, X0r)
-        for _ in range(n_sweeps):
-            st, _ = _sweep(prob, aux, st, pos, el)
-        # exact refresh (kills float32 drift before the best-of compare)
-        st = init_state(prob, st.X)
-        X_best, obj_best = st.X, st.obj
-        if S > 0:
-            n_chains = rand.shape[0]
-            keep = (jnp.arange(n_chains) == 0)[:, None, None]
-            Xc = jnp.where(keep, X_best[None], rand)
-            Xc = jax.vmap(lambda x: apply_pins(prob, x))(Xc)
-            bX, bobj, _ = _anneal_scan_delta(prob, aux, Xc, jp, pp_, up,
-                                             temps)
-            bobj = objective(prob, bX)   # exact re-score (drift hygiene)
-            better = bobj < obj_best
-            X_best = jnp.where(better, bX, X_best)
-            obj_best = jnp.where(better, bobj, obj_best)
-        return X_best, obj_best
-
-    return jax.vmap(one_region)(problems, auxes, X0, eligible, positions,
-                                rand_chains, j_prop, p_prop, u_prop)
-
-
-_solve_regions_jit = jax.jit(_solve_regions_impl,
-                             static_argnames=("n_sweeps",))
-
-# effort tier -> (coordinate sweeps, Metropolis steps, chains) per region
-_BATCH_EFFORT = {"quick": (2, 0, 0), "standard": (2, 2000, 8),
-                 "high": (3, 6000, 16)}
-
-
-def solve_portfolio_batched(problems: Sequence[PlacementProblem],
-                            X0: Sequence[np.ndarray],
-                            eligible: Sequence[np.ndarray],
-                            spec=None,
-                            key: Optional[jax.Array] = None,
-                            ) -> tuple[np.ndarray, np.ndarray]:
-    """Solve G same-bucket placement problems under ONE vmapped compile.
-
-    The batched counterpart of ``solve_portfolio`` for federated fleets:
-    per-region warm starts ``X0`` [G, R, V] are swept and annealed by the
-    same delta-engine primitives the flat portfolio uses, vectorized over
-    the region axis (one trace for any G at a given shape bucket --
-    re-solves after coordinator migrations hit the jit cache).
-
-    ``eligible`` [G][R, P] bool is mandatory here (the federation always
-    carries at least the real-node mask excluding shape-padding nodes).
-    Returns ``(X [G, R, V], objective [G])`` as numpy.
-    """
-    if not problems:
-        raise ValueError("solve_portfolio_batched needs >= 1 problem")
-    key = jax.random.PRNGKey(0) if key is None else key
-    effort = getattr(spec, "effort", "standard")
-    n_sweeps, n_steps, n_chains = _BATCH_EFFORT[effort]
-    G = len(problems)
-    R, V, P = problems[0].R, problems[0].V, problems[0].P
-    # bucket every workload-dependent shape (L links, D degree, M free
-    # positions) so ONE compile covers any service-to-region distribution
-    # at a given substrate bucket -- coordinator migration re-solves and
-    # same-bucket churn all hit the jit cache
-    L = _pow2(max(int(p.link_src.shape[0]) for p in problems))
-    problems = [_pad_links(p, L) for p in problems]
-    auxes = [build_aux(p) for p in problems]
-    d_pad = _pow2(max(int(a.inc_h.shape[1]) for a in auxes))
-    m_pad = R * max(1, V - 1)
-    stacked = stack_problems(problems)
-    aux_stacked = stack_auxes(auxes, d_pad=d_pad, m_pad=m_pad)
-    el_j = jnp.asarray(np.stack([np.asarray(e, bool) for e in eligible]))
-    X0_j = jnp.asarray(np.stack([np.asarray(x, np.int32) for x in X0]))
-    # per-region proposal streams + eligible chain restarts (host-side RNG;
-    # the jit consumes them as data, so one trace covers the fleet)
-    n_ch = max(1, n_chains)
-    jp = np.zeros((G, max(0, n_steps), n_ch), np.int32)
-    pp_ = np.zeros_like(jp)
-    up = np.zeros(jp.shape, np.float32)
-    rand = np.zeros((G, n_ch, R, V), np.int32)
-    for g, (prob, aux) in enumerate(zip(problems, auxes)):
-        key, kp, kr = jax.random.split(key, 3)
-        if n_steps > 0:   # rand/proposals are dead when anneal compiles out
-            el_np, cnt, cand = _eligible_np(eligible[g])
-            fi, p_prop, u_prop = _anneal_proposals(
-                kp, aux, n_steps, n_ch, P, V=V, cnt=cnt, cand=cand)
-            jp[g] = np.asarray(aux.free_flat[fi])
-            pp_[g] = np.asarray(p_prop)
-            up[g] = np.asarray(u_prop)
-            u_r = jax.random.uniform(kr, (n_ch, prob.R, V))
-            rand[g] = np.asarray(_sample_eligible(
-                u_r, jnp.arange(prob.R)[None, :, None],
-                jnp.asarray(cnt), jnp.asarray(cand)))
-    temps = jnp.asarray(
-        50.0 * (0.05 / 50.0) ** (np.arange(max(1, n_steps))
-                                 / max(1, n_steps - 1)), jnp.float32)
-    bX, bobj = _solve_regions_jit(
-        stacked, aux_stacked, X0_j, el_j, aux_stacked.free_pos,
-        jnp.asarray(rand), jnp.asarray(jp), jnp.asarray(pp_),
-        jnp.asarray(up), temps, n_sweeps=n_sweeps)
-    return np.asarray(bX), np.asarray(bobj)
+def __getattr__(name: str):
+    if name in _FEDERATION_MOVED:
+        from . import federation
+        return getattr(federation, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def solve_cfn(problem: PlacementProblem, topo: CFNTopology,

@@ -1,0 +1,378 @@
+"""tracelint (repro.analysis) rule-catalog tests.
+
+Pure-AST: no jax import, no device work -- each rule gets one fixture
+source with a known violation (exact rule id + line asserted) and one
+clean snippet that must produce nothing.  Suppression is covered for
+both channels (per-line pragma, committed baseline) plus the CLI exit
+codes the CI gate relies on.
+"""
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (Finding, MAX_SCALE, analyze_source,
+                            apply_baseline, baseline_payload)
+from repro.analysis.engine import load_baseline
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def findings_for(src, path="<string>"):
+    return analyze_source(textwrap.dedent(src), path=path)
+
+
+def rules_of(findings):
+    return [(f.rule, f.line) for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# CFN101: retrace hazards
+# ---------------------------------------------------------------------------
+
+def test_cfn101_item_inside_jit():
+    fs = findings_for("""\
+        import jax
+
+        @jax.jit
+        def solve(x):
+            return x.item()
+    """)
+    assert ("CFN101", 5) in rules_of(fs)
+
+
+def test_cfn101_float_cast_reachable_from_scan_body():
+    # the hazard sits in a helper only reachable THROUGH the scan body
+    fs = findings_for("""\
+        import jax
+
+        def helper(x):
+            return float(x) + 1.0
+
+        def body(carry, x):
+            return carry, helper(x)
+
+        def run(xs):
+            return jax.lax.scan(body, 0.0, xs)
+    """)
+    assert ("CFN101", 4) in rules_of(fs)
+
+
+def test_cfn101_np_asarray_inside_vmap():
+    fs = findings_for("""\
+        import jax
+        import numpy as np
+
+        def per_row(x):
+            return np.asarray(x)
+
+        mapped = jax.vmap(per_row)
+    """)
+    assert ("CFN101", 5) in rules_of(fs)
+
+
+def test_cfn101_clean_static_casts_and_host_code():
+    # int(x.shape[0]) / float(Constant) are static; un-jitted host code
+    # may call float() freely
+    fs = findings_for("""\
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def solve(x):
+            n = int(x.shape[0])
+            return x * float(2.0) / n
+
+        def host_report(res):
+            return float(res), np.asarray(res)
+    """)
+    assert not [f for f in fs if f.rule == "CFN101"]
+
+
+# ---------------------------------------------------------------------------
+# CFN102: dtype discipline
+# ---------------------------------------------------------------------------
+
+def test_cfn102_float64_outside_whitelist():
+    fs = findings_for("""\
+        import numpy as np
+
+        def loads(F):
+            return np.zeros(4, np.float64)
+    """, path="src/repro/core/newmod.py")
+    assert ("CFN102", 4) in rules_of(fs)
+
+
+def test_cfn102_whitelisted_oracle_path_clean():
+    fs = findings_for("""\
+        import numpy as np
+
+        def eq_terms_f64(omega):
+            return np.asarray(omega, np.float64)
+    """, path="src/repro/kernels/ref.py")
+    assert not [f for f in fs if f.rule == "CFN102"]
+
+
+def test_cfn102_implicit_promotion_warns():
+    fs = findings_for("""\
+        import numpy as np
+
+        def loads(F):
+            return np.asarray(F, dtype=float)
+    """, path="src/repro/core/newmod.py")
+    hits = [f for f in fs if f.rule == "CFN102"]
+    assert hits and hits[0].severity == "warning" and hits[0].line == 4
+
+
+# ---------------------------------------------------------------------------
+# CFN103: pytree hygiene
+# ---------------------------------------------------------------------------
+
+_PYTREE_BAD = """\
+    import dataclasses
+    import jax
+
+    @jax.tree_util.register_pytree_node_class
+    @dataclasses.dataclass(frozen=True)
+    class Health:
+        node_up: object
+        link_up: object
+        epoch: int
+
+        def tree_flatten(self):
+            return (self.node_up, self.link_up), None
+
+        @classmethod
+        def tree_unflatten(cls, aux, children):
+            return cls(*children, epoch=0)
+"""
+
+
+def test_cfn103_unaccounted_field():
+    fs = findings_for(_PYTREE_BAD)
+    hits = [f for f in fs if f.rule == "CFN103"]
+    assert hits and hits[0].line == 11 and "epoch" in hits[0].message
+
+
+def test_cfn103_all_fields_accounted_clean():
+    fs = findings_for(_PYTREE_BAD.replace(
+        "return (self.node_up, self.link_up), None",
+        "return (self.node_up, self.link_up), self.epoch"))
+    assert not [f for f in fs if f.rule == "CFN103"]
+
+
+def test_cfn103_degrade_must_not_change_shape():
+    fs = findings_for("""\
+        import jax.numpy as jnp
+
+        def degrade(self, nodes):
+            up = jnp.concatenate([self.node_up, nodes])
+            return up
+    """)
+    assert ("CFN103", 4) in rules_of(fs)
+
+
+def test_cfn103_value_only_degrade_clean():
+    fs = findings_for("""\
+        import jax.numpy as jnp
+
+        def degrade(self, nodes):
+            return jnp.where(nodes, False, self.node_up)
+    """)
+    assert not [f for f in fs if f.rule == "CFN103"]
+
+
+# ---------------------------------------------------------------------------
+# CFN104: trace-counter coverage (enforced in core/solvers, core/federation)
+# ---------------------------------------------------------------------------
+
+def test_cfn104_uncounted_jit_entry_in_solvers():
+    fs = findings_for("""\
+        import jax
+
+        @jax.jit
+        def _sweep(problem, state):
+            return state
+    """, path="src/repro/core/solvers.py")
+    assert ("CFN104", 4) in rules_of(fs)
+
+
+def test_cfn104_counted_entry_clean_and_not_enforced_elsewhere():
+    counted = """\
+        import jax
+        from .solvers import count_traces
+
+        @jax.jit
+        @count_traces("sweep")
+        def _sweep(problem, state):
+            return state
+    """
+    fs = findings_for(counted, path="src/repro/core/solvers.py")
+    assert not [f for f in fs if f.rule == "CFN104"]
+    # same jit-without-counter source outside the enforced modules: clean
+    fs = findings_for("""\
+        import jax
+
+        @jax.jit
+        def helper(x):
+            return x
+    """, path="src/repro/core/power.py")
+    assert not [f for f in fs if f.rule == "CFN104"]
+
+
+def test_cfn104_counter_above_jit_is_flagged():
+    # count_traces ABOVE jit counts calls, not traces -- distinct finding
+    fs = findings_for("""\
+        import jax
+        from .solvers import count_traces
+
+        @count_traces("sweep")
+        @jax.jit
+        def _sweep(problem, state):
+            return state
+    """, path="src/repro/core/solvers.py")
+    hits = [f for f in fs if f.rule == "CFN104"]
+    assert hits and "UNDER" in hits[0].message
+
+
+# ---------------------------------------------------------------------------
+# CFN105: Pallas VMEM budget
+# ---------------------------------------------------------------------------
+
+def test_cfn105_over_budget_blockspec():
+    # 2048*2048 f32 = 16 MiB for ONE operand: over the 16 MiB budget
+    fs = findings_for("""\
+        import jax
+        from jax.experimental import pallas as pl
+
+        def kernel(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        def launch(x):
+            return pl.pallas_call(
+                kernel,
+                out_shape=jax.ShapeDtypeStruct((2048, 2048), x.dtype),
+                in_specs=[pl.BlockSpec((2048, 2048), lambda i: (0, 0))],
+                out_specs=pl.BlockSpec((2048, 2048), lambda i: (0, 0)),
+            )(x)
+    """)
+    hits = [f for f in fs if f.rule == "CFN105" and f.severity == "error"]
+    assert hits and "VMEM" in hits[0].message
+
+
+def test_cfn105_max_scale_names_resolve_and_fit():
+    # P=468 rounds through the documented max scale; small K tile fits
+    fs = findings_for("""\
+        import jax
+        from jax.experimental import pallas as pl
+
+        def kernel(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        def launch(x, P=468, K=14):
+            return pl.pallas_call(
+                kernel,
+                out_shape=jax.ShapeDtypeStruct((P, K), x.dtype),
+                in_specs=[pl.BlockSpec((P, K), lambda i: (0, 0))],
+                out_specs=pl.BlockSpec((P, K), lambda i: (0, 0)),
+            )(x)
+    """)
+    assert not [f for f in fs if f.rule == "CFN105"]
+    assert MAX_SCALE["P"] == 468 and MAX_SCALE["K"] == 14
+
+
+def test_cfn105_python_loop_over_traced_dim_in_kernel():
+    fs = findings_for("""\
+        import jax
+        from jax.experimental import pallas as pl
+
+        def kernel(x_ref, o_ref):
+            for i in range(x_ref.shape[0]):
+                o_ref[i] = x_ref[i]
+
+        def launch(x):
+            return pl.pallas_call(
+                kernel,
+                out_shape=jax.ShapeDtypeStruct((8, 8), x.dtype),
+                in_specs=[pl.BlockSpec((8, 8), lambda i: (0, 0))],
+                out_specs=pl.BlockSpec((8, 8), lambda i: (0, 0)),
+            )(x)
+    """)
+    hits = [f for f in fs if f.rule == "CFN105" and f.line == 5]
+    assert hits and "unroll" in hits[0].message
+
+
+# ---------------------------------------------------------------------------
+# suppression: pragma + baseline
+# ---------------------------------------------------------------------------
+
+def test_pragma_suppresses_same_line_and_next_line():
+    src = """\
+        import numpy as np
+
+        def loads(F):
+            x = np.zeros(4, np.float64)  # tracelint: allow[CFN102]
+            # deliberate host accounting  # tracelint: allow[CFN102]
+            y = np.zeros(4, np.float64)
+            return x + y
+    """
+    fs = findings_for(src, path="src/repro/core/newmod.py")
+    assert not [f for f in fs if f.rule == "CFN102"]
+    # wrong rule id in the pragma does NOT suppress
+    fs = findings_for(src.replace("allow[CFN102]", "allow[CFN101]"),
+                      path="src/repro/core/newmod.py")
+    assert len([f for f in fs if f.rule == "CFN102"]) == 2
+
+
+def test_baseline_roundtrip_suppresses_and_survives_line_shift(tmp_path):
+    src = """\
+        import numpy as np
+
+        def loads(F):
+            return np.zeros(4, np.float64)
+    """
+    fs = findings_for(src, path="src/repro/core/newmod.py")
+    payload = baseline_payload(fs)
+    bl = tmp_path / "baseline.json"
+    bl.write_text(json.dumps(payload))
+    baseline = load_baseline(str(bl))
+    assert apply_baseline(fs, baseline) == []
+    # shift the finding down two lines: fingerprint is line-independent
+    shifted = findings_for("\n\n" + textwrap.dedent(src),
+                           path="src/repro/core/newmod.py")
+    assert shifted and shifted[0].line != fs[0].line
+    assert apply_baseline(shifted, baseline) == []
+    # a NEW violation is not covered
+    fresh = [Finding(rule="CFN102", severity="error",
+                     path="src/repro/core/other.py", line=1,
+                     message="float64 reference `np.float64` outside the "
+                             "f64 oracle whitelist")]
+    assert apply_baseline(fresh, baseline) == fresh
+
+
+# ---------------------------------------------------------------------------
+# CLI gate: exit codes the CI job relies on
+# ---------------------------------------------------------------------------
+
+def _run_cli(args, cwd):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        cwd=str(cwd), capture_output=True, text=True,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"})
+
+
+def test_cli_shipped_tree_is_clean_with_baseline():
+    r = _run_cli(["--baseline", "analysis/baseline.json", "src"], REPO)
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_cli_seeded_violation_fails(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text("import jax\n\n@jax.jit\ndef f(x):\n    return x.item()\n")
+    r = _run_cli(["--format", "json", str(bad)], REPO)
+    assert r.returncode == 1
+    out = json.loads(r.stdout)
+    assert out["findings"][0]["rule"] == "CFN101"

@@ -210,6 +210,56 @@ def test_resolve_incremental_departure_repacks(topo):
     assert res.feasible
 
 
+def test_resolve_incremental_state_only_no_prev_x(topo):
+    """Warm callers pass state WITHOUT prev_X: materializing
+    ``np.asarray(state.X)`` just to fill an unread argument was a dead
+    device->host transfer per churn event (CFN101 hazard class).  The
+    state-only call must match the legacy call bit-for-bit."""
+    base = _concat(_services(5))
+    prob_b = power.build_problem(topo, base)
+    warm = solvers.solve_cfn(prob_b, topo, jax.random.PRNGKey(0))
+    grown = base.concat(_services(1, seed0=500)[0])
+    prob = power.build_problem(topo, grown)
+    st = power.warm_state(prob, warm.X)
+    kw = dict(changed_rows=[5], key=jax.random.PRNGKey(1))
+    res_new = solvers.resolve_incremental(prob, state=st, **kw)
+    res_old = solvers.resolve_incremental(prob, np.asarray(st.X), state=st,
+                                          **kw)
+    np.testing.assert_array_equal(res_new.X, res_old.X)
+    assert res_new.objective == res_old.objective
+    with pytest.raises(ValueError, match="prev_X or state"):
+        solvers.resolve_incremental(prob)
+
+
+def test_project_eligible_host_side_moved_flag(topo):
+    """_project_eligible reports whether projection moved anything as a
+    host bool (replacing the old on-device ``(X0 == state.X).all()``
+    compare -- a blocking sync per masked churn event).  The flag must be
+    exact: False iff the projected array is unchanged."""
+    vs = _concat(_services(4))
+    prob = power.build_problem(topo, vs)
+    st = power.init_state(prob, jnp.zeros((prob.R, prob.V), jnp.int32))
+    el = np.ones((prob.R, prob.P), bool)
+    proj, moved = solvers._project_eligible(prob, st.X, el)
+    assert moved is False
+    np.testing.assert_array_equal(np.asarray(proj), np.asarray(st.X))
+    # forbid node 0 (where every free VM sits): projection must move them
+    el0 = el.copy()
+    el0[:, 0] = False
+    proj, moved = solvers._project_eligible(prob, st.X, el0)
+    assert moved is True
+    free = ~np.asarray(prob.fixed_mask)
+    rows = np.arange(prob.R)[:, None]
+    assert el0[np.broadcast_to(rows, proj.shape)[free],
+               np.asarray(proj)[free]].all()
+    # the warm masked re-solve path stays inside the mask end-to-end
+    res = solvers.resolve_incremental(prob, state=st, eligible=el0,
+                                      key=jax.random.PRNGKey(3),
+                                      anneal_steps=50, anneal_chains=2)
+    assert el0[np.broadcast_to(rows, res.X.shape)[free],
+               res.X[free]].all()
+
+
 # ---------------------------------------------------------------------------
 # timelines
 # ---------------------------------------------------------------------------
