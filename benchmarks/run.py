@@ -148,6 +148,38 @@ def run_fault():
           f"-> BENCH_fault.json")
 
 
+def _print_churn(out) -> None:
+    s, w, e = out["scenario"], out["wave"], out["per_event"]
+    print(f"churn-waves: {s['topology']} R={s['R']} "
+          f"wave_size={s['wave_size']} x{s['n_waves']}")
+    print(f"churn-waves: wave={w['events_per_s']:.1f} ev/s "
+          f"({w['mean_event_ms']:.2f}ms/ev) "
+          f"per_event={e['events_per_s']:.1f} ev/s "
+          f"({e['mean_event_ms']:.2f}ms/ev) "
+          f"speedup={out['speedup_wave_vs_per_event']}x")
+    g, d = out["objective_gap"], out["defrag"]
+    print(f"churn-waves: gap mean={g['mean']:.3%} max={g['max']:.3%} "
+          f"fresh_compiles={w['fresh_compiles_measured']} "
+          f"defrag_tick={d['mean_tick_s']*1e3:.1f}ms "
+          f"({d['rows_per_tick']} rows, off the event path) "
+          f"-> BENCH_churn.json")
+
+
+def run_churn():
+    out = kernel_bench.churn_waves()
+    _print_churn(out)
+    assert out["speedup_wave_vs_per_event"] >= 3.0, \
+        "acceptance: >= 3x events/s vs the per-event baseline"
+    assert abs(out["objective_gap"]["mean"]) <= 0.01, \
+        "acceptance: mean objective gap <= 1% vs per-event resolution"
+
+
+def run_churn_smoke():
+    _print_churn(kernel_bench.churn_waves(
+        n_live=32, wave_size=8, n_waves=2, n_olt=2, onus_per_olt=2,
+        iot_per_onu=3, defrag_rows_per_tick=4))
+
+
 def run_flash():
     rows = kernel_bench.flash_cases()
     for r in rows:
@@ -169,12 +201,15 @@ def run_roofline():
 BENCHES = dict(fig3=run_fig3, fig4=run_fig4, gap=run_gap,
                placement=run_placement, solver=run_solver,
                sparse=run_sparse, online=run_online, quality=run_quality,
-               federated=run_federated, fault=run_fault, flash=run_flash,
-               roofline=run_roofline)
+               federated=run_federated, fault=run_fault, churn=run_churn,
+               flash=run_flash, roofline=run_roofline)
+BENCHES["churn-smoke"] = run_churn_smoke
 
 
 def main() -> None:
-    names = sys.argv[1:] or list(BENCHES)
+    # churn-smoke is the CI-scale variant of churn: it would overwrite
+    # BENCH_churn.json with test-scale numbers, so only run it by name
+    names = sys.argv[1:] or [n for n in BENCHES if n != "churn-smoke"]
     for name in names:
         t0 = time.time()
         print(f"== {name} ==", flush=True)

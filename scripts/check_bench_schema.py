@@ -18,6 +18,8 @@ from pathlib import Path
 # tracker name -> required top-level keys (extra keys are allowed: new
 # metrics may land; missing keys are what breaks downstream consumers)
 EXPECTED = {
+    "BENCH_churn.json": {"defrag", "objective_gap", "per_event",
+                         "scenario", "speedup_wave_vs_per_event", "wave"},
     "BENCH_fault.json": {"federated", "scenario", "storms"},
     "BENCH_federated.json": {"federated", "flat",
                              "objective_ratio_fed_vs_flat", "scenario",

@@ -106,7 +106,20 @@ class PlacementSpec:
       * ``violation_tol`` -- reject an arrival that increases capacity
         violation by more than this.
       * ``queue_rejected`` -- park rejected arrivals and retry after each
-        departure instead of dropping them.
+        capacity-increasing event (departure, recovery, brownout_end)
+        instead of dropping them.
+      * ``priority_classes`` -- number of admission priority classes (class
+        0 is the most important).  Services carry a class at ``add()`` /
+        ``apply_wave()`` time; the rejection queue drains class-by-class
+        (FIFO within a class).
+      * ``preempt`` -- under power-budget pressure, let an arrival park a
+        strictly lower-class live service into the queue to free budget
+        (lowest class first, newest first), instead of rejecting.
+      * ``defrag_rows_per_tick`` -- amortized background defrag: every
+        ``defrag_tick()`` delta-sweeps this many live rows (round-robin
+        cursor carried across ticks, never-regressing).  > 0 REPLACES the
+        periodic full-portfolio defrag (``defrag_every`` stops firing), so
+        defrag cost leaves the per-event latency path entirely.
 
     Shape-bucketing policy (compile-count hygiene; see power.build_problem):
       * ``bucket_rows``/``bucket_cols`` -- pad the service count R and the
@@ -142,6 +155,9 @@ class PlacementSpec:
     power_budget_w: Optional[float] = None
     violation_tol: Optional[float] = None
     queue_rejected: bool = False
+    priority_classes: int = 1
+    preempt: bool = False
+    defrag_rows_per_tick: int = 0
     # bucketing policy ----------------------------------------------------
     bucket_rows: bool = True
     bucket_cols: bool = True
@@ -172,6 +188,10 @@ class PlacementSpec:
                              f"choose from {_BACKENDS}")
         if self.row_bucket_lo < 1 or self.col_bucket_lo < 1:
             raise ValueError("bucket floors must be >= 1")
+        if self.priority_classes < 1:
+            raise ValueError("priority_classes must be >= 1")
+        if self.defrag_rows_per_tick < 0:
+            raise ValueError("defrag_rows_per_tick must be >= 0")
 
     def replace(self, **changes) -> "PlacementSpec":
         """A copy with ``changes`` applied (validation re-runs)."""
@@ -347,15 +367,32 @@ class CFNSession:
                 "churn or solve() with no batch to re-pack")
         return self._engine.bootstrap(_split_services(vsrs))
 
-    def add(self, service: vsr_mod.VSRBatch,
-            sid: Optional[int] = None) -> Optional[SolveResult]:
+    def add(self, service: vsr_mod.VSRBatch, sid: Optional[int] = None,
+            priority: Optional[int] = None) -> Optional[SolveResult]:
         """Admit one service (R=1): warm-start incremental re-embedding
-        under the spec's masks and admission budgets.  ``None`` = rejected."""
-        return self._engine.add(service, sid=sid)
+        under the spec's masks and admission budgets.  ``priority`` is the
+        admission class (0 = highest; < ``spec.priority_classes``).
+        ``None`` = rejected."""
+        return self._engine.add(service, sid=sid, priority=priority)
 
     def remove(self, sid: int) -> Optional[SolveResult]:
         """Retire a service: detach its loads, re-settle survivors."""
         return self._engine.remove(sid)
+
+    def apply_wave(self, arrivals: Sequence = (),
+                   departures: Sequence[int] = ()) -> "dynamic.WaveResult":
+        """Apply one churn wave (a tick's arrivals + departures) as a
+        single batched re-solve (``OnlineEmbedder.apply_wave``): one fused
+        detach, one warm-started ``solvers.resolve_wave``, one polish pass,
+        priority-ordered admission, queue drain.  A wave of size 1 is
+        bit-identical to the per-event ``add``/``remove`` path."""
+        return self._engine.apply_wave(arrivals, departures)
+
+    def defrag_tick(self, rows: Optional[int] = None) -> Optional[SolveResult]:
+        """One amortized background-defrag step (``spec.defrag_rows_per_tick``
+        rows, round-robin, never-regressing); see
+        ``OnlineEmbedder.defrag_tick``."""
+        return self._engine.defrag_tick(rows)
 
     def defrag(self) -> Optional[SolveResult]:
         """Full-portfolio re-pack of the live set under ``spec.masks`` --
@@ -407,10 +444,14 @@ class CFNSession:
 
     def replay(self, events: Sequence["dynamic.ServiceEvent"],
                make_vsr: Callable[[int], vsr_mod.VSRBatch],
-               on_event: Optional[Callable] = None) -> list:
+               on_event: Optional[Callable] = None,
+               waves: bool = False) -> list:
         """Drive the session through a churn timeline
-        (``core.dynamic.replay`` on this session's engine)."""
-        return dynamic.replay(self._engine, events, make_vsr, on_event)
+        (``core.dynamic.replay`` on this session's engine).  ``waves=True``
+        batches same-tick events through ``apply_wave`` and runs the
+        amortized background defrag tick after each wave."""
+        return dynamic.replay(self._engine, events, make_vsr, on_event,
+                              waves=waves)
 
     # -- reporting --------------------------------------------------------
     def savings_vs_baseline(self, baseline: str = "cdc") -> dict:

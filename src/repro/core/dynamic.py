@@ -21,9 +21,11 @@ Times are in hours throughout; rates in services/hour.
 """
 from __future__ import annotations
 
+import heapq
 import warnings
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, Iterable, Iterator, List, Optional, \
+    Sequence, Tuple, Union
 
 import jax
 import numpy as np
@@ -115,6 +117,58 @@ def churn_trace(n_steady: int, n_events: int,
     return events
 
 
+def flash_crowd_trace(n_steady: int, n_waves: int, wave_size: int,
+                      rng: np.random.Generator | int = 0,
+                      replace: bool = True) -> List[ServiceEvent]:
+    """A flash-crowd timeline: churn arrives in correlated same-tick WAVES
+    instead of one event at a time (the regime ``apply_wave`` /
+    ``replay(..., waves=True)`` batches).
+
+    ``n_steady`` services arrive at t=0 (the bootstrap burst), then
+    ``n_waves`` bursts land at t = 1, 2, ...:
+
+      * ``replace=True`` (the steady benchmark shape): each wave departs
+        ``wave_size // 2`` uniformly random live services and admits
+        ``wave_size - wave_size // 2`` fresh ones IN THE SAME TICK, so the
+        live count -- and the solver's compile bucket -- never moves.
+      * ``replace=False`` (the classic flash crowd): ``n_waves`` pure
+        arrival bursts ramp the crowd up, then equal departure bursts drain
+        it in LIFO order.
+
+    Within every tick the departures sort before the arrivals
+    (``merge_timelines`` tie order), so a same-tick replace never
+    double-counts capacity."""
+    rng = np.random.default_rng(rng) if isinstance(rng, int) else rng
+    events = [ServiceEvent(0.0, "arrive", sid) for sid in range(n_steady)]
+    live = list(range(n_steady))
+    sid = n_steady
+    t = 0.0
+    if replace:
+        n_dep = wave_size // 2
+        for _ in range(n_waves):
+            t += 1.0
+            for _ in range(n_dep):
+                victim = live.pop(int(rng.integers(0, len(live))))
+                events.append(ServiceEvent(t, "depart", victim))
+            for _ in range(wave_size - n_dep):
+                events.append(ServiceEvent(t, "arrive", sid))
+                live.append(sid)
+                sid += 1
+    else:
+        crowd: List[int] = []
+        for _ in range(n_waves):
+            t += 1.0
+            for _ in range(wave_size):
+                events.append(ServiceEvent(t, "arrive", sid))
+                crowd.append(sid)
+                sid += 1
+        while crowd:
+            t += 1.0
+            for _ in range(min(wave_size, len(crowd))):
+                events.append(ServiceEvent(t, "depart", crowd.pop()))
+    return merge_timelines(events)
+
+
 @dataclass(frozen=True)
 class ChurnScenario:
     """A named workload regime: rate profile + lifetimes + VSR shape."""
@@ -204,6 +258,27 @@ def merge_timelines(*streams) -> List:
     return events
 
 
+def iter_waves(events: Iterable) -> Iterator[List]:
+    """Group a time-sorted event stream (``merge_timelines`` output) into
+    same-tick waves: maximal runs of ``ServiceEvent``s sharing one
+    timestamp.  Because ``merge_timelines`` sorts departures before
+    arrivals on ties, every yielded wave carries its departures first -- a
+    same-tick replace inside one wave never double-counts capacity.
+    ``FaultEvent``s are barriers: each is yielded as its own single-element
+    wave (the churn before it must land on the pre-fault substrate)."""
+    wave: List = []
+    for ev in events:
+        if wave and (isinstance(ev, FaultEvent) or ev.t != wave[0].t):
+            yield wave
+            wave = []
+        if isinstance(ev, FaultEvent):
+            yield [ev]
+        else:
+            wave.append(ev)
+    if wave:
+        yield wave
+
+
 def _storm_nodes(topo: CFNTopology, n: int) -> List[int]:
     """The first ``n`` fog-tier nodes to fail in a storm preset: mini-fog
     servers first (the tier the paper calls "limited ... and highly
@@ -281,6 +356,24 @@ class OnlineStats:
     objective: float
     power_w: float
     n_live: int
+
+
+@dataclass
+class WaveResult:
+    """Outcome of one ``apply_wave`` call.
+
+    ``sids`` maps the call's arrivals (input order) to their assigned
+    service ids; each of those sids lands in exactly one of ``admitted`` /
+    ``rejected`` / ``queued``.  ``result`` is the engine's committed fleet
+    ``SolveResult`` after the wave (``None`` once the engine is empty);
+    ``n_preempted`` counts live services parked to make room."""
+    result: Optional[solvers.SolveResult]
+    sids: List[int] = field(default_factory=list)
+    admitted: List[int] = field(default_factory=list)
+    rejected: List[int] = field(default_factory=list)
+    queued: List[int] = field(default_factory=list)
+    departed: List[int] = field(default_factory=list)
+    n_preempted: int = 0
 
 
 def _bucket_rows(n: int, lo: int = 2) -> int:
@@ -370,11 +463,18 @@ class OnlineEmbedder:
         # free VMs need a hotter start to escape the vacated layout
         self._remove_kw = dict(self._add_kw, sweeps=0,
                                anneal_t0=spec.remove_anneal_t0)
-        self.admission = dict(admitted=0, rejected=0, queued=0)
-        self._queue: List[tuple] = []          # parked (service, sid) pairs
+        self.admission = dict(admitted=0, rejected=0, queued=0, preempted=0)
+        # the rejection queue is a priority heap of (class, seq, sid,
+        # service): class 0 drains first, FIFO (seq) within a class
+        self._queue: List[tuple] = []
+        self._qseq = 0
         self._vsrs: List[vsr.VSRBatch] = []    # one R=1 batch per service
         self._sids: List[int] = []
+        self._prio: List[int] = []             # admission class per live row
         self._next_sid = 0
+        # amortized background defrag: round-robin row cursor carried
+        # across defrag_tick() calls
+        self._defrag_cursor = 0
         # per-event cost hygiene: the concatenated batch is maintained
         # incrementally (concat/delete-row, never a 20-way re-concat) and
         # the substrate tensors are built once per topology
@@ -443,9 +543,12 @@ class OnlineEmbedder:
         other._remove_kw = dict(self._remove_kw)
         other.admission = dict(self.admission)
         other._queue = list(self._queue)
+        other._qseq = self._qseq
         other._vsrs = list(self._vsrs)
         other._sids = list(self._sids)
+        other._prio = list(self._prio)
         other._next_sid = self._next_sid
+        other._defrag_cursor = self._defrag_cursor
         other._batch_cache = self._batch_cache
         other._substrate = self._substrate
         other._problem = self._problem
@@ -559,10 +662,36 @@ class OnlineEmbedder:
         s = self._state
         return (s.omega, s.tm, s.theta, s.lam)
 
+    # -- the priority rejection queue -------------------------------------
+    @property
+    def queued_sids(self) -> List[int]:
+        """Parked service ids in drain order (class, then FIFO)."""
+        return [e[2] for e in sorted(self._queue)]
+
+    def _park(self, service: vsr.VSRBatch, sid: int, prio: int = 0,
+              seq: Optional[int] = None) -> None:
+        """Push one service onto the priority rejection heap.  ``seq``
+        re-parks a drained entry at its original within-class position
+        (a failed retry keeps its place at the head of its class)."""
+        if seq is None:
+            seq = self._qseq
+            self._qseq += 1
+        heapq.heappush(self._queue, (int(prio), seq, sid, service))
+
+    def _priority_of(self, priority: Optional[int]) -> int:
+        prio = 0 if priority is None else int(priority)
+        if not 0 <= prio < self.spec.priority_classes:
+            raise ValueError(
+                f"priority {prio} out of range for "
+                f"{self.spec.priority_classes} priority class(es)")
+        return prio
+
     # -- the online API ---------------------------------------------------
     def bootstrap(self, services: Sequence[vsr.VSRBatch],
                   sids: Optional[Sequence[int]] = None,
-                  X0: Optional[np.ndarray] = None) -> solvers.SolveResult:
+                  X0: Optional[np.ndarray] = None,
+                  priorities: Optional[Sequence[int]] = None
+                  ) -> solvers.SolveResult:
         """Cold-start with a whole service set in ONE full-portfolio solve
         (serving restart / benchmark steady state) instead of N incremental
         admissions.
@@ -579,12 +708,17 @@ class OnlineEmbedder:
             raise ValueError("bootstrap() needs at least one service")
         if sids is not None and len(sids) != len(services):
             raise ValueError(f"{len(sids)} sids for {len(services)} services")
+        if priorities is not None and len(priorities) != len(services):
+            raise ValueError(f"{len(priorities)} priorities for "
+                             f"{len(services)} services")
         for k, s in enumerate(services):
             if s.R != 1:
                 raise ValueError(f"service {k} must be R=1, got R={s.R}")
         self._vsrs = list(services)
         self._sids = (list(range(len(services))) if sids is None
                       else list(sids))
+        self._prio = ([0] * len(services) if priorities is None
+                      else [self._priority_of(p) for p in priorities])
         self._next_sid = max(self._sids, default=-1) + 1
         out = services[0]
         for b in services[1:]:
@@ -655,23 +789,30 @@ class OnlineEmbedder:
                 or self.admit_violation_tol is not None)
 
     def add(self, service: vsr.VSRBatch, sid: Optional[int] = None,
-            _retry: bool = False) -> Optional[solvers.SolveResult]:
+            priority: Optional[int] = None,
+            _retry: bool = False,
+            _qseq: Optional[int] = None) -> Optional[solvers.SolveResult]:
         """Admit one service (an R=1 VSRBatch): warm-start incremental
         re-embedding; the very first service (and every
         ``defrag_every``-th event) takes the full-portfolio path -- except
         under admission control, where even the first service goes through
         the masked incremental path so the hop/budget contract holds.
 
-        With admission control configured, returns ``None`` when the
-        arrival is rejected (the engine state is rolled back; with
-        ``queue_rejected`` the service is parked and retried after the next
-        departure).  ``_retry`` marks a queue re-attempt: a re-rejection
-        does not re-increment the rejected/queued counters (they count
-        distinct arrivals), while an eventual success still counts as
-        admitted."""
+        ``priority`` is the service's admission class (0 = most important;
+        must be < ``spec.priority_classes``).  With admission control
+        configured, returns ``None`` when the arrival is rejected (the
+        engine state is rolled back; with ``queue_rejected`` the service is
+        parked and retried after the next capacity-increasing event).
+        With ``spec.preempt``, a power-budget rejection may instead park a
+        strictly lower-class live service (lowest class, newest first) and
+        retry.  ``_retry`` marks a queue re-attempt: a re-rejection does
+        not re-increment the rejected/queued counters (they count distinct
+        arrivals) and re-parks the service at its original queue position
+        (``_qseq``), while an eventual success still counts as admitted."""
         if service.R != 1:
             raise ValueError(f"add() takes one service, got R={service.R}")
         self._check_churn_constraints("add")
+        prio = self._priority_of(priority)
         if sid is None:
             sid = self._next_sid
         if sid in self._sids:
@@ -682,7 +823,7 @@ class OnlineEmbedder:
             # the service's pinned source node is down: a fault is not an
             # SLA rejection, so the arrival is always parked (regardless of
             # queue_rejected) and retried on recovery
-            self._queue.append((service, sid))
+            self._park(service, sid, prio, seq=_qseq)
             if not _retry:
                 self.admission["queued"] += 1
                 if self.monitor is not None:
@@ -692,12 +833,13 @@ class OnlineEmbedder:
                 event="strand", method="fault", objective=self.objective(),
                 power_w=self.power_w(), n_live=self.n_live))
             return None
-        prev = (self._vsrs[:], self._sids[:],
+        prev = (self._vsrs[:], self._sids[:], self._prio[:],
                 self._batch_cache, self._problem, self._X, self._state,
                 self._result, self._events_since_defrag)
         prev_X, prev_loads = self._X, self._carry_loads()
         self._vsrs.append(service)
         self._sids.append(sid)
+        self._prio.append(prio)
         self._batch_cache = (service if self._batch_cache is None
                              else self._batch_cache.concat(service))
         self._rebuild_problem()
@@ -718,18 +860,23 @@ class OnlineEmbedder:
             row_map = list(range(row)) + [-1] * (self._problem.R - row)
             st = power.warm_state(self._problem, prev_X,
                                   prev_loads=prev_loads, row_map=row_map)
-            prev_power = 0.0 if prev[6] is None else prev[6].power
-            prev_viol = (0.0 if prev[6] is None
-                         else float(prev[6].breakdown.violation))
+            prev_power = 0.0 if prev[7] is None else prev[7].power
+            prev_viol = (0.0 if prev[7] is None
+                         else float(prev[7].breakdown.violation))
         res = solvers.resolve_incremental(
             self._problem, key=self._split_key(),
             changed_rows=[row], state=st, spec=self.spec,
             **self._resolve_kw(self._add_kw))
         reason = self._admit_reason(res, prev_power, prev_viol)
         if reason is not None:
-            (self._vsrs, self._sids, self._batch_cache,
+            (self._vsrs, self._sids, self._prio, self._batch_cache,
              self._problem, self._X, self._state, self._result,
              self._events_since_defrag) = prev
+            if reason == "power_budget_exceeded" and self.spec.preempt:
+                victim = self._preempt_victim(prio)
+                if victim is not None:
+                    return self.add(service, sid=sid, priority=prio,
+                                    _retry=_retry, _qseq=_qseq)
             if self.monitor is not None and not _retry:
                 # distinct arrivals only (queue re-tries would double-count
                 # against the engine's own admission['rejected'])
@@ -739,8 +886,8 @@ class OnlineEmbedder:
                 self.admission["rejected"] += 1
                 if self.queue_rejected:
                     self.admission["queued"] += 1
-            if self.queue_rejected:
-                self._queue.append((service, sid))
+            if self.queue_rejected or _retry:
+                self._park(service, sid, prio, seq=_qseq)
             self.stats.append(OnlineStats(
                 event="reject", method="admission", objective=res.objective,
                 power_w=res.power, n_live=self.n_live))
@@ -755,7 +902,29 @@ class OnlineEmbedder:
         self._commit(res, "add")
         return res
 
-    def remove(self, sid: int) -> Optional[solvers.SolveResult]:
+    def _preempt_victim(self, prio: int) -> Optional[int]:
+        """Park the lowest-class live service strictly below ``prio``
+        (newest first on class ties) to free admission budget; returns its
+        sid, or ``None`` when no live service may be preempted."""
+        victims = [r for r in range(self.n_live) if self._prio[r] > prio]
+        if not victims:
+            return None
+        r = max(victims, key=lambda i: (self._prio[i], i))
+        vsid, vsvc, vprio = self._sids[r], self._vsrs[r], self._prio[r]
+        # no drain: the arrival that triggered this retries first, and a
+        # drain here would just re-admit the victim we parked
+        self.remove(vsid, _drain=False)
+        self._park(vsvc, vsid, vprio)
+        self.admission["preempted"] += 1
+        if self.monitor is not None:
+            self.monitor.count("preempted", detail=f"sid={vsid}")
+        self.stats.append(OnlineStats(
+            event="preempt", method="admission", objective=self.objective(),
+            power_w=self.power_w(), n_live=self.n_live))
+        return vsid
+
+    def remove(self, sid: int,
+               _drain: bool = True) -> Optional[solvers.SolveResult]:
         """Retire a service: detach its loads in O(V*(N+P)), then let the
         survivors re-settle with polish sweeps (no changed rows).  Freed
         capacity re-admits queued arrivals (``queue_rejected``)."""
@@ -766,11 +935,13 @@ class OnlineEmbedder:
         surv = [i for i in range(self.n_live) if i != row]
         del self._vsrs[row]
         del self._sids[row]
+        del self._prio[row]
         if not self._vsrs:
             self._problem = self._X = self._state = self._result = None
             self._batch_cache = None
             self.stats.append(OnlineStats("remove", "empty", 0.0, 0.0, 0))
-            self._drain_queue()
+            if _drain:
+                self._drain_queue()
             return None
         self._drop_row(row)
         self._rebuild_problem()
@@ -789,32 +960,284 @@ class OnlineEmbedder:
             res = self._full_solve("remove", incumbent=res)
         else:
             self._commit(res, "remove")
-        self._drain_queue()
+        if _drain:
+            self._drain_queue()
         return res
 
-    def _drain_queue(self) -> None:
-        """Retry parked arrivals (FIFO); stop at the first re-rejection."""
-        while self._queue:
-            service, sid = self._queue.pop(0)
-            if self.add(service, sid=sid, _retry=True) is None:
-                if self._queue and self._queue[-1][1] == sid:
-                    # add() re-queued it at the tail; restore FIFO order
-                    self._queue.insert(0, self._queue.pop())
+    # -- wave-batched churn ------------------------------------------------
+    def apply_wave(self, arrivals: Sequence = (),
+                   departures: Sequence[int] = ()) -> WaveResult:
+        """Apply one churn WAVE -- a tick's worth of arrivals and
+        departures -- as a single batched engine event.
+
+        ``arrivals``: R=1 ``VSRBatch``es, or ``(service, sid)`` /
+        ``(service, sid, priority)`` tuples (``sid=None`` auto-assigns).
+        ``departures``: live sids.  Lifecycle: departures detach first in
+        ONE fused ``detach_vsrs`` (a same-tick replace never double-counts
+        capacity), arrivals join the batch in one concat + problem rebuild,
+        ``solvers.resolve_wave`` re-solves the whole wave with ONE targeted
+        sweep / Metropolis / polish pass (the polish that dominates
+        per-event latency is paid once per wave), admission verdicts land
+        per arrival in priority order, and a departure-carrying wave drains
+        the rejection queue.
+
+        A wave of size 1 delegates verbatim to ``add``/``remove`` --
+        bit-identical placements, power, and admission counters -- so
+        per-event callers can migrate with no behavior change."""
+        self._check_churn_constraints("apply_wave")
+        arr: List[tuple] = []
+        seen: set = set()
+        for a in arrivals:
+            if isinstance(a, (tuple, list)):
+                svc = a[0]
+                sid = a[1] if len(a) > 1 else None
+                prio = self._priority_of(a[2] if len(a) > 2 else 0)
+            else:
+                svc, sid, prio = a, None, 0
+            if svc.R != 1:
+                raise ValueError(
+                    f"wave arrivals must be R=1, got R={svc.R}")
+            if sid is None:
+                sid = self._next_sid
+            if sid in self._sids or sid in seen:
+                raise ValueError(f"sid {sid} is already live")
+            seen.add(sid)
+            self._next_sid = max(self._next_sid, sid + 1)
+            arr.append((svc, int(sid), prio))
+        deps = [int(s) for s in departures]
+        if len(deps) != len(set(deps)):
+            raise ValueError("duplicate departure sid in wave")
+        for s in deps:
+            if s not in self._sids:
+                raise KeyError(f"no live service {s}")
+        wr = WaveResult(result=self._result,
+                        sids=[sid for _, sid, _ in arr], departed=deps)
+        pre_preempted = self.admission["preempted"]
+        if not arr and not deps:
+            return wr
+        if len(arr) + len(deps) == 1:
+            # deprecation parity: a size-1 wave IS the per-event path
+            if deps:
+                wr.result = self.remove(deps[0])
+            else:
+                svc, sid, prio = arr[0]
+                res = self.add(svc, sid=sid, priority=prio)
+                if res is not None:
+                    wr.result = res
+                    wr.admitted.append(sid)
                 else:
-                    # queue_rejected was toggled off mid-run, so add() did
-                    # not re-queue: park the arrival back ourselves
-                    self._queue.insert(0, (service, sid))
+                    wr.result = self._result
+                    if any(e[2] == sid for e in self._queue):
+                        wr.queued.append(sid)
+                    else:
+                        wr.rejected.append(sid)
+        else:
+            self._wave(arr, deps, wr)
+        wr.n_preempted = self.admission["preempted"] - pre_preempted
+        return wr
+
+    def _wave(self, arr: List[tuple], deps: List[int], wr: WaveResult,
+              deferred: Optional[List[tuple]] = None) -> WaveResult:
+        """One attempt at a batched wave; admission refusals roll the whole
+        attempt back and recurse without the refused arrivals."""
+        deferred = [] if deferred is None else deferred
+        # source-down arrivals park immediately: a fault is not an SLA
+        # rejection (recursive attempts see only the already-filtered list)
+        h = self.spec.health
+        if h is not None and arr:
+            up = []
+            for svc, sid, prio in arr:
+                if bool(h.node_up[int(svc.src[0])]):
+                    up.append((svc, sid, prio))
+                    continue
+                self._park(svc, sid, prio)
+                self.admission["queued"] += 1
+                if self.monitor is not None:
+                    self.monitor.strand(sid, self._now,
+                                        detail=f"sid={sid} source down")
+                self.stats.append(OnlineStats(
+                    event="strand", method="fault",
+                    objective=self.objective(), power_w=self.power_w(),
+                    n_live=self.n_live))
+                wr.queued.append(sid)
+            arr = up
+        if not arr and not deps:
+            wr.result = self._result
+            return self._wave_deferred(wr, deferred)
+        prev = (self._vsrs[:], self._sids[:], self._prio[:],
+                self._batch_cache, self._problem, self._X, self._state,
+                self._result, self._events_since_defrag)
+        state, prev_X = self._state, self._X
+        n0 = self.n_live
+        # phase 1: departures detach as ONE fused state update, BEFORE any
+        # arrival lands (merge_timelines tie order; capacity is never
+        # double-counted inside a wave)
+        dep_rows = sorted(self._sids.index(s) for s in deps)
+        if dep_rows:
+            state = power.detach_vsrs(self._problem, state, dep_rows)
+            for r in sorted(dep_rows, reverse=True):
+                del self._vsrs[r]
+                del self._sids[r]
+                del self._prio[r]
+                self._drop_row(r)
+        surv = [i for i in range(n0) if i not in set(dep_rows)]
+        # phase 2: arrivals join the batch in one pass
+        for svc, sid, prio in arr:
+            self._vsrs.append(svc)
+            self._sids.append(sid)
+            self._prio.append(prio)
+            self._batch_cache = (svc if self._batch_cache is None
+                                 else self._batch_cache.concat(svc))
+        if not self._vsrs:
+            self._problem = self._X = self._state = self._result = None
+            self._batch_cache = None
+            self.stats.append(OnlineStats("wave", "empty", 0.0, 0.0, 0))
+            wr.result = None
+            self._drain_queue()
+            return self._wave_deferred(wr, deferred)
+        self._rebuild_problem()
+        self._events_since_defrag += len(arr) + len(dep_rows)
+        new_rows = list(range(len(surv), self.n_live))
+        row_map = surv + [-1] * (self._problem.R - len(surv))
+        if prev_X is None:
+            # cold wave: start every arrival at its pinned source (the
+            # targeted sweeps re-place them; mirrors add-under-admission)
+            st = power.init_state(self._problem,
+                                  np.asarray(self._problem.fixed_node))
+            prev_power, prev_viol = 0.0, 0.0
+        else:
+            st = power.warm_state(
+                self._problem, prev_X,
+                prev_loads=(state.omega, state.tm, state.theta, state.lam),
+                row_map=row_map)
+            prev_power = 0.0 if prev[7] is None else prev[7].power
+            prev_viol = (0.0 if prev[7] is None
+                         else float(prev[7].breakdown.violation))
+        # phase 3: ONE batched re-solve for the whole wave
+        kw = self._add_kw if new_rows else self._remove_kw
+        res = solvers.resolve_wave(
+            self._problem, st, new_rows, key=self._split_key(),
+            spec=self.spec, **self._resolve_kw(kw))
+        # phase 4: admission, per arrival in priority order
+        if new_rows and self._admission_active:
+            refused = self._wave_refusals(res, arr, new_rows,
+                                          prev_power, prev_viol)
+            if refused:
+                (self._vsrs, self._sids, self._prio, self._batch_cache,
+                 self._problem, self._X, self._state, self._result,
+                 self._events_since_defrag) = prev
+                keep = []
+                for i, (svc, sid, prio) in enumerate(arr):
+                    if i not in refused:
+                        keep.append((svc, sid, prio))
+                        continue
+                    reason = refused[i]
+                    if (reason == "power_budget_exceeded"
+                            and self.spec.preempt):
+                        # retried per-event after the wave commits, where
+                        # preemption may park a lower-class victim
+                        deferred.append((svc, sid, prio))
+                        continue
+                    self.admission["rejected"] += 1
+                    if self.monitor is not None:
+                        self.monitor.count("admission_rejected",
+                                           detail=f"sid={sid}")
+                        self.monitor.count(reason, detail=f"sid={sid}")
+                    if self.queue_rejected:
+                        self.admission["queued"] += 1
+                        self._park(svc, sid, prio)
+                        wr.queued.append(sid)
+                    else:
+                        wr.rejected.append(sid)
+                    self.stats.append(OnlineStats(
+                        event="reject", method="admission",
+                        objective=res.objective, power_w=res.power,
+                        n_live=self.n_live))
+                return self._wave(keep, deps, wr, deferred)
+        # phase 5: commit, then drain freed capacity into queued arrivals
+        for _, sid, _ in arr:
+            wr.admitted.append(sid)
+            self.admission["admitted"] += 1
+            if self.monitor is not None:
+                self.monitor.unstrand(sid, self._now)
+        if self._defrag_due():
+            res = self._full_solve("wave", incumbent=res)
+        else:
+            self._commit(res, "wave")
+        wr.result = res
+        if deps:
+            self._drain_queue()
+        return self._wave_deferred(wr, deferred)
+
+    def _wave_deferred(self, wr: WaveResult,
+                       deferred: List[tuple]) -> WaveResult:
+        """Retry power-refused arrivals per-event (``spec.preempt``: each
+        may park a lower-class victim to free budget)."""
+        for svc, sid, prio in deferred:
+            res = self.add(svc, sid=sid, priority=prio)
+            if res is not None:
+                wr.admitted.append(sid)
+                wr.result = res
+            elif any(e[2] == sid for e in self._queue):
+                wr.queued.append(sid)
+            else:
+                wr.rejected.append(sid)
+        return wr
+
+    def _wave_refusals(self, res: solvers.SolveResult, arr: List[tuple],
+                       new_rows: List[int], prev_power: float,
+                       prev_viol: float) -> Dict[int, str]:
+        """Admission verdicts for one solved wave attempt: {arr index ->
+        reason}.  The wave's budgets are the per-event budgets linearly
+        extended to the wave (mean marginal power / violation increase per
+        arrival); when exceeded, ONE victim is refused per attempt --
+        lowest priority class first, and within it the arrival with the
+        highest exact attributed watts (``power.attribute_power``) when a
+        power budget is set, else the newest -- and the remaining wave is
+        re-solved, so higher classes keep their seats."""
+        budget, tol = self.admit_power_budget_w, self.admit_violation_tol
+        over_power = (budget is not None
+                      and res.power - prev_power > budget * len(new_rows))
+        over_viol = (tol is not None
+                     and float(res.breakdown.violation) - prev_viol
+                     > tol * len(new_rows))
+        if not over_power and not over_viol:
+            return {}
+        reason = ("power_budget_exceeded" if over_power
+                  else "violation_budget_exceeded")
+        lowest = max(prio for _, _, prio in arr)
+        cls = [j for j in range(len(arr)) if arr[j][2] == lowest]
+        if budget is not None:
+            per = power.attribute_power(self._problem, np.asarray(res.X),
+                                        res.breakdown, n_rows=self.n_live)
+            i = max(cls, key=lambda j: (float(per[new_rows[j]]), j))
+        else:
+            i = max(cls)
+        return {i: reason}
+
+    def _drain_queue(self) -> None:
+        """Retry parked arrivals class-by-class (FIFO within a class);
+        stop at the first re-rejection.  Runs after EVERY
+        capacity-increasing event: departures (per-event or wave),
+        node/link recoveries, and brownout_end."""
+        while self._queue:
+            prio, seq, sid, service = heapq.heappop(self._queue)
+            if self.add(service, sid=sid, priority=prio, _retry=True,
+                        _qseq=seq) is None:
+                # add() re-parked it at its original position (seq)
                 break
 
     def cancel_queued(self, sid: int) -> bool:
         """Drop a parked arrival (its lifetime ended while queued)."""
         n0 = len(self._queue)
-        self._queue = [(s, q) for (s, q) in self._queue if q != sid]
+        self._queue = [e for e in self._queue if e[2] != sid]
         removed = len(self._queue) < n0
-        if removed and self.monitor is not None:
-            # a stranded service departing from the queue closes its
-            # availability window without counting as re-embedded
-            self.monitor.unstrand(sid, self._now, re_embedded=False)
+        if removed:
+            heapq.heapify(self._queue)
+            if self.monitor is not None:
+                # a stranded service departing from the queue closes its
+                # availability window without counting as re-embedded
+                self.monitor.unstrand(sid, self._now, re_embedded=False)
         return removed
 
     def defrag(self) -> Optional[solvers.SolveResult]:
@@ -824,8 +1247,50 @@ class OnlineEmbedder:
             return None
         return self._full_solve("defrag", incumbent=self._result)
 
+    def defrag_tick(self, rows: Optional[int] = None
+                    ) -> Optional[solvers.SolveResult]:
+        """Amortized background defrag: ONE targeted delta-sweep over the
+        free VMs of ``rows`` live services (default
+        ``spec.defrag_rows_per_tick``), round-robin from a cursor carried
+        across ticks -- over ceil(R / K) ticks every service gets
+        re-considered, without a full-portfolio solve ever landing on the
+        event path.
+
+        Never-regressing: the swept placement is committed only when its
+        exact objective improves on the incumbent.  Bucket-stable: the
+        position list is padded to a power-of-two, so steady-state ticks
+        replay ONE compiled ``_sweep`` per (K, V) bucket.  Returns the
+        committed result, or ``None`` when the tick found no improvement
+        (or there is nothing to defrag)."""
+        k = self.spec.defrag_rows_per_tick if rows is None else int(rows)
+        if k <= 0 or self._problem is None or self._result is None:
+            return None
+        n = self.n_live
+        sel = [(self._defrag_cursor + i) % n for i in range(min(k, n))]
+        self._defrag_cursor = (self._defrag_cursor + len(sel)) % n
+        aux = power.build_aux(self._problem)
+        free = np.asarray(aux.free_pos)
+        pos = free[np.isin(free[:, 0], sel)]
+        if pos.shape[0] == 0:
+            return None
+        bucket = solvers._pow2(int(pos.shape[0]))
+        pos_j = jax.numpy.asarray(solvers._pad_positions(pos, bucket))
+        el = self.spec.masks(self._problem)
+        el_np, _, _ = solvers._eligible_np(el)
+        el_j = None if el_np is None else jax.numpy.asarray(el_np)
+        st, _ = solvers._sweep(self._problem, aux, self._state, pos_j, el_j)
+        res = solvers._result(self._problem, st.X, "defrag_tick")
+        if res.objective >= self._result.objective - 1e-9:
+            return None  # never-regressing: keep the incumbent
+        self._commit(res, "defrag_tick")
+        return res
+
     def _defrag_due(self) -> bool:
-        return (self.defrag_every > 0
+        # amortized mode (defrag_rows_per_tick > 0) REPLACES the periodic
+        # full-portfolio defrag: re-packing happens K rows per tick in
+        # defrag_tick(), off the event latency path
+        return (self.spec.defrag_rows_per_tick == 0
+                and self.defrag_every > 0
                 and self._events_since_defrag >= self.defrag_every)
 
     # -- fault plane ------------------------------------------------------
@@ -889,12 +1354,13 @@ class OnlineEmbedder:
             state = power.detach_vsrs(self._problem, state, stranded)
             for r in sorted(stranded, reverse=True):
                 svc, sid = self._vsrs[r], self._sids[r]
-                self._queue.append((svc, sid))
+                self._park(svc, sid, self._prio[r])
                 if self.monitor is not None:
                     self.monitor.strand(sid, self._now,
                                         detail=f"sid={sid} {event}")
                 del self._vsrs[r]
                 del self._sids[r]
+                del self._prio[r]
                 self._drop_row(r)
         if not self._vsrs:
             self._problem = self._X = self._state = self._result = None
@@ -1024,7 +1490,8 @@ class OnlineEmbedder:
 
 def replay(engine: OnlineEmbedder, events: Sequence[ServiceEvent],
            make_vsr: Callable[[int], vsr.VSRBatch],
-           on_event: Optional[Callable] = None) -> List[OnlineStats]:
+           on_event: Optional[Callable] = None,
+           waves: bool = False) -> List[OnlineStats]:
     """Drive an engine through a timeline.  ``make_vsr(sid)`` materializes
     the service for each arrival; departures of services neither live in
     the engine (e.g. bootstrapped) nor admitted by this replay are skipped.
@@ -1035,7 +1502,17 @@ def replay(engine: OnlineEmbedder, events: Sequence[ServiceEvent],
     The timeline may interleave ``FaultEvent``s (``merge_timelines``):
     those dispatch through ``engine.apply_fault``, and the engine clock is
     ticked to each event's time so strand/unstrand availability windows
-    are measured on the timeline's clock."""
+    are measured on the timeline's clock.
+
+    ``waves=True`` batches each same-tick run of churn events
+    (``iter_waves``) through ``engine.apply_wave`` -- one fused re-solve
+    per tick instead of one per event -- and, when the engine carries an
+    amortized defrag budget (``spec.defrag_rows_per_tick``), runs one
+    background ``defrag_tick()`` after each wave, OFF the event path.
+    ``on_event`` then observes ``(event, WaveResult)`` for every event of
+    the wave."""
+    if waves:
+        return _replay_waves(engine, events, make_vsr, on_event)
     live = set(engine.sids)
     for ev in events:
         tick = getattr(engine, "tick", None)
@@ -1066,4 +1543,35 @@ def replay(engine: OnlineEmbedder, events: Sequence[ServiceEvent],
             live.update(s for s in engine.sids)  # queue re-admissions
         if on_event is not None:
             on_event(ev, res)
+    return engine.stats
+
+
+def _replay_waves(engine, events, make_vsr, on_event) -> List[OnlineStats]:
+    """The ``replay(..., waves=True)`` loop: collect -> apply_wave ->
+    background defrag tick, one pass per same-tick wave."""
+    defrag_budget = getattr(engine.spec, "defrag_rows_per_tick", 0)
+    for group in iter_waves(events):
+        tick = getattr(engine, "tick", None)
+        if tick is not None:
+            tick(group[-1].t)
+        if isinstance(group[0], FaultEvent):
+            res = engine.apply_fault(group[0])
+            if on_event is not None:
+                on_event(group[0], res)
+            continue
+        live = set(engine.sids)
+        arrivals, departures = [], []
+        for ev in group:
+            if ev.kind == "arrive":
+                arrivals.append((make_vsr(ev.sid), ev.sid))
+            elif ev.sid in live:
+                departures.append(ev.sid)
+            else:
+                engine.cancel_queued(ev.sid)
+        wres = engine.apply_wave(arrivals, departures)
+        if defrag_budget:
+            engine.defrag_tick()
+        if on_event is not None:
+            for ev in group:
+                on_event(ev, wres)
     return engine.stats

@@ -729,7 +729,8 @@ class FederatedSession:
         # services parked for retry-on-recovery, and the session clock
         self._down: set = set()
         self._budget_override: Dict[int, float] = {}
-        self._fqueue: List[Tuple[vsr_mod.VSRBatch, int]] = []
+        self._fqueue: List[Tuple[vsr_mod.VSRBatch, int, int]] = []
+        self._prio: Dict[int, int] = {}
         self._now = 0.0
         self._region_monitors: Dict[int, object] = {}
         self._flat = None
@@ -760,6 +761,12 @@ class FederatedSession:
                 "(row-positional constraints cannot follow a service "
                 "across regions); use region_affinity for placement "
                 "steering")
+        if self.spec.preempt:
+            raise ValueError(
+                "multi-region federation does not support preempt=True: "
+                "a region engine preempting into its private queue would "
+                "desync the federation's plan registry.  Preemption is a "
+                "flat-session / per-region-engine feature")
 
     def _split_key(self) -> jax.Array:
         self._key, k = jax.random.split(self._key)
@@ -1168,13 +1175,15 @@ class FederatedSession:
 
     # -- region-aware churn ------------------------------------------------
     def add(self, service: vsr_mod.VSRBatch, sid: Optional[int] = None,
-            region: Optional[int] = None):
+            region: Optional[int] = None, priority: Optional[int] = None):
         """Admit one service: an incremental churn event on its region's
         engine.  On a regional budget breach the arrival is migrated to
         the coolest admissible region (stub left at home, cut links priced
-        over the core); ``None`` = rejected everywhere."""
+        over the core); ``None`` = rejected everywhere.  ``priority`` is
+        the service's admission class (threaded to the region engine's
+        priority queue; smaller = more important)."""
         if self._flat:
-            return self._flat.add(service, sid=sid)
+            return self._flat.add(service, sid=sid, priority=priority)
         if service.R != 1:
             raise ValueError(f"add() takes one service, got R={service.R}")
         for kind in ("region_affinity", "region_anti_affinity"):
@@ -1191,10 +1200,11 @@ class FederatedSession:
             raise ValueError(f"sid {sid} is already live")
         self._next_sid = max(self._next_sid, sid + 1)
         home = self.partition.home_region(int(service.src[0]))
+        prio = 0 if priority is None else int(priority)
         if home in self._down:
             # the source region is dark: its pinned input VM cannot run, so
             # the arrival is parked (never dropped) and retried on recovery
-            self._fqueue.append((service, sid))
+            self._fqueue.append((service, sid, prio))
             if self.monitor is not None:
                 self.monitor.strand(sid, self._now,
                                     detail=f"sid={sid} home {home} down")
@@ -1222,7 +1232,7 @@ class FederatedSession:
                     f"{cap}")
         migrated_off: Optional[int] = None
         for k, g in enumerate(targets):
-            res = self._try_add(service, sid, g)
+            res = self._try_add(service, sid, g, prio)
             if res is None:
                 continue
             budget = self._budget(g)
@@ -1262,19 +1272,21 @@ class FederatedSession:
             return res
         return None
 
-    def _try_add(self, service, sid, g):
+    def _try_add(self, service, sid, g, prio: int = 0):
         plan = make_plan(self.partition, service, sid, g)
         eng = self._engine(g)
-        res = eng.add(plan.body, sid=sid)
+        res = eng.add(plan.body, sid=sid, priority=prio)
         if res is None:
             return None
         if plan.migrated:
-            stub_res = self._engine(plan.home).add(plan.stub, sid=sid)
+            stub_res = self._engine(plan.home).add(plan.stub, sid=sid,
+                                                   priority=prio)
             if stub_res is None:   # stub refused (pathological budgets)
                 eng.remove(sid)
                 return None
         self._plans[sid] = plan
         self._order.append(sid)
+        self._prio[sid] = prio
         return res
 
     def _drop(self, sid: int) -> None:
@@ -1283,6 +1295,7 @@ class FederatedSession:
         if plan.migrated:
             self._engines[plan.home].remove(sid)
         self._order.remove(sid)
+        self._prio.pop(sid, None)
 
     def remove(self, sid: int):
         """Retire a service from its region engine(s) (body + stub)."""
@@ -1296,7 +1309,121 @@ class FederatedSession:
             self._engines[plan.home].remove(sid)
         self._plans.pop(sid)
         self._order.remove(sid)
+        self._prio.pop(sid, None)
         return res
+
+    def apply_wave(self, arrivals: Sequence = (),
+                   departures: Sequence[int] = ()):
+        """Apply one churn wave across the federation.
+
+        Arrivals homed in an up region with no budget pressure batch into
+        ONE ``OnlineEmbedder.apply_wave`` per target region (the fused
+        detach/attach + single-polish path); anything that needs the
+        coordinator -- budget-breach migration, affinity steering
+        off-home, a down home region -- falls back to the per-event
+        ``add``, as does any arrival its home-region wave refused (the
+        per-event path re-probes home, then cooler regions).  Non-migrated
+        departures batch per host region; migrated ones (body + stub in
+        two regions) retire per-event.  Returns an aggregated
+        ``dynamic.WaveResult``; its ``result`` is None -- there is no
+        single fleet ``SolveResult`` across regions, use ``breakdown()``.
+        """
+        if self._flat:
+            return self._flat.apply_wave(arrivals, departures)
+        for kind in ("region_affinity", "region_anti_affinity"):
+            v = getattr(self.spec, kind)
+            if v is not None and np.ndim(v) > 0:
+                raise ValueError(
+                    f"apply_wave() with a sequence {kind} is unsupported "
+                    "(see add())")
+        arr: List[tuple] = []
+        seen: set = set()
+        for a in arrivals:
+            if isinstance(a, (tuple, list)):
+                svc = a[0]
+                sid = a[1] if len(a) > 1 else None
+                prio = int(a[2]) if len(a) > 2 and a[2] is not None else 0
+            else:
+                svc, sid, prio = a, None, 0
+            if svc.R != 1:
+                raise ValueError(
+                    f"wave arrivals must be R=1, got R={svc.R}")
+            if sid is None:
+                sid = self._next_sid
+            if sid in self._plans or sid in seen:
+                raise ValueError(f"sid {sid} is already live")
+            seen.add(sid)
+            self._next_sid = max(self._next_sid, sid + 1)
+            arr.append((svc, int(sid), prio))
+        deps = [int(s) for s in departures]
+        if len(deps) != len(set(deps)):
+            raise ValueError("duplicate departure sid in wave")
+        for s in deps:
+            if s not in self._plans:
+                raise KeyError(f"no live service {s}")
+        wr = dynamic.WaveResult(result=None,
+                                sids=[sid for _, sid, _ in arr],
+                                departed=deps)
+        if not arr and not deps:
+            return wr
+        aff = self._row_constraint("region_affinity", 0)
+        anti = self._row_constraint("region_anti_affinity", 0)
+        budgets = (self.spec.region_power_budget_w is not None
+                   or bool(self._budget_override))
+        dep_by_g: Dict[int, List[int]] = {}
+        for s in deps:
+            plan = self._plans[s]
+            if plan.migrated:
+                self.remove(s)
+            else:
+                dep_by_g.setdefault(plan.assigned, []).append(s)
+        arr_by_g: Dict[int, List[tuple]] = {}
+        slow_arr: List[tuple] = []
+        for svc, sid, prio in arr:
+            home = self.partition.home_region(int(svc.src[0]))
+            g = aff if aff >= 0 else home
+            if budgets or g != home or home in self._down or anti == g:
+                slow_arr.append((svc, sid, prio))
+            else:
+                arr_by_g.setdefault(g, []).append((svc, sid, prio))
+        svc_of = {sid: (svc, prio) for svc, sid, prio in arr}
+        for g in sorted(set(dep_by_g) | set(arr_by_g)):
+            a_g = arr_by_g.get(g, [])
+            plans = {sid: make_plan(self.partition, svc, sid, g)
+                     for svc, sid, _ in a_g}
+            prios = {sid: prio for _, sid, prio in a_g}
+            wres = self._engine(g).apply_wave(
+                [(plans[sid].body, sid, prios[sid]) for _, sid, _ in a_g],
+                dep_by_g.get(g, ()))
+            for s in wres.departed:
+                self._plans.pop(s)
+                self._order.remove(s)
+                self._prio.pop(s, None)
+            for sid in wres.admitted:
+                self._plans[sid] = plans[sid]
+                self._order.append(sid)
+                self._prio[sid] = prios[sid]
+            wr.admitted.extend(wres.admitted)
+            wr.queued.extend(wres.queued)
+            wr.n_preempted += wres.n_preempted
+            for sid in wres.rejected:
+                svc, prio = svc_of[sid]
+                slow_arr.append((svc, sid, prio))
+        # coordinator fallbacks admit in priority order (class first,
+        # wave input order within a class)
+        pos = {sid: i for i, sid in enumerate(wr.sids)}
+        slow_arr.sort(key=lambda e: (e[2], pos[e[1]]))
+        for svc, sid, prio in slow_arr:
+            res = self.add(svc, sid=sid, priority=prio)
+            if res is not None:
+                wr.admitted.append(sid)
+            elif (any(e[1] == sid for e in self._fqueue)
+                  or any(sid in eng.queued_sids
+                         for eng in self._engines.values())):
+                wr.queued.append(sid)
+            else:
+                wr.rejected.append(sid)
+        return wr
 
     def defrag(self):
         """Per-region full-portfolio re-pack (each under the spec masks)."""
@@ -1306,6 +1433,21 @@ class FederatedSession:
         for g, eng in self._engines.items():
             if eng.problem is not None:
                 out[g] = eng.defrag()
+        return out
+
+    def defrag_tick(self, rows: Optional[int] = None):
+        """One amortized background-defrag slice on every live region
+        engine (``OnlineEmbedder.defrag_tick`` semantics: K rows per call,
+        round-robin cursor, never-regressing).  Returns ``{region:
+        SolveResult}`` for regions whose slice improved the objective."""
+        if self._flat:
+            return self._flat.defrag_tick(rows)
+        out = {}
+        for g, eng in self._engines.items():
+            if eng.problem is not None:
+                res = eng.defrag_tick(rows)
+                if res is not None:
+                    out[g] = res
         return out
 
     # -- fault plane -------------------------------------------------------
@@ -1340,8 +1482,9 @@ class FederatedSession:
         for sid in [s for s in list(self._order)
                     if self._plans[s].home == g]:
             svc = self._plans[sid].vsr
+            prio = self._prio.get(sid, 0)
             self.remove(sid)
-            self._fqueue.append((svc, sid))
+            self._fqueue.append((svc, sid, prio))
             if self.monitor is not None:
                 self.monitor.strand(sid, self._now,
                                     detail=f"sid={sid} region {g} failed")
@@ -1352,10 +1495,12 @@ class FederatedSession:
         for sid in [s for s in list(self._order)
                     if self._plans[s].assigned == g]:
             svc = self._plans[sid].vsr
+            prio = self._prio.get(sid, 0)
             self.remove(sid)
-            res = self.add(svc, sid=sid)
+            res = self.add(svc, sid=sid, priority=prio)
             if res is None:
-                self._park(svc, sid, f"sid={sid} evacuation refused")
+                self._park(svc, sid, f"sid={sid} evacuation refused",
+                           prio=prio)
             else:
                 n_evac += 1
                 if self.monitor is not None:
@@ -1415,11 +1560,13 @@ class FederatedSession:
             victim = max(movable,
                          key=lambda s: float(np.sum(self._plans[s].vsr.F)))
             svc = self._plans[victim].vsr
+            vprio = self._prio.get(victim, 0)
             before = self.assignment(victim)
             self.remove(victim)
-            res = self.add(svc, sid=victim)
+            res = self.add(svc, sid=victim, priority=vprio)
             if res is None:
-                self._park(svc, victim, f"sid={victim} brownout shed")
+                self._park(svc, victim, f"sid={victim} brownout shed",
+                           prio=vprio)
                 moved += 1
                 continue
             if self.assignment(victim) == before:
@@ -1439,29 +1586,32 @@ class FederatedSession:
             self.monitor.count("brownout_end", detail=f"region={g}")
         self._drain_fqueue()
 
-    def _park(self, service, sid: int, detail: str) -> None:
-        if all(q != sid for _, q in self._fqueue):
-            self._fqueue.append((service, sid))
+    def _park(self, service, sid: int, detail: str, prio: int = 0) -> None:
+        if all(e[1] != sid for e in self._fqueue):
+            self._fqueue.append((service, sid, prio))
         if self.monitor is not None:
             self.monitor.strand(sid, self._now, detail=detail)
 
     def _drain_fqueue(self) -> int:
-        """Retry every parked service; still-unplaceable ones re-park
+        """Retry every parked service in priority order (class first,
+        arrival order within a class); still-unplaceable ones re-park
         (never silently dropped)."""
         queued, self._fqueue = self._fqueue, []
+        queued = sorted(enumerate(queued), key=lambda e: (e[1][2], e[0]))
         admitted = 0
-        for svc, sid in queued:
-            res = self.add(svc, sid=sid)   # re-parks itself if home is down
+        for _, (svc, sid, prio) in queued:
+            # re-parks itself if home is down
+            res = self.add(svc, sid=sid, priority=prio)
             if res is not None:
                 admitted += 1
-            elif all(q != sid for _, q in self._fqueue):
-                self._fqueue.append((svc, sid))
+            elif all(e[1] != sid for e in self._fqueue):
+                self._fqueue.append((svc, sid, prio))
         return admitted
 
     def cancel_queued(self, sid: int) -> bool:
         """Drop a parked service (its lifetime ended while stranded)."""
         n0 = len(self._fqueue)
-        self._fqueue = [(s, q) for (s, q) in self._fqueue if q != sid]
+        self._fqueue = [e for e in self._fqueue if e[1] != sid]
         removed = len(self._fqueue) < n0
         if removed and self.monitor is not None:
             self.monitor.unstrand(sid, self._now, re_embedded=False)
@@ -1485,13 +1635,19 @@ class FederatedSession:
             "recover_region / brownout)")
 
     def replay(self, events: Sequence[dynamic.ServiceEvent], make_vsr,
-               on_event=None) -> list:
+               on_event=None, waves: bool = False) -> list:
         """Drive the federation through a churn timeline (region-aware
         ``dynamic.replay`` semantics: unknown departures are skipped).
         ``FaultEvent``s interleave via ``apply_fault``, with the clock
-        ticked to each event's time."""
+        ticked to each event's time.  ``waves=True`` groups same-tick
+        service events into one ``apply_wave`` each (fault events stay
+        single-event barriers) and runs a background ``defrag_tick``
+        after every wave when ``spec.defrag_rows_per_tick`` is set."""
         if self._flat:
-            return self._flat.replay(events, make_vsr, on_event)
+            return self._flat.replay(events, make_vsr, on_event,
+                                     waves=waves)
+        if waves:
+            return self._replay_waves(events, make_vsr, on_event)
         live = set(self._order)
         stats = []
         for ev in events:
@@ -1517,4 +1673,35 @@ class FederatedSession:
             stats.append((ev, res))
             if on_event is not None:
                 on_event(ev, res)
+        return stats
+
+    def _replay_waves(self, events, make_vsr, on_event) -> list:
+        """The federated ``replay(..., waves=True)`` loop: collect ->
+        apply_wave (per-region batched) -> background defrag tick."""
+        defrag_budget = self.spec.defrag_rows_per_tick
+        stats = []
+        for group in dynamic.iter_waves(events):
+            self.tick(group[-1].t)
+            if isinstance(group[0], dynamic.FaultEvent):
+                res = self.apply_fault(group[0])
+                stats.append((group[0], res))
+                if on_event is not None:
+                    on_event(group[0], res)
+                continue
+            live = set(self._order)
+            arrivals, departures = [], []
+            for ev in group:
+                if ev.kind == "arrive":
+                    arrivals.append((make_vsr(ev.sid), ev.sid))
+                elif ev.sid in live:
+                    departures.append(ev.sid)
+                else:
+                    self.cancel_queued(ev.sid)
+            wres = self.apply_wave(arrivals, departures)
+            if defrag_budget:
+                self.defrag_tick()
+            for ev in group:
+                stats.append((ev, wres))
+                if on_event is not None:
+                    on_event(ev, wres)
         return stats

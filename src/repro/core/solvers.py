@@ -661,6 +661,7 @@ def resolve_incremental(problem: PlacementProblem,
                         polish_sweeps: Optional[int] = None,
                         eligible: Optional[np.ndarray] = None,
                         pad_positions_to: Optional[int] = None,
+                        pad_changed_to: Optional[int] = None,
                         spec=None) -> SolveResult:
     """Warm-start re-solve after service churn: surviving services stay at
     their previous nodes, only the VMs of ``changed_rows`` (new arrivals /
@@ -683,7 +684,8 @@ def resolve_incremental(problem: PlacementProblem,
     destinations are sampled from each row's eligible set).
     ``pad_positions_to`` pads the all-free-VM sweep lists to a fixed length
     so the jitted sweep compiles once per shape bucket
-    (core.dynamic.OnlineEmbedder).
+    (core.dynamic.OnlineEmbedder); ``pad_changed_to`` does the same for the
+    changed-rows position list (the wave axis -- see ``resolve_wave``).
 
     This is LOCAL re-optimization -- a periodic full-portfolio defrag
     (`solve_portfolio`) bounds its drift; see core.dynamic.OnlineEmbedder.
@@ -729,6 +731,10 @@ def resolve_incremental(problem: PlacementProblem,
             state = init_state(problem, apply_pins(problem, X0))
     cands = [state.X]
     pos_changed = free[np.isin(free[:, 0], changed_rows)]
+    # wave axis bucketing: pad the changed-position list so the targeted
+    # sweep (and the Metropolis target set below -- duplicate targets are a
+    # harmless proposal bias) compiles once per wave-shape bucket
+    pos_changed = _pad_positions(pos_changed, pad_changed_to)
 
     # phase 1: greedy placement of the changed VMs
     if pos_changed.shape[0]:
@@ -794,6 +800,46 @@ def resolve_incremental(problem: PlacementProblem,
             best_obj, best_X = obj, state.X
         history.append(best_obj)
     return _result(problem, best_X, "incremental", history)
+
+
+def resolve_wave(problem: PlacementProblem,
+                 state: PlacementState,
+                 changed_rows: Sequence[int],
+                 key: Optional[jax.Array] = None,
+                 pad_changed_to: Optional[int] = None,
+                 spec=None, **kw) -> SolveResult:
+    """Wave-batched incremental re-solve: ONE warm-start pass over a whole
+    churn wave instead of one per event.
+
+    The caller gathers a tick's arrivals/departures, applies
+    ``power.detach_vsrs`` / the batch concat as one fused state update and
+    builds ONE ``power.warm_state`` (``changed_rows`` = the arrival rows;
+    departures need no changed rows -- survivors re-pack exactly as in the
+    per-event remove path).  This then runs the three
+    ``resolve_incremental`` phases once for the whole wave: targeted sweeps
+    over every changed row's free VMs, ONE restricted Metropolis refinement
+    whose proposals range over the union of changed positions, and a single
+    full-polish pass -- the polish that dominates per-event latency is paid
+    once per wave.
+
+    Compile-shape hygiene (the region-axis trick of
+    ``federation.solve_portfolio_batched``): the changed-position list is
+    padded to a power-of-two bucket (``pad_changed_to``; default
+    ``_pow2`` of the wave's free-position count), so the jitted ``_sweep``
+    / ``_anneal_scan_delta`` kernels -- both ``@count_traces``-covered --
+    compile once per wave-shape bucket, not once per wave size.
+    """
+    changed_rows = list(changed_rows)
+    if pad_changed_to is None and changed_rows:
+        fixed = np.asarray(problem.fixed_mask)[changed_rows]
+        n_pos = int((~fixed).sum())
+        if n_pos:
+            pad_changed_to = _pow2(n_pos)
+    res = resolve_incremental(problem, key=key, changed_rows=changed_rows,
+                              state=state, spec=spec,
+                              pad_changed_to=pad_changed_to, **kw)
+    return SolveResult(X=res.X, breakdown=res.breakdown, method="wave",
+                       history=res.history)
 
 
 # ---------------------------------------------------------------------------

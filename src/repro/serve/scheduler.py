@@ -34,6 +34,7 @@ class Service:
     tokens_per_s: float
     n_stages: int = 4
     source_node: int = 0
+    priority: int = 0   # admission class, 0 = highest (spec.priority_classes)
 
 
 @dataclass
@@ -69,7 +70,9 @@ class EnergyAwareScheduler:
             self.session = cfn_api.CFNSession(topo, spec, monitor=monitor)
         self.services: List[Service] = []
         self.rejected: List[str] = []   # names refused by admission control
+        self.queued: List[str] = []     # names parked in the priority queue
         self._by_sid: Dict[int, Service] = {}
+        self._queued_by_sid: Dict[int, Service] = {}
 
     @property
     def spec(self) -> cfn_api.PlacementSpec:
@@ -88,14 +91,50 @@ class EnergyAwareScheduler:
         placement is returned unchanged."""
         if any(s.name == svc.name for s in self.services):
             raise ValueError(f"service named {svc.name!r} is already live")
-        vs = cfn_vsr.from_architecture(
-            svc.arch, tokens_per_s=svc.tokens_per_s, n_stages=svc.n_stages,
-            source_node=svc.source_node)
-        if self.session.add(vs) is None:
-            self.rejected.append(svc.name)
+        vs = self._to_vsr(svc)
+        before = self._session_queued_sids()
+        if self.session.add(vs, priority=svc.priority) is None:
+            fresh = [s for s in self._session_queued_sids() - before
+                     if s not in self._by_sid]
+            if fresh:   # parked, not refused: keeps its sid in the queue
+                sid = max(fresh)
+                self.queued.append(svc.name)
+                self._queued_by_sid[sid] = svc
+            else:
+                self.rejected.append(svc.name)
+            self._adopt_drained()
             return self.placements()
         self.services.append(svc)
         self._by_sid[self.session.sids[-1]] = svc
+        self._adopt_drained()
+        return self.placements()
+
+    def add_services(self, svcs: List[Service]) -> List[Placement]:
+        """Admit a BATCH of services as one churn wave
+        (``session.apply_wave``): one fused re-solve + single polish pass
+        instead of one per service, with admission decided per service in
+        priority order.  Refused names land in ``self.rejected``, parked
+        ones (``spec.queue_rejected``) in ``self.queued``."""
+        for svc in svcs:
+            if any(s.name == svc.name for s in self.services):
+                raise ValueError(
+                    f"service named {svc.name!r} is already live")
+        names = [s.name for s in svcs]
+        if len(names) != len(set(names)):
+            raise ValueError("duplicate service name in batch")
+        wres = self.session.apply_wave(
+            [(self._to_vsr(s), None, s.priority) for s in svcs])
+        by_sid = dict(zip(wres.sids, svcs))
+        for sid in wres.admitted:
+            self.services.append(by_sid[sid])
+            self._by_sid[sid] = by_sid[sid]
+        self.rejected.extend(by_sid[sid].name for sid in wres.rejected)
+        # a queued service keeps its sid while parked and re-enters the
+        # fleet under it when capacity frees (see _adopt_drained)
+        for sid in wres.queued:
+            self.queued.append(by_sid[sid].name)
+            self._queued_by_sid[sid] = by_sid[sid]
+        self._adopt_drained()
         return self.placements()
 
     def remove_service(self, name: str) -> List[Placement]:
@@ -107,7 +146,64 @@ class EnergyAwareScheduler:
         self.session.remove(sid)
         svc = self._by_sid.pop(sid)
         self.services.remove(svc)    # by identity: exactly this admission
+        self._adopt_drained()
         return self.placements()
+
+    def remove_services(self, names: List[str]) -> List[Placement]:
+        """Retire a BATCH of services as one departure wave: one fused
+        ``detach_vsrs`` + one survivor re-settle, then the freed capacity
+        drains the priority queue."""
+        sids = []
+        for name in names:
+            sid = next((s for s, svc in self._by_sid.items()
+                        if svc.name == name), None)
+            if sid is None:
+                raise KeyError(f"no service named {name!r}")
+            sids.append(sid)
+        self.session.apply_wave(departures=sids)
+        for sid in sids:
+            svc = self._by_sid.pop(sid)
+            self.services.remove(svc)
+        self._adopt_drained()
+        return self.placements()
+
+    def _to_vsr(self, svc: Service) -> cfn_vsr.VSRBatch:
+        return cfn_vsr.from_architecture(
+            svc.arch, tokens_per_s=svc.tokens_per_s, n_stages=svc.n_stages,
+            source_node=svc.source_node)
+
+    def _adopt_drained(self) -> None:
+        """Reconcile queue churn with the session.  A parked service keeps
+        its sid in the session's priority queue, so when freed capacity
+        re-admits it the same sid shows up live -- move it queued -> live.
+        Symmetrically, a live service preempted by a higher class
+        (``spec.preempt``) moves live -> queued."""
+        for sid in self.session.sids:
+            svc = self._queued_by_sid.pop(sid, None)
+            if svc is not None:
+                self.services.append(svc)
+                self._by_sid[sid] = svc
+                self.queued.remove(svc.name)
+        live = set(self.session.sids)
+        gone = [s for s in self._by_sid if s not in live]
+        if gone:
+            parked = self._session_queued_sids()
+            for sid in gone:
+                if sid in parked:
+                    svc = self._by_sid.pop(sid)
+                    self.services.remove(svc)
+                    self._queued_by_sid[sid] = svc
+                    self.queued.append(svc.name)
+
+    def _session_queued_sids(self) -> set:
+        eng = getattr(self.session, "engine", None)
+        if eng is not None:   # flat CFNSession
+            return set(eng.queued_sids)
+        out = set()
+        for eng in getattr(self.session, "_engines", {}).values():
+            out.update(eng.queued_sids)
+        out.update(e[1] for e in getattr(self.session, "_fqueue", ()))
+        return out
 
     def defrag(self) -> List[Placement]:
         """Force a full-portfolio re-pack of the current fleet (the spec's
@@ -123,7 +219,9 @@ class EnergyAwareScheduler:
         per_w = self.session.attribute()
         placements = []
         for row, sid in enumerate(self.session.sids):
-            svc = self._by_sid[sid]
+            svc = self._by_sid.get(sid)
+            if svc is None:   # admitted outside this facade (raw session)
+                continue
             V = self.session.service_vms(row)   # rest is bucket/concat pad
             nodes = [self.topo.proc_names[p] for p in X[row][:V]]
             layers = [self.topo.proc_layer[p] for p in X[row][:V]]

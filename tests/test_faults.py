@@ -180,7 +180,7 @@ def test_stranded_never_silently_dropped(seed):
     s.tick(1.0)
     s.fail_node(src)
     live = set(s.sids)
-    queued = {sid for _, sid in s.engine._queue}
+    queued = set(s.engine.queued_sids)
     # every admitted service is accounted for: still live or parked
     assert live | queued == admitted
     assert hit <= queued                      # the sourced-there ones parked
@@ -222,7 +222,7 @@ def test_link_failure_reroutes_traffic(topo):
         # surviving placements carry (essentially) no traffic on the cut
         assert float(np.asarray(s.engine._state.lam)[n]) <= 1e-2
     # every service is still live or parked, never dropped
-    assert set(s.sids) | {sid for _, sid in s.engine._queue} == set(range(5))
+    assert set(s.sids) | set(s.engine.queued_sids) == set(range(5))
     s.recover_link(n)
     assert s.health.all_up and mon["link_recovered"] == 1
 
