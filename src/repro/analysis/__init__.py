@@ -23,23 +23,49 @@ by walking the AST of ``src/`` against a rule catalog:
           BlockSpec shapes at the documented max scale, plus Python
           loops over non-constant bounds inside kernel bodies.
 
+Rules CFN106-CFN109 ride on the flow-sensitive, interprocedural
+dataflow engine (``repro.analysis.dataflow``: per-function def-use
+chains, a project call graph, a small provenance lattice):
+
+  CFN106  PRNG-key discipline -- a key consumed by two draws, a key
+          fanned into a loop body without a per-iteration split, and
+          split outputs that are silently dropped.
+  CFN107  donation & aliasing -- arguments donated via
+          ``donate_argnums`` read (or stored into) after the jitted
+          call consumed their buffers.
+  CFN108  compile-cache cardinality -- a static bound on the jit-cache
+          key-space of every ``@count_traces`` entry; flags unbounded
+          or over-cap entries (``rules_flow.CACHE_CAPS``).
+  CFN109  dead device compute -- device arrays computed but never
+          consumed (allocation + compute with no observable effect).
+
 CLI: ``python -m repro.analysis [--baseline FILE] [--format text|json]
-[paths...]`` (exit 1 on any non-suppressed finding).  Suppression is
-per-line via ``# tracelint: allow[CFN10x]`` pragmas or per-finding via
-a committed baseline file (``analysis/baseline.json``).  The rule
+[--changed [REF]] [paths...]`` (exit 1 on any non-suppressed finding;
+``--changed`` reports only files touched vs the git ref while the full
+path set still feeds cross-module context).  Suppression is per-line
+via ``# tracelint: allow[CFN10x]`` pragmas or per-finding via a
+committed baseline file (``analysis/baseline.json`` for ``src``,
+``analysis/baseline-tools.json`` for benchmarks/examples).  The rule
 catalog is documented in ``docs/ANALYSIS.md``.
 """
-from .engine import (Finding, Module, Rule, analyze_paths, analyze_source,
+from .engine import (Finding, Module, Project, ProjectRule, Rule,
+                     analyze_paths, analyze_project, analyze_source,
                      apply_baseline, baseline_payload, iter_python_files,
-                     load_baseline)
+                     load_baseline, load_project)
 from .rules import (MAX_SCALE, VMEM_BUDGET_BYTES, DtypeDiscipline,
                     PallasVmemBudget, PytreeHygiene, RetraceHazards,
                     TraceCounterCoverage, all_rules)
+from .rules_flow import (CACHE_CAPS, CacheCardinality, DeadDeviceCompute,
+                         DonationDiscipline, EntryBound, PrngKeyDiscipline,
+                         compute_cache_bounds, flow_rules)
 
 __all__ = [
-    "Finding", "Module", "Rule", "analyze_paths", "analyze_source",
-    "apply_baseline", "baseline_payload", "iter_python_files",
-    "load_baseline", "all_rules", "RetraceHazards", "DtypeDiscipline",
-    "PytreeHygiene", "TraceCounterCoverage", "PallasVmemBudget",
-    "MAX_SCALE", "VMEM_BUDGET_BYTES",
+    "Finding", "Module", "Project", "ProjectRule", "Rule", "analyze_paths",
+    "analyze_project", "analyze_source", "apply_baseline",
+    "baseline_payload", "iter_python_files", "load_baseline", "load_project",
+    "all_rules", "RetraceHazards", "DtypeDiscipline", "PytreeHygiene",
+    "TraceCounterCoverage", "PallasVmemBudget", "MAX_SCALE",
+    "VMEM_BUDGET_BYTES", "PrngKeyDiscipline", "DonationDiscipline",
+    "CacheCardinality", "DeadDeviceCompute", "EntryBound", "CACHE_CAPS",
+    "compute_cache_bounds", "flow_rules",
 ]

@@ -1,21 +1,33 @@
 """CLI: ``python -m repro.analysis [--baseline FILE] [--format text|json]
-[paths...]``.  Exit 0 when every finding is suppressed (pragma or
-baseline), 1 otherwise."""
+[--changed [REF]] [paths...]``.  Exit 0 when every finding is suppressed
+(pragma or baseline), 1 otherwise."""
 from __future__ import annotations
 
 import argparse
 import json
+import subprocess
 import sys
 from pathlib import Path
 
 from . import engine
 
 
+def _changed_files(ref: str) -> set:
+    """Paths touched vs ``ref`` (diff + untracked), repo-relative."""
+    out = subprocess.run(
+        ["git", "diff", "--name-only", ref],
+        capture_output=True, text=True, check=True).stdout
+    untracked = subprocess.run(
+        ["git", "ls-files", "--others", "--exclude-standard"],
+        capture_output=True, text=True, check=True).stdout
+    return {ln.strip() for ln in (out + untracked).splitlines() if ln.strip()}
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
-        description="tracelint: JAX/Pallas compile-stability and numerics "
-                    "static analysis (rules CFN101-CFN105; see "
+        description="tracelint: JAX/Pallas compile-stability, numerics, and "
+                    "dataflow static analysis (rules CFN101-CFN109; see "
                     "docs/ANALYSIS.md)")
     ap.add_argument("paths", nargs="*", default=["src"],
                     help="files or directories to analyze (default: src)")
@@ -26,9 +38,32 @@ def main(argv=None) -> int:
     ap.add_argument("--write-baseline", metavar="FILE",
                     help="write the current findings as a new baseline "
                          "and exit 0")
+    ap.add_argument("--changed", metavar="REF", nargs="?", const="HEAD",
+                    default=None,
+                    help="report only findings in files changed vs REF "
+                         "(default HEAD); unchanged files still feed "
+                         "cross-module context")
     args = ap.parse_args(argv)
 
-    findings = engine.analyze_paths(args.paths)
+    only = None
+    if args.changed is not None:
+        try:
+            changed = _changed_files(args.changed)
+        except (OSError, subprocess.CalledProcessError) as e:
+            print(f"error: --changed {args.changed}: {e}", file=sys.stderr)
+            return 2
+        # restrict REPORTING to changed .py files under the given paths;
+        # the full path set still loads so interprocedural facts survive
+        roots = [Path(p) for p in args.paths]
+        only = set()
+        for c in changed:
+            p = Path(c)
+            if p.suffix != ".py":
+                continue
+            if any(p == r or r in p.parents for r in roots):
+                only.add(str(p))
+
+    findings = engine.analyze_paths(args.paths, only=only)
 
     if args.write_baseline:
         payload = engine.baseline_payload(findings)

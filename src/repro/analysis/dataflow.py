@@ -1,0 +1,1144 @@
+"""Flow-sensitive, interprocedural dataflow core for tracelint v2.
+
+The syntactic rules (CFN101-CFN105, ``rules.py``) see one module and one
+statement at a time; the CFN106-CFN109 families (``rules_flow.py``) need
+*values flowing between statements and functions*: which PRNG key a draw
+consumes, whether a donated buffer is read after the donating call,
+which static/shape-determining values reach a jitted entry.  This module
+supplies that machinery:
+
+  * ``ProjectIndex`` -- function tables per module (methods and nested
+    defs included), import resolution (absolute and relative), and call
+    resolution for bare names, ``module.fn`` attributes and
+    ``self.method`` calls.
+  * ``FlowWalker`` -- an abstract interpreter over one function body.
+    The environment maps variable names (including ``self.attr``
+    pseudo-variables) to abstract values: a set of *definition sites*
+    (for def-use chains: reassignment kills, aliases share) and a set of
+    *provenance atoms* (a small lattice: const < finite(k) < param <
+    bucket < opaque) used to bound jit-cache key-spaces.  ``if``/``else``
+    forks the environment and merges by union; loop bodies are walked
+    once with the loop span recorded on every def and use, which is
+    enough to detect "key defined outside the loop, consumed inside it"
+    while admitting the carry idiom (``key, k = split(key)`` -- the
+    consumed name is re-stored in the body).
+  * function summaries, computed to fixpoint over the project call
+    graph: which parameters a function consumes as PRNG keys (so a call
+    ``f(kp)`` counts as one consumption of ``kp`` at the call site).
+  * per-entry jit-cache records: every call site of a ``@count_traces``
+    entry, with the provenance-derived cache axes of its arguments
+    (``compute_cache_bounds`` in ``rules_flow`` builds on these).
+
+Scope and limits (documented in docs/ANALYSIS.md): calls through
+variables bound to transformed functions (``g = jax.jit(f); g(k)``) are
+resolved for *donation wrappers* and *entries* (assignment forms are
+indexed) but not for arbitrary key-consuming closures; containers of
+keys (``keys[i]``) are tracked only through direct iteration of a
+``split`` result; exceptional control flow is assumed to fall through.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, FrozenSet, Iterable, List, Optional, Sequence, Set, Tuple
+
+from .engine import Module, Project, module_name
+from .rules import (_dotted, _is_count_traces_decorator, _is_jit_decorator,
+                    _unwrap_to_names)
+
+# ---------------------------------------------------------------------------
+# vocabulary
+# ---------------------------------------------------------------------------
+
+# jax.random draws: each CONSUMES the key passed first (arg 0)
+_DRAW_FNS = {
+    "split", "uniform", "normal", "randint", "bernoulli", "choice",
+    "permutation", "shuffle", "categorical", "gumbel", "exponential",
+    "truncated_normal", "beta", "gamma", "dirichlet", "poisson", "laplace",
+    "cauchy", "logistic", "multivariate_normal", "rademacher", "bits",
+    "orthogonal", "t", "loggamma", "binomial", "geometric", "rayleigh",
+    "weibull_min", "chisquare", "f", "wald", "triangular", "ball",
+}
+# derive a NEW independent key without consuming the argument
+_KEY_DERIVERS = {"fold_in", "PRNGKey", "key", "clone", "wrap_key_data"}
+
+# shape-bucketing helpers: results take finitely many values (the pow-2
+# bucket policy), so a bucketed value feeding a jit entry is a bounded
+# cache axis, not an unbounded one
+_BUCKET_FNS = {"_pow2", "_pad_positions", "_pad_links", "_bucket_rows",
+               "pow2", "next_pow2", "bucket"}
+
+# calls whose results inherit their arguments' provenance even when we
+# cannot resolve the callee (pure array/math/builtin surface); an
+# UNRESOLVED call with no rooted argument and not on this surface is
+# opaque -- the "unbounded" end of the lattice
+_PURE_PREFIXES = ("jnp.", "jax.", "np.", "numpy.", "onp.", "lax.", "math.",
+                  "functools.")
+_PURE_BARE = {
+    "len", "int", "float", "bool", "str", "abs", "min", "max", "sum",
+    "round", "sorted", "list", "tuple", "set", "dict", "frozenset",
+    "range", "enumerate", "zip", "map", "filter", "reversed", "getattr",
+    "hasattr", "isinstance", "print", "repr", "divmod", "pow", "any",
+    "all", "slice", "iter", "next", "vars", "id", "type", "format",
+}
+
+# assignments of these calls to a never-read name are dead device compute
+# (CFN109): the PR 7 `np.asarray(st.X)` bug class
+_DEVICE_PREFIXES = ("jnp.", "jax.numpy.", "jax.random.", "jax.lax.", "lax.",
+                    "jax.nn.", "jax.scipy.")
+_DEVICE_EXACT = {"np.asarray", "np.array", "numpy.asarray", "numpy.array",
+                 "onp.asarray", "onp.array", "jax.device_put",
+                 "jax.device_get"}
+
+
+def _is_draw(dotted: Optional[str]) -> bool:
+    if not dotted:
+        return False
+    parts = dotted.split(".")
+    return parts[-1] in _DRAW_FNS and (
+        len(parts) >= 2 and parts[-2] in ("random", "jr")
+        or parts[0] == "random")
+
+
+def _is_key_deriver(dotted: Optional[str]) -> bool:
+    if not dotted:
+        return False
+    parts = dotted.split(".")
+    return parts[-1] in _KEY_DERIVERS and (
+        len(parts) == 1 or parts[-2] in ("random", "jr", "jax")
+        or parts[0] == "random")
+
+
+def _is_split(dotted: Optional[str]) -> bool:
+    return _is_draw(dotted) and dotted.split(".")[-1] == "split"
+
+
+# ---------------------------------------------------------------------------
+# abstract values
+# ---------------------------------------------------------------------------
+
+# a definition site: (module_path, line, distinguishing_token)
+DefSite = Tuple[str, int, str]
+
+# provenance atoms (the CFN108 lattice):
+#   ("const",)                 literal / module constant           card 1
+#   ("finite", name, k)        one of k literal options            card k
+#   ("param", name)            rooted at a caller-supplied value   card "per scenario"
+#   ("bucket", name)           through the pow-2 bucket policy     card #buckets
+#   ("opaque", name)           unknown origin                      unbounded
+Atom = Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Val:
+    defs: FrozenSet[DefSite] = frozenset()
+    prov: FrozenSet[Atom] = frozenset()
+
+    @staticmethod
+    def merge(vals: Iterable["Val"]) -> "Val":
+        defs: Set[DefSite] = set()
+        prov: Set[Atom] = set()
+        for v in vals:
+            defs |= v.defs
+            prov |= v.prov
+        return Val(frozenset(defs), frozenset(prov))
+
+
+CONST = Val(prov=frozenset({("const",)}))
+
+
+# ---------------------------------------------------------------------------
+# per-function facts
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class KeyDef:
+    site: DefSite
+    var: str
+    line: int
+    loops: FrozenSet[int]      # lines of enclosing loops at the def
+    kind: str                  # "prngkey" | "split" | "derive" | "param"
+
+
+@dataclasses.dataclass
+class Consume:
+    site: DefSite              # the def being consumed
+    var: str                   # name it was reached through
+    line: int
+    col: int
+    loops: FrozenSet[int]      # lines of enclosing loops at the use
+    how: str                   # "jax.random.uniform" | "call:anneal" | ...
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheAxis:
+    name: str                  # "resolve_incremental.pad_changed_to"
+    kind: str                  # "const" | "finite" | "param" | "bucket" | "unbounded"
+    card: Optional[int]        # finite k; None otherwise
+    static: bool = False       # reaches a static_argnums/static_argnames slot
+
+
+@dataclasses.dataclass
+class EntryCall:
+    entry: str                 # TRACE_COUNTS name
+    path: str
+    context: str               # caller qualname
+    line: int
+    axes: Tuple[CacheAxis, ...]
+
+
+@dataclasses.dataclass
+class DonationEvent:
+    kind: str                  # "read-after-donate" | "alias"
+    var: str
+    entry: str                 # wrapper name
+    donate_line: int
+    line: int                  # the offending read / the aliasing call
+
+
+@dataclasses.dataclass
+class FuncFacts:
+    qual: str
+    path: str
+    line: int
+    params: List[str] = dataclasses.field(default_factory=list)
+    key_defs: Dict[DefSite, KeyDef] = dataclasses.field(default_factory=dict)
+    consumes: Dict[DefSite, List[Consume]] = dataclasses.field(
+        default_factory=dict)
+    consumed_params: Set[str] = dataclasses.field(default_factory=set)
+    # (line, [target names], loops) of every tuple-unpacked split
+    split_assigns: List[Tuple[int, List[str], FrozenSet[int]]] = \
+        dataclasses.field(default_factory=list)
+    loop_stores: Dict[int, Set[str]] = dataclasses.field(default_factory=dict)
+    # loop context of EVERY definition site (anonymous call results too):
+    # the loop-fan-out check needs to know a def was born inside the loop
+    site_loops: Dict[DefSite, FrozenSet[int]] = dataclasses.field(
+        default_factory=dict)
+    loads: Set[str] = dataclasses.field(default_factory=set)
+    dead_assigns: List[Tuple[int, str, str]] = dataclasses.field(
+        default_factory=list)
+    donation_events: List[DonationEvent] = dataclasses.field(
+        default_factory=list)
+    entry_calls: List[EntryCall] = dataclasses.field(default_factory=list)
+
+
+# ---------------------------------------------------------------------------
+# project index: functions, imports, entries, donation wrappers
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FuncInfo:
+    mod: Module
+    node: ast.AST              # FunctionDef / AsyncFunctionDef
+    qual: str
+    class_name: Optional[str]
+
+    @property
+    def params(self) -> List[str]:
+        a = self.node.args
+        return [x.arg for x in
+                list(getattr(a, "posonlyargs", [])) + list(a.args)]
+
+    @property
+    def kwonly(self) -> List[str]:
+        return [x.arg for x in self.node.args.kwonlyargs]
+
+
+@dataclasses.dataclass
+class EntryDef:
+    name: str                  # the count_traces literal
+    mod: Module
+    fn: ast.AST                # the wrapped (impl) FunctionDef
+    callables: Set[str]        # names that invoke it in the defining module
+    static_names: Set[str]
+
+
+@dataclasses.dataclass
+class DonationWrapper:
+    name: str                  # callable name in the defining module
+    mod: Module
+    donate: Tuple[int, ...]    # donated positional indices
+    fn: Optional[ast.AST]      # wrapped FunctionDef when local
+
+
+def _static_names_from_jit(call: ast.Call,
+                           fn: Optional[ast.AST]) -> Set[str]:
+    """Param names keyed statically by a ``jax.jit(...)`` call node."""
+    names: Set[str] = set()
+    nums: List[int] = []
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, str):
+                    names.add(n.value)
+        elif kw.arg == "static_argnums":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, int):
+                    nums.append(n.value)
+    if nums and fn is not None:
+        params = FuncInfo(None, fn, fn.name, None).params
+        for i in nums:
+            if 0 <= i < len(params):
+                names.add(params[i])
+    return names
+
+
+def _donate_nums(call: ast.Call) -> Tuple[int, ...]:
+    for kw in call.keywords:
+        if kw.arg in ("donate_argnums", "donate_argnames"):
+            return tuple(n.value for n in ast.walk(kw.value)
+                         if isinstance(n, ast.Constant)
+                         and isinstance(n.value, int))
+    return ()
+
+
+class ProjectIndex:
+    """Name resolution over the whole project (the call graph substrate)."""
+
+    def __init__(self, project: Project):
+        self.project = project
+        self.funcs: Dict[Tuple[str, str], FuncInfo] = {}   # (path, qual)
+        self.bare: Dict[str, Dict[str, FuncInfo]] = {}     # path -> name -> fi
+        self.methods: Dict[str, Dict[str, Dict[str, FuncInfo]]] = {}
+        self.imports: Dict[str, Dict[str, Tuple]] = {}     # path -> alias -> ..
+        self.const_dicts: Dict[str, Dict[str, int]] = {}   # path -> name -> len
+        self.entries: Dict[str, Dict[str, EntryDef]] = {}  # path -> callable ->
+        self.entry_defs: Dict[str, EntryDef] = {}          # entry name -> def
+        self.donations: Dict[str, Dict[str, DonationWrapper]] = {}
+        for m in project.modules:
+            self._index_module(m)
+
+    # -- per-module tables --------------------------------------------------
+
+    def _index_module(self, mod: Module) -> None:
+        p = mod.path
+        self.bare[p] = {}
+        self.methods[p] = {}
+        self.imports[p] = self._imports(mod)
+        self.const_dicts[p] = {}
+        self.entries[p] = {}
+        self.donations[p] = {}
+        self._index_defs(mod, mod.tree, (), None)
+        for node in mod.tree.body:
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name) \
+                    and isinstance(node.value, ast.Dict):
+                self.const_dicts[p][node.targets[0].id] = \
+                    len(node.value.keys)
+        self._index_entries(mod)
+        self._index_donations(mod)
+
+    def _index_defs(self, mod: Module, node: ast.AST, stack: tuple,
+                    class_name: Optional[str]) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qual = ".".join(stack + (child.name,))
+                fi = FuncInfo(mod, child, qual, class_name)
+                self.funcs[(mod.path, qual)] = fi
+                if class_name is None:
+                    # bare-name reachable (module-level and nested defs);
+                    # first (outermost) definition wins
+                    self.bare[mod.path].setdefault(child.name, fi)
+                else:
+                    self.methods[mod.path].setdefault(class_name, {})
+                    self.methods[mod.path][class_name][child.name] = fi
+                self._index_defs(mod, child, stack + (child.name,),
+                                 class_name)
+            elif isinstance(child, ast.ClassDef):
+                self._index_defs(mod, child, stack + (child.name,),
+                                 child.name)
+            else:
+                self._index_defs(mod, child, stack, class_name)
+
+    def _imports(self, mod: Module) -> Dict[str, Tuple]:
+        out: Dict[str, Tuple] = {}
+        base = (module_name(mod.path) or "").split(".")
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.asname:
+                        out[a.asname] = ("mod", a.name)
+                    else:
+                        out[a.name.split(".")[0]] = \
+                            ("mod", a.name.split(".")[0])
+            elif isinstance(node, ast.ImportFrom):
+                if node.level:
+                    parent = base[:-node.level] if node.level <= len(base) \
+                        else []
+                    target = ".".join(parent + ([node.module]
+                                                if node.module else []))
+                else:
+                    target = node.module or ""
+                for a in node.names:
+                    out[a.asname or a.name] = ("attr", target, a.name)
+        return out
+
+    def _index_entries(self, mod: Module) -> None:
+        top = {n.name: n for n in mod.tree.body
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+        for fn in top.values():
+            ct = next((d for d in fn.decorator_list
+                       if _is_count_traces_decorator(d)), None)
+            if ct is None or not any(_is_jit_decorator(d)
+                                     for d in fn.decorator_list):
+                continue
+            name = (ct.args[0].value if ct.args
+                    and isinstance(ct.args[0], ast.Constant) else fn.name)
+            static: Set[str] = set()
+            for d in fn.decorator_list:
+                if isinstance(d, ast.Call) and _is_jit_decorator(d):
+                    static |= _static_names_from_jit(d, fn)
+            e = EntryDef(name, mod, fn, {fn.name}, static)
+            self.entries[mod.path][fn.name] = e
+            self.entry_defs.setdefault(name, e)
+        for node in mod.tree.body:
+            if not (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)
+                    and isinstance(node.value, ast.Call)
+                    and _is_jit_decorator(node.value)
+                    and node.value.args):
+                continue
+            wrapped = _unwrap_to_names(node.value.args[0])
+            fn = top.get(wrapped[0]) if wrapped else None
+            if fn is None:
+                continue
+            ct = next((d for d in fn.decorator_list
+                       if _is_count_traces_decorator(d)), None)
+            if ct is None:
+                continue
+            name = (ct.args[0].value if ct.args
+                    and isinstance(ct.args[0], ast.Constant) else fn.name)
+            wname = node.targets[0].id
+            e = self.entry_defs.get(name)
+            if e is None or e.fn is not fn:
+                e = EntryDef(name, mod, fn, set(), set())
+                self.entry_defs.setdefault(name, e)
+            e = self.entry_defs[name]
+            e.callables.add(wname)
+            e.static_names |= _static_names_from_jit(node.value, fn)
+            self.entries[mod.path][wname] = e
+
+    def _index_donations(self, mod: Module) -> None:
+        top = {n.name: n for n in mod.tree.body
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+        for node in mod.tree.body:
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name) \
+                    and isinstance(node.value, ast.Call) \
+                    and _is_jit_decorator(node.value):
+                donate = _donate_nums(node.value)
+                if donate:
+                    wrapped = _unwrap_to_names(node.value.args[0]) \
+                        if node.value.args else []
+                    self.donations[mod.path][node.targets[0].id] = \
+                        DonationWrapper(node.targets[0].id, mod, donate,
+                                        top.get(wrapped[0])
+                                        if wrapped else None)
+        for fn in top.values():
+            for d in fn.decorator_list:
+                if isinstance(d, ast.Call) and _is_jit_decorator(d):
+                    donate = _donate_nums(d)
+                    if donate:
+                        self.donations[mod.path][fn.name] = \
+                            DonationWrapper(fn.name, mod, donate, fn)
+
+    # -- resolution ---------------------------------------------------------
+
+    def _module_for(self, mod: Module, head: str) -> Optional[Module]:
+        imp = self.imports[mod.path].get(head)
+        if imp is None:
+            return None
+        if imp[0] == "mod":
+            return self.project.by_name.get(imp[1])
+        target, attr = imp[1], imp[2]
+        return self.project.by_name.get(f"{target}.{attr}")
+
+    def resolve_func(self, mod: Module, dotted: Optional[str],
+                     class_name: Optional[str] = None) -> Optional[FuncInfo]:
+        if not dotted:
+            return None
+        parts = dotted.split(".")
+        if len(parts) == 2 and parts[0] == "self" and class_name:
+            return self.methods[mod.path].get(class_name, {}).get(parts[1])
+        if len(parts) == 1:
+            fi = self.bare[mod.path].get(parts[0])
+            if fi is not None:
+                return fi
+            imp = self.imports[mod.path].get(parts[0])
+            if imp and imp[0] == "attr":
+                m = self.project.by_name.get(imp[1])
+                if m is not None:
+                    return self.bare[m.path].get(imp[2])
+            return None
+        if len(parts) == 2:
+            m = self._module_for(mod, parts[0])
+            if m is not None:
+                return self.bare[m.path].get(parts[1])
+        # fully-dotted module path: repro.core.solvers.anneal
+        for i in range(len(parts) - 1, 0, -1):
+            m = self.project.by_name.get(".".join(parts[:i]))
+            if m is not None and i == len(parts) - 1:
+                return self.bare[m.path].get(parts[-1])
+        return None
+
+    def resolve_entry(self, mod: Module,
+                      dotted: Optional[str]) -> Optional[EntryDef]:
+        if not dotted:
+            return None
+        parts = dotted.split(".")
+        if len(parts) == 1:
+            return self.entries[mod.path].get(parts[0])
+        if len(parts) == 2:
+            m = self._module_for(mod, parts[0])
+            if m is not None:
+                return self.entries[m.path].get(parts[1])
+        return None
+
+    def resolve_donation(self, mod: Module,
+                         dotted: Optional[str]) -> Optional[DonationWrapper]:
+        if not dotted:
+            return None
+        parts = dotted.split(".")
+        if len(parts) == 1:
+            return self.donations[mod.path].get(parts[0])
+        if len(parts) == 2:
+            m = self._module_for(mod, parts[0])
+            if m is not None:
+                return self.donations[m.path].get(parts[1])
+        return None
+
+    def resolve_const_dict(self, mod: Module,
+                           dotted: Optional[str]) -> Optional[int]:
+        if not dotted:
+            return None
+        parts = dotted.split(".")
+        if len(parts) == 1:
+            return self.const_dicts[mod.path].get(parts[0])
+        if len(parts) == 2:
+            m = self._module_for(mod, parts[0])
+            if m is not None:
+                return self.const_dicts[m.path].get(parts[1])
+        return None
+
+
+# ---------------------------------------------------------------------------
+# the flow walker
+# ---------------------------------------------------------------------------
+
+def _target_name(node: ast.AST) -> Optional[str]:
+    """Plain assignable name: ``x`` or the ``self.attr`` pseudo-variable."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute) and isinstance(node.value, ast.Name) \
+            and node.value.id == "self":
+        return f"self.{node.attr}"
+    return None
+
+
+def _stored_names(node: ast.AST) -> Set[str]:
+    out: Set[str] = set()
+    for n in ast.walk(node):
+        if isinstance(n, (ast.Name, ast.Attribute)) \
+                and isinstance(getattr(n, "ctx", None), ast.Store):
+            t = _target_name(n)
+            if t:
+                out.add(t)
+    return out
+
+
+def _loaded_names(fn: ast.AST) -> Set[str]:
+    """Every name (and ``self.attr``) read anywhere in ``fn``, nested
+    scopes included -- the scope-wide liveness set for the split-unused
+    and dead-compute checks."""
+    out: Set[str] = set()
+    for n in ast.walk(fn):
+        if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load):
+            out.add(n.id)
+        elif isinstance(n, ast.Attribute) \
+                and isinstance(n.ctx, ast.Load):
+            t = _target_name(n)
+            if t:
+                out.add(t)
+    return out
+
+
+class FlowWalker:
+    """Abstract interpretation of one function body (see module docstring)."""
+
+    def __init__(self, analyzer: "Analyzer", fi: FuncInfo):
+        self.an = analyzer
+        self.fi = fi
+        self.mod = fi.mod
+        self.facts = FuncFacts(qual=fi.qual, path=fi.mod.path,
+                               line=fi.node.lineno, params=fi.params)
+        self.env: Dict[str, Val] = {}
+        self.loops: Tuple[int, ...] = ()
+        self.donated: Dict[DefSite, Tuple[str, int]] = {}  # -> (entry, line)
+        self._fresh = 0
+        self._param_sites: Dict[DefSite, str] = {}
+        # defs killed on EVERY path through their consuming statement
+        # (`key, k = split(key)`): later sightings are path-exclusive
+        # merge artifacts, not double draws
+        self._retired: Set[DefSite] = set()
+        # single-target split results are ARRAYS of keys: indexing one
+        # derives a per-index key (memoized per constant index, so
+        # drawing from ks[0] twice is still a double consumption)
+        self._split_arrays: Set[DefSite] = set()
+        self._derived_idx: Dict[Tuple[DefSite, str], Val] = {}
+        for p in fi.params + fi.kwonly:
+            site = (fi.mod.path, fi.node.lineno, f"param:{p}")
+            self._param_sites[site] = p
+            self.env[p] = Val(frozenset({site}),
+                              frozenset({("param", f"{fi.qual}.{p}")}))
+
+    # -- plumbing -----------------------------------------------------------
+
+    def _site(self, line: int, token: str) -> DefSite:
+        self._fresh += 1
+        site = (self.mod.path, line, f"{token}#{self._fresh}")
+        self.facts.site_loops[site] = frozenset(self.loops)
+        return site
+
+    def _bind(self, name: str, val: Val) -> None:
+        self.env[name] = val
+
+    def _consume(self, val: Val, node: ast.AST, var: str, how: str) -> None:
+        for site in val.defs:
+            if site in self._retired:
+                continue
+            self.facts.consumes.setdefault(site, []).append(Consume(
+                site=site, var=var, line=node.lineno, col=node.col_offset,
+                loops=frozenset(self.loops), how=how))
+            if site in self._param_sites:
+                self.facts.consumed_params.add(self._param_sites[site])
+
+    def _key_def(self, name: str, line: int, kind: str) -> Val:
+        site = self._site(line, name)
+        self.facts.key_defs[site] = KeyDef(
+            site=site, var=name, line=line, loops=frozenset(self.loops),
+            kind=kind)
+        return Val(frozenset({site}), frozenset({("param",
+                                                  f"{self.fi.qual}.{name}")}))
+
+    # -- expressions --------------------------------------------------------
+
+    def eval(self, node: Optional[ast.AST]) -> Val:
+        if node is None or isinstance(node, ast.Constant):
+            return CONST
+        if isinstance(node, ast.Name):
+            return self._eval_name(node)
+        if isinstance(node, ast.Attribute):
+            return self._eval_attr(node)
+        if isinstance(node, ast.Call):
+            return self._eval_call(node)
+        if isinstance(node, ast.Subscript):
+            return self._eval_subscript(node)
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            return Val.merge([self.eval(e) for e in node.elts])
+        if isinstance(node, ast.Dict):
+            return Val.merge([self.eval(e) for e in
+                              list(node.keys) + list(node.values)
+                              if e is not None])
+        if isinstance(node, ast.IfExp):
+            self.eval(node.test)
+            return Val.merge([self.eval(node.body), self.eval(node.orelse)])
+        if isinstance(node, ast.BoolOp):
+            return Val.merge([self.eval(v) for v in node.values])
+        if isinstance(node, ast.BinOp):
+            return Val.merge([self.eval(node.left), self.eval(node.right)])
+        if isinstance(node, ast.UnaryOp):
+            return self.eval(node.operand)
+        if isinstance(node, ast.Compare):
+            return Val.merge([self.eval(node.left)]
+                             + [self.eval(c) for c in node.comparators])
+        if isinstance(node, ast.Starred):
+            return self.eval(node.value)
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.GeneratorExp,
+                             ast.DictComp)):
+            # comprehensions: evaluate iterables for provenance; the
+            # element expression runs in its own scope (not walked)
+            return Val.merge([self.eval(g.iter) for g in node.generators])
+        if isinstance(node, ast.JoinedStr):
+            return CONST
+        if isinstance(node, (ast.Lambda, ast.NamedExpr)):
+            if isinstance(node, ast.NamedExpr):
+                val = self.eval(node.value)
+                t = _target_name(node.target)
+                if t:
+                    self._bind(t, val)
+                return val
+            return CONST
+        return CONST
+
+    def _check_donated_read(self, val: Val, node: ast.AST,
+                            name: str) -> None:
+        for site in val.defs:
+            if site in self.donated:
+                entry, dline = self.donated[site]
+                self.facts.donation_events.append(DonationEvent(
+                    kind="read-after-donate", var=name, entry=entry,
+                    donate_line=dline, line=node.lineno))
+                return
+
+    def _eval_name(self, node: ast.Name) -> Val:
+        val = self.env.get(node.id)
+        if val is None:
+            return CONST      # module global / builtin / closure constant
+        self._check_donated_read(val, node, node.id)
+        return val
+
+    def _eval_attr(self, node: ast.Attribute) -> Val:
+        t = _target_name(node)
+        if t is not None and t in self.env:
+            val = self.env[t]
+            self._check_donated_read(val, node, t)
+            return val
+        # attribute chain rooted at a local value (problem.R, aux.free_pos)
+        root = node
+        while isinstance(root, ast.Attribute):
+            root = root.value
+        if isinstance(root, ast.Name) and root.id in self.env:
+            val = self.env[root.id]
+            self._check_donated_read(val, node, root.id)
+            return val
+        return CONST          # module attribute (np.int32, solvers.X, ...)
+
+    def _eval_subscript(self, node: ast.Subscript) -> Val:
+        base = _dotted(node.value)
+        k = self.an.index.resolve_const_dict(self.mod, base)
+        idx = node.slice
+        if k is not None:
+            nm = idx.id if isinstance(idx, ast.Name) else (base or "idx")
+            self.eval(idx)
+            return Val(prov=frozenset({("finite",
+                                        f"{self.fi.qual}.{nm}", k)}))
+        bval = self.eval(node.value)
+        # `ks = split(key, n)` is an ARRAY of keys: `ks[i]` derives a
+        # per-index key, not a read of the array's own def.  Constant
+        # indices are memoized so `normal(ks[0])` twice is still a
+        # double draw; dynamic indices get fresh defs each sighting.
+        if bval.defs and bval.defs <= self._split_arrays:
+            self.eval(idx)
+            site = next(iter(sorted(bval.defs)))
+            if isinstance(idx, ast.Constant):
+                memo_key = (site, repr(idx.value))
+                if memo_key not in self._derived_idx:
+                    self._derived_idx[memo_key] = self._key_def(
+                        f"{base or 'ks'}[{idx.value!r}]", node.lineno,
+                        "split-index")
+                return self._derived_idx[memo_key]
+            return self._key_def(f"{base or 'ks'}[…]", node.lineno,
+                                 "split-index")
+        return Val.merge([bval, self.eval(idx)])
+
+    # -- calls --------------------------------------------------------------
+
+    def _arg_vals(self, node: ast.Call) -> Tuple[List[Val], Dict[str, Val]]:
+        pos = [self.eval(a) for a in node.args]
+        kw = {k.arg: self.eval(k.value) for k in node.keywords
+              if k.arg is not None}
+        for k in node.keywords:
+            if k.arg is None:
+                self.eval(k.value)
+        return pos, kw
+
+    def _eval_call(self, node: ast.Call) -> Val:
+        t = _dotted(node.func)
+        pos, kw = self._arg_vals(node)
+        inherit = Val.merge(pos + list(kw.values()))
+
+        # jax.random draws consume their key (split/fold_in handled too)
+        if _is_draw(t):
+            if node.args:
+                self._consume(pos[0], node, _dotted(node.args[0]) or "<expr>",
+                              t)
+            return Val(frozenset({self._site(node.lineno, t.split(".")[-1])}),
+                       inherit.prov or frozenset({("const",)}))
+        if _is_key_deriver(t):
+            # derives an independent stream WITHOUT consuming the argument
+            return self._key_def(f"<{t.split('.')[-1]}>", node.lineno,
+                                 "derive")
+
+        # shape-bucket helpers: finitely many results (pow-2 policy)
+        leaf = t.split(".")[-1] if t else ""
+        if leaf in _BUCKET_FNS:
+            size = node.args[-1] if node.args else None
+            nm = _dotted(size) if size is not None else None
+            axis = f"{self.fi.qual}.{nm or leaf + '@' + str(node.lineno)}"
+            return Val(frozenset({self._site(node.lineno, leaf)}),
+                       frozenset({("bucket", axis)}))
+
+        # donation wrappers: poison donated args, catch same-call aliasing
+        dw = self.an.index.resolve_donation(self.mod, t)
+        if dw is not None:
+            self._apply_donation(node, dw, pos)
+
+        # jitted @count_traces entries: record the cache axes reaching them
+        entry = self.an.index.resolve_entry(self.mod, t)
+        if entry is not None:
+            self._record_entry_call(node, entry, pos, kw)
+
+        # interprocedural key consumption via summaries
+        fi = self.an.index.resolve_func(
+            self.mod, t, class_name=self.fi.class_name)
+        if fi is not None:
+            key_params = self.an.summaries.get((fi.mod.path, fi.qual), set())
+            if key_params:
+                params = fi.params
+                off = 1 if (fi.class_name is not None and t
+                            and t.startswith("self.")) else 0
+                for i, v in enumerate(pos):
+                    j = i + off
+                    if j < len(params) and params[j] in key_params:
+                        self._consume(v, node,
+                                      _dotted(node.args[i]) or "<expr>",
+                                      f"call:{fi.qual}")
+                for name, v in kw.items():
+                    if name in key_params:
+                        self._consume(
+                            v, node,
+                            _dotted(dict((k.arg, k.value)
+                                         for k in node.keywords)[name])
+                            or "<expr>", f"call:{fi.qual}")
+            return Val(frozenset({self._site(node.lineno, leaf or "call")}),
+                       inherit.prov or frozenset({("const",)}))
+
+        # unresolved call: method calls on rooted objects and the pure
+        # array/builtin surface inherit argument provenance; anything
+        # else with NO rooted inputs is opaque (statically unbounded)
+        obj_val = CONST
+        if isinstance(node.func, ast.Attribute):
+            obj_val = self.eval(node.func.value)
+        merged = Val.merge([inherit, obj_val])
+        rooted = any(a[0] != "const" for a in merged.prov)
+        pure = (t is not None and (t.startswith(_PURE_PREFIXES)
+                                   or t in _PURE_BARE))
+        if rooted or pure:
+            return Val(frozenset({self._site(node.lineno, leaf or "call")}),
+                       merged.prov or frozenset({("const",)}))
+        return Val(frozenset({self._site(node.lineno, leaf or "call")}),
+                   frozenset({("opaque",
+                               f"{self.fi.qual}.{leaf or 'call'}"
+                               f"@{node.lineno}")}))
+
+    def _apply_donation(self, node: ast.Call, dw: DonationWrapper,
+                        pos: List[Val]) -> None:
+        donated_names: Set[str] = set()
+        for i in dw.donate:
+            if i < len(node.args):
+                nm = _target_name(node.args[i])
+                if nm:
+                    donated_names.add(nm)
+        # same-call aliasing: a donated name also passed in another slot
+        for i, a in enumerate(node.args):
+            nm = _target_name(a)
+            if nm in donated_names and i not in dw.donate:
+                self.facts.donation_events.append(DonationEvent(
+                    kind="alias", var=nm, entry=dw.name,
+                    donate_line=node.lineno, line=node.lineno))
+        for i in dw.donate:
+            if i < len(node.args):
+                nm = _target_name(node.args[i])
+                if nm and nm in self.env:
+                    for site in self.env[nm].defs:
+                        self.donated[site] = (dw.name, node.lineno)
+
+    def _axes_from_val(self, val: Val, static: bool) -> List[CacheAxis]:
+        out = []
+        for a in val.prov:
+            if a[0] == "const":
+                continue
+            if a[0] == "finite":
+                out.append(CacheAxis(a[1], "finite", a[2], static))
+            elif a[0] == "param":
+                out.append(CacheAxis(a[1], "param", None, static))
+            elif a[0] == "bucket":
+                out.append(CacheAxis(a[1], "bucket", None, static))
+            elif a[0] == "opaque":
+                out.append(CacheAxis(a[1], "unbounded", None, static))
+        return out
+
+    def _record_entry_call(self, node: ast.Call, entry: EntryDef,
+                           pos: List[Val], kw: Dict[str, Val]) -> None:
+        params = FuncInfo(entry.mod, entry.fn, entry.fn.name, None).params
+        axes: Dict[str, CacheAxis] = {}
+        for i, v in enumerate(pos):
+            pname = params[i] if i < len(params) else f"arg{i}"
+            static = pname in entry.static_names
+            for ax in self._axes_from_val(v, static):
+                prev = axes.get(ax.name)
+                if prev is None or (ax.static and not prev.static):
+                    axes[ax.name] = ax
+        for name, v in kw.items():
+            static = name in entry.static_names
+            for ax in self._axes_from_val(v, static):
+                prev = axes.get(ax.name)
+                if prev is None or (ax.static and not prev.static):
+                    axes[ax.name] = ax
+        self.facts.entry_calls.append(EntryCall(
+            entry=entry.name, path=self.mod.path, context=self.fi.qual,
+            line=node.lineno, axes=tuple(sorted(axes.values(),
+                                                key=lambda a: a.name))))
+
+    # -- statements ---------------------------------------------------------
+
+    def walk(self) -> FuncFacts:
+        self._walk_body(self.fi.node.body)
+        self.facts.loads = _loaded_names(self.fi.node)
+        self._collect_dead_assigns()
+        return self.facts
+
+    def _walk_body(self, body: Sequence[ast.stmt]) -> None:
+        for stmt in body:
+            self._walk_stmt(stmt)
+
+    def _walk_stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, (ast.Assign, ast.AnnAssign)):
+            targets = stmt.targets if isinstance(stmt, ast.Assign) \
+                else [stmt.target]
+            self._assign(targets, stmt.value)
+        elif isinstance(stmt, ast.AugAssign):
+            val = self.eval(stmt.value)
+            t = _target_name(stmt.target)
+            if t and t in self.env:
+                self._bind(t, Val.merge([self.env[t], val]))
+        elif isinstance(stmt, ast.Expr):
+            self.eval(stmt.value)
+        elif isinstance(stmt, ast.Return):
+            self.eval(stmt.value)
+        elif isinstance(stmt, ast.If):
+            self.eval(stmt.test)
+            before = dict(self.env)
+            self._walk_body(stmt.body)
+            after_if = self.env
+            self.env = dict(before)
+            self._walk_body(stmt.orelse)
+            self._merge_env(after_if)
+        elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self._walk_loop(stmt)
+        elif isinstance(stmt, ast.While):
+            self.eval(stmt.test)
+            self._walk_loop(stmt, target=None, it=None)
+        elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                val = self.eval(item.context_expr)
+                if item.optional_vars is not None:
+                    self._bind_target(item.optional_vars, val)
+            self._walk_body(stmt.body)
+        elif isinstance(stmt, ast.Try):
+            before = dict(self.env)
+            self._walk_body(stmt.body)
+            for h in stmt.handlers:
+                saved = self.env
+                self.env = dict(before)
+                self._walk_body(h.body)
+                self._merge_env(saved)
+            self._walk_body(stmt.orelse)
+            self._walk_body(stmt.finalbody)
+        elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+            pass   # nested defs are analyzed as their own functions
+        elif isinstance(stmt, (ast.Raise, ast.Assert)):
+            if isinstance(stmt, ast.Assert):
+                self.eval(stmt.test)
+            elif stmt.exc is not None:
+                self.eval(stmt.exc)
+        elif isinstance(stmt, ast.Delete):
+            for tgt in stmt.targets:
+                t = _target_name(tgt)
+                if t:
+                    self.env.pop(t, None)
+
+    def _merge_env(self, other: Dict[str, Val]) -> None:
+        for name, val in other.items():
+            if name in self.env:
+                self.env[name] = Val.merge([self.env[name], val])
+            else:
+                self.env[name] = val
+
+    def _walk_loop(self, stmt, target="sentinel", it="sentinel") -> None:
+        if target == "sentinel":
+            target, it = stmt.target, stmt.iter
+        loop_id = stmt.lineno
+        self.facts.loop_stores[loop_id] = \
+            self.facts.loop_stores.get(loop_id, set()) | _stored_names(stmt)
+        if it is not None:
+            # iterating a split result yields a FRESH key per iteration
+            if isinstance(it, ast.Call) and _is_split(_dotted(it.func)):
+                if it.args:
+                    self._consume(self.eval(it.args[0]), it,
+                                  _dotted(it.args[0]) or "<expr>",
+                                  "jax.random.split")
+                    for a in it.args[1:]:
+                        self.eval(a)
+                val = None
+            else:
+                val = self.eval(it)
+        before = dict(self.env)
+        self.loops = self.loops + (loop_id,)
+        if target is not None:
+            if val is None:
+                self._bind_target(target, self._key_def(
+                    _target_name(target) or "<key>", stmt.lineno, "split"))
+            else:
+                self._bind_target(target, Val(
+                    frozenset({self._site(stmt.lineno,
+                                          _target_name(target) or "it")}),
+                    val.prov))
+        self._walk_body(stmt.body)
+        self.loops = self.loops[:-1]
+        self._merge_env(before)
+        self._walk_body(getattr(stmt, "orelse", []) or [])
+
+    def _bind_target(self, target: ast.AST, val: Val) -> None:
+        if isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self._bind_target(
+                    e, Val(frozenset({self._site(
+                        getattr(e, "lineno", 0),
+                        _target_name(e) or "unpack")}), val.prov))
+            return
+        t = _target_name(target)
+        if t is not None:
+            self._bind(t, val)
+        elif isinstance(target, ast.Subscript):
+            base = target.value
+            nm = _target_name(base)
+            if nm and nm in self.env:
+                self._check_donated_read(self.env[nm], target, nm)
+        elif isinstance(target, ast.Starred):
+            self._bind_target(target.value, val)
+
+    def _assign(self, targets: List[ast.AST], value: Optional[ast.AST]
+                ) -> None:
+        if value is None:
+            return
+        # split / PRNGKey / fold_in on the right-hand side: key defs
+        if isinstance(value, ast.Call):
+            t = _dotted(value.func)
+            if _is_split(t):
+                consumed = CONST
+                if value.args:
+                    consumed = self.eval(value.args[0])
+                    self._consume(consumed, value,
+                                  _dotted(value.args[0]) or "<expr>",
+                                  "jax.random.split")
+                    for a in value.args[1:]:
+                        self.eval(a)
+                for kwd in value.keywords:
+                    self.eval(kwd.value)
+                # carry idiom `key, k = split(key)`: the consumed def dies
+                # on EVERY path through this statement -- retire it so the
+                # path-insensitive count never sees a merge-resurrected copy
+                carry = _dotted(value.args[0]) if value.args else None
+                stored = set()
+                for tgt in targets:
+                    stored |= _stored_names(tgt)
+                if carry is not None and carry in stored:
+                    self._retired |= consumed.defs
+                for tgt in targets:
+                    if isinstance(tgt, (ast.Tuple, ast.List)):
+                        names = []
+                        for e in tgt.elts:
+                            nm = _target_name(e) or "<unpack>"
+                            names.append(nm)
+                            self._bind(nm, self._key_def(nm, value.lineno,
+                                                         "split"))
+                        self.facts.split_assigns.append(
+                            (value.lineno, names, frozenset(self.loops)))
+                    else:
+                        nm = _target_name(tgt)
+                        if nm:
+                            val = self._key_def(nm, value.lineno, "split")
+                            self._split_arrays |= val.defs
+                            self._bind(nm, val)
+                        else:
+                            self._bind_target(tgt, CONST)
+                return
+            if _is_key_deriver(t):
+                for a in value.args:
+                    self.eval(a)
+                for tgt in targets:
+                    nm = _target_name(tgt)
+                    if nm:
+                        self._bind(nm, self._key_def(
+                            nm, value.lineno,
+                            "prngkey" if t.split(".")[-1] in ("PRNGKey",
+                                                              "key")
+                            else "derive"))
+                    else:
+                        self._bind_target(tgt, CONST)
+                return
+        val = self.eval(value)
+        for tgt in targets:
+            nm = _target_name(tgt)
+            if nm is not None and isinstance(value, (ast.Name,
+                                                     ast.Attribute)):
+                # plain alias: SHARE def sites (x2 = x), so a draw from
+                # either name counts against the same definition
+                self._bind(nm, val)
+            else:
+                self._bind_target(tgt, val)
+
+    # -- dead device compute (CFN109 substrate) -----------------------------
+
+    def _collect_dead_assigns(self) -> None:
+        loads = self.facts.loads
+        for n in ast.walk(self.fi.node):
+            if not (isinstance(n, ast.Assign) and len(n.targets) == 1
+                    and isinstance(n.targets[0], ast.Name)
+                    and isinstance(n.value, ast.Call)):
+                continue
+            name = n.targets[0].id
+            if name.startswith("_") or name in loads:
+                continue
+            t = _dotted(n.value.func)
+            if t and (t.startswith(_DEVICE_PREFIXES) or t in _DEVICE_EXACT):
+                self.facts.dead_assigns.append((n.lineno, name, t))
+
+
+# ---------------------------------------------------------------------------
+# the analyzer: summaries to fixpoint, facts for every function
+# ---------------------------------------------------------------------------
+
+class Analysis:
+    """What one project-wide dataflow run produces (shared by all four
+    CFN106-CFN109 rules through ``Project.cache``)."""
+
+    def __init__(self, index: ProjectIndex,
+                 functions: Dict[Tuple[str, str], FuncFacts]):
+        self.index = index
+        self.functions = functions
+
+    @property
+    def entry_calls(self) -> List[EntryCall]:
+        return [c for f in self.functions.values() for c in f.entry_calls]
+
+
+class Analyzer:
+    MAX_PASSES = 5
+
+    def __init__(self, project: Project):
+        self.project = project
+        self.index = ProjectIndex(project)
+        self.summaries: Dict[Tuple[str, str], Set[str]] = {}
+
+    def run(self) -> Analysis:
+        functions: Dict[Tuple[str, str], FuncFacts] = {}
+        for _ in range(self.MAX_PASSES):
+            functions = {}
+            changed = False
+            for key, fi in self.index.funcs.items():
+                facts = FlowWalker(self, fi).walk()
+                functions[key] = facts
+                if facts.consumed_params != self.summaries.get(key, set()):
+                    self.summaries[key] = set(facts.consumed_params)
+                    changed = True
+            if not changed:
+                break
+        return Analysis(self.index, functions)
+
+
+def analyze_dataflow(project: Project) -> Analysis:
+    """Project-cached dataflow run (one per ``analyze_project`` call)."""
+    return project.cache("dataflow", lambda: Analyzer(project).run())

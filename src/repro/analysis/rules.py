@@ -580,5 +580,7 @@ class PallasVmemBudget(Rule):
 
 
 def all_rules() -> List[Rule]:
+    from . import rules_flow
     return [RetraceHazards(), DtypeDiscipline(), PytreeHygiene(),
-            TraceCounterCoverage(), PallasVmemBudget()]
+            TraceCounterCoverage(), PallasVmemBudget()] \
+        + list(rules_flow.flow_rules())

@@ -64,7 +64,10 @@ def _embed(topo: CFNTopology, vsrs: VSRBatch, spec,
                              eligible=eligible)
     elif m == "genetic":
         X0 = solvers.fixed_layer(problem, topo, "iot").X
-        res = solvers.genetic(problem, key, X0, eligible=eligible)
+        # exactly ONE dispatch arm consumes `key` per call; sharing the
+        # seed across methods keeps them comparable under a fixed seed
+        res = solvers.genetic(problem, key, X0,  # tracelint: allow[CFN106]
+                              eligible=eligible)
     elif m == "relax":
         res = solvers.relax(problem, key, eligible=eligible)
     elif m == "cfn-milp":
@@ -130,7 +133,9 @@ def savings_vs_baseline(topo: CFNTopology, vsrs: VSRBatch,
     problem = build_problem(topo, vsrs)
     base = _embed(topo, vsrs, _spec(method=baseline), key=key,
                   problem=problem)
-    opt = _embed(topo, vsrs, _spec(method=method), key=key, problem=problem)
+    # paired comparison: baseline and optimized DELIBERATELY share a seed
+    opt = _embed(topo, vsrs, _spec(method=method), key=key,  # tracelint: allow[CFN106]
+                 problem=problem)
     saving = 1.0 - opt.power / max(base.power, 1e-9)
     return dict(baseline_w=base.power, optimized_w=opt.power,
                 saving_frac=saving, baseline=base, optimized=opt)

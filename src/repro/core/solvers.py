@@ -367,8 +367,12 @@ def _anneal_proposals(key: jax.Array, aux: PlacementAux, n_steps: int,
     if cnt is None:
         p_prop = jax.random.randint(kp, (n_steps, n_chains), 0, P, jnp.int32)
     else:
+        # masked branch draws from a fold_in-derived stream: independent of
+        # the unmasked randint above, and the unmasked path stays
+        # byte-identical (CFN106: one key, one draw)
         rows = aux.free_flat[fi] // V
-        u_dst = jax.random.uniform(kp, (n_steps, n_chains))
+        u_dst = jax.random.uniform(jax.random.fold_in(kp, 1),
+                                   (n_steps, n_chains))
         p_prop = _sample_eligible(u_dst, rows, jnp.asarray(cnt),
                                   jnp.asarray(cand))
     u = jax.random.uniform(ka, (n_steps, n_chains))
@@ -418,8 +422,10 @@ def anneal(problem: PlacementProblem, key: jax.Array, X0: np.ndarray,
     if el_np is None:
         rand = jax.random.randint(k_init, (n_chains, R, V), 0, P, jnp.int32)
     else:
-        # restarted chains must also start on eligible nodes
-        u_r = jax.random.uniform(k_init, (n_chains, R, V))
+        # restarted chains must also start on eligible nodes (fold_in:
+        # independent of the unmasked randint, which stays byte-identical)
+        u_r = jax.random.uniform(jax.random.fold_in(k_init, 1),
+                                 (n_chains, R, V))
         rand = _sample_eligible(u_r, jnp.arange(R)[None, :, None],
                                 jnp.asarray(cnt_np), jnp.asarray(cand_np))
     keep = (jnp.arange(n_chains) == 0)[:, None, None]
@@ -540,7 +546,7 @@ def genetic(problem: PlacementProblem, key: jax.Array, X0: np.ndarray,
     else:
         elite, _ = _project_eligible(problem, elite, el_np)
         cnt_j, cand_j = jnp.asarray(cnt_np), jnp.asarray(cand_np)
-        u0 = jax.random.uniform(k_init, (pop, R, V))
+        u0 = jax.random.uniform(jax.random.fold_in(k_init, 1), (pop, R, V))
         Xp = _sample_eligible(u0, jnp.arange(R)[None, :, None],
                               cnt_j, cand_j)
     Xp = Xp.at[0].set(elite)
@@ -564,7 +570,8 @@ def genetic(problem: PlacementProblem, key: jax.Array, X0: np.ndarray,
             if cnt_j is None:
                 rnd = jax.random.randint(km2, (pop, R, V), 0, P, jnp.int32)
             else:
-                u_m = jax.random.uniform(km2, (pop, R, V))
+                u_m = jax.random.uniform(jax.random.fold_in(km2, 1),
+                                         (pop, R, V))
                 rnd = _sample_eligible(u_m, jnp.arange(R)[None, :, None],
                                        cnt_j, cand_j)
             children = jnp.where(mut, rnd, children)
@@ -758,8 +765,10 @@ def resolve_incremental(problem: PlacementProblem,
                                         0, P, jnp.int32)
         else:
             # destinations sampled from each proposal row's eligible set
+            # (fold_in: unmasked randint stream stays byte-identical)
             rows = j_prop // V
-            u_dst = jax.random.uniform(kp, (anneal_steps, anneal_chains))
+            u_dst = jax.random.uniform(jax.random.fold_in(kp, 1),
+                                       (anneal_steps, anneal_chains))
             p_prop = _sample_eligible(u_dst, rows, jnp.asarray(cnt_np),
                                       jnp.asarray(cand_np))
         u_prop = jax.random.uniform(ka, (anneal_steps, anneal_chains))
@@ -770,7 +779,7 @@ def resolve_incremental(problem: PlacementProblem,
             rand = jax.random.randint(kx, Xc.shape, 0, P, jnp.int32)
         else:
             # restarted chains must also start on eligible nodes
-            u_r = jax.random.uniform(kx, Xc.shape)
+            u_r = jax.random.uniform(jax.random.fold_in(kx, 1), Xc.shape)
             rand = _sample_eligible(
                 u_r, jnp.arange(problem.R)[None, :, None],
                 jnp.asarray(cnt_np), jnp.asarray(cand_np))

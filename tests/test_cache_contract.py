@@ -1,0 +1,111 @@
+"""CFN108 runtime contract: static jit-cache bounds vs measured traces.
+
+``repro.analysis.compute_cache_bounds`` claims a static bound on the
+jit-cache key-space of every ``@count_traces`` entry.  These tests replay
+real scenarios and cross-check the claim against ``solvers.TRACE_COUNTS``:
+for each exercised entry the measured compile count must satisfy
+
+    measured <= bound(scenario) <= 2 * measured
+
+i.e. the static bound is sound (never undercounts) and tight (within 2x
+of reality).  Scenario bounds come from ``EntryBound.evaluate`` with the
+realized axis cardinalities (the number of shape buckets the trace
+actually produced); unexercised call sites are excluded by context.
+
+Shape hygiene: both scenarios use service shapes (``n_vms``) no other
+test uses, so the jit cache cannot have been pre-warmed by another test
+in the same process and the measured deltas are true compile counts.
+"""
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis import compute_cache_bounds
+from repro.analysis.engine import load_project
+from repro.api import FederatedSession, PlacementSpec
+from repro.core import federation, power, solvers, topology, vsr
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+@pytest.fixture(scope="module")
+def bounds():
+    project, errs = load_project([str(REPO / "src")])
+    assert not errs
+    return compute_cache_bounds(project)
+
+
+def _deltas(before):
+    return {k: solvers.TRACE_COUNTS.get(k, 0) - before.get(k, 0)
+            for k in set(solvers.TRACE_COUNTS) | set(before)}
+
+
+def _check(entry, measured, bound):
+    assert bound is not None, f"{entry}: scenario bound is unbounded"
+    assert measured <= bound, \
+        f"{entry}: measured {measured} traces > static bound {bound}"
+    assert bound <= 2 * measured, \
+        f"{entry}: static bound {bound} not within 2x of measured {measured}"
+
+
+def test_churn_wave_traces_within_static_bounds(bounds):
+    """A two-bucket churn trace through ``resolve_wave``: the realized
+    ``sweep`` / ``anneal_delta`` trace counts sit inside the CFN108
+    scenario bounds for the ``resolve_incremental`` call sites."""
+    topo = topology.paper_topology()
+    # n_vms=5 is unique to this test: every compile below is fresh
+    vs = vsr.random_vsrs(6, rng=0, n_vms=5,
+                         source_nodes=topo.layer_indices("iot")[:3])
+    problem = power.build_problem(topo, vs)
+    X0 = np.asarray(solvers.fixed_layer(problem, topo, "iot").X, np.int32)
+    state = power.init_state(problem, X0)
+    key = jax.random.PRNGKey(0)
+    kw = dict(anneal_steps=50, anneal_chains=4)
+
+    waves = [[0], [1, 2, 3]]            # two distinct wave-shape buckets
+    realized = set()
+    for rows in waves:
+        fixed = np.asarray(problem.fixed_mask)[rows]
+        realized.add(solvers._pow2(int((~fixed).sum())))
+    assert len(realized) == 2, "scenario must span two buckets"
+
+    before = dict(solvers.TRACE_COUNTS)
+    for rows in waves:
+        solvers.resolve_wave(problem, state, rows, key=key, **kw)
+    d = _deltas(before)
+
+    cards = {"resolve_incremental.pad_changed_to": len(realized),
+             # polish pads to one fixed all-free-VM list per problem shape
+             "resolve_incremental.pad_positions_to": 1}
+    for entry in ("sweep", "anneal_delta"):
+        bound = bounds[entry].evaluate(sites=["resolve_incremental"],
+                                       axis_cards=cards)
+        _check(entry, d.get(entry, 0), bound)
+
+
+def test_federated_solve_regions_within_static_bound(bounds):
+    """Two same-bucket federated solves compile ``solve_regions`` once;
+    the CFN108 scenario bound for the ``solve_portfolio_batched`` site
+    (one substrate bucket, one effort tier) agrees within 2x."""
+    topo = topology.federated_scale(n_regions=3, n_olt=1, onus_per_olt=2,
+                                    iot_per_onu=2, n_core=6)
+    part = federation.RegionPartition.from_topology(topo)
+    srcs = [int(r.proc_ids[0]) for r in part.regions]
+    # n_vms=4 with this R is unique to this test (fresh compiles)
+    vs1 = vsr.random_vsrs(6, rng=0, n_vms=4, source_nodes=srcs)
+    vs2 = vsr.random_vsrs(6, rng=5, n_vms=4, source_nodes=srcs)
+    vs2.src[:] = vs1.src                # same homes -> same shape bucket
+    spec = PlacementSpec(effort="quick")
+
+    before = dict(solvers.TRACE_COUNTS)
+    FederatedSession(topo, spec).solve(vs1)
+    FederatedSession(topo, spec).solve(vs2)
+    d = _deltas(before)
+
+    eb = bounds["solve_regions"]
+    cards = {name: 1 for name, ax in eb.axes().items()
+             if ax.kind in ("bucket", "finite")}   # one bucket, one effort
+    bound = eb.evaluate(sites=["solve_portfolio_batched"], axis_cards=cards)
+    _check("solve_regions", d.get("solve_regions", 0), bound)

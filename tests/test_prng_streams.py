@@ -1,0 +1,112 @@
+"""PRNG stream-discipline regression tests (the CFN106 fixes).
+
+The masked (eligibility-constrained) branches of ``_anneal_proposals``,
+``anneal``, ``genetic`` and ``resolve_incremental`` draw from
+``fold_in``-derived streams instead of re-consuming the sibling key.
+These tests pin the contract: the unmasked streams are byte-identical
+whether or not a mask is in play, proposal and acceptance streams are
+statistically independent, and the seeded solvers stay deterministic.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import power, solvers, topology, vsr
+
+
+@pytest.fixture(scope="module")
+def topo():
+    return topology.paper_topology()
+
+
+@pytest.fixture(scope="module")
+def setup(topo):
+    vs = vsr.random_vsrs(4, rng=0, source_nodes=topo.layer_indices("iot")[:2])
+    problem = power.build_problem(topo, vs)
+    return problem, power.build_aux(problem)
+
+
+def _mask(problem):
+    el = np.ones((problem.R, problem.P), bool)
+    el[:, ::3] = False          # knock out every third node
+    return el
+
+
+def test_masked_branch_leaves_sibling_streams_byte_identical(setup):
+    """fold_in derivation: adding a mask must not perturb the flat-index
+    or acceptance streams (they come from kf/ka, which the masked
+    destination branch no longer touches)."""
+    problem, aux = setup
+    key = jax.random.PRNGKey(11)
+    _, cnt, cand = solvers._eligible_np(_mask(problem))
+    fi_u, p_u, u_u = solvers._anneal_proposals(key, aux, 64, 4, problem.P)
+    fi_m, p_m, u_m = solvers._anneal_proposals(key, aux, 64, 4, problem.P,
+                                               V=problem.V, cnt=cnt,
+                                               cand=cand)
+    np.testing.assert_array_equal(np.asarray(fi_u), np.asarray(fi_m))
+    np.testing.assert_array_equal(np.asarray(u_u), np.asarray(u_m))
+    # masked destinations all land on eligible nodes
+    assert bool(np.asarray(cnt).min()) >= 0
+    rows = np.asarray(aux.free_flat)[np.asarray(fi_m)] // problem.V
+    el = _mask(problem)
+    assert el[rows.ravel(), np.asarray(p_m).ravel()].all()
+
+
+def test_proposal_and_acceptance_streams_independent(setup):
+    """The acceptance uniforms must be statistically independent of the
+    destination stream (the paper's Metropolis correctness condition --
+    the original double-consumption correlated them)."""
+    problem, aux = setup
+    key = jax.random.PRNGKey(3)
+    _, cnt, cand = solvers._eligible_np(_mask(problem))
+    _, p_prop, u = solvers._anneal_proposals(key, aux, 2000, 8, problem.P,
+                                             V=problem.V, cnt=cnt, cand=cand)
+    a = np.asarray(p_prop, np.float64).ravel()
+    b = np.asarray(u, np.float64).ravel()
+    r = np.corrcoef(a, b)[0, 1]
+    assert abs(r) < 0.03, f"proposal/acceptance correlation {r:.4f}"
+    # and the destination stream is NOT the acceptance stream in disguise
+    assert not np.array_equal(a % 1.0, b)
+
+
+def test_anneal_deterministic_and_mask_respected(setup):
+    problem, _ = setup
+    X0 = solvers.fixed_layer(problem, topology.paper_topology(), "iot").X
+    el = _mask(problem)
+    key = jax.random.PRNGKey(5)
+    r1 = solvers.anneal(problem, key, X0, n_chains=4, n_steps=50,
+                        backend="delta", eligible=el)
+    r2 = solvers.anneal(problem, key, X0, n_chains=4, n_steps=50,
+                        backend="delta", eligible=el)
+    np.testing.assert_array_equal(np.asarray(r1.X), np.asarray(r2.X))
+    free = ~np.asarray(problem.fixed_mask)
+    rows, vms = np.where(free)
+    assert el[rows, np.asarray(r1.X)[rows, vms]].all()
+
+
+def test_genetic_deterministic_for_fixed_seed(setup):
+    problem, _ = setup
+    X0 = solvers.fixed_layer(problem, topology.paper_topology(), "iot").X
+    key = jax.random.PRNGKey(9)
+    r1 = solvers.genetic(problem, key, X0, pop=8, gens=3,
+                         eligible=_mask(problem))
+    r2 = solvers.genetic(problem, key, X0, pop=8, gens=3,
+                         eligible=_mask(problem))
+    np.testing.assert_array_equal(np.asarray(r1.X), np.asarray(r2.X))
+
+
+def test_resolve_incremental_and_wave_deterministic(setup):
+    problem, _ = setup
+    X0 = solvers.fixed_layer(problem, topology.paper_topology(), "iot").X
+    key = jax.random.PRNGKey(2)
+    kw = dict(changed_rows=[0, 1], anneal_steps=40, anneal_chains=4,
+              eligible=_mask(problem))
+    r1 = solvers.resolve_incremental(problem, prev_X=X0, key=key, **kw)
+    r2 = solvers.resolve_incremental(problem, prev_X=X0, key=key, **kw)
+    np.testing.assert_array_equal(np.asarray(r1.X), np.asarray(r2.X))
+    st = power.init_state(problem, np.asarray(X0, np.int32))
+    w1 = solvers.resolve_wave(problem, st, [0, 1], key=key, anneal_steps=40,
+                              anneal_chains=4)
+    w2 = solvers.resolve_wave(problem, st, [0, 1], key=key, anneal_steps=40,
+                              anneal_chains=4)
+    np.testing.assert_array_equal(np.asarray(w1.X), np.asarray(w2.X))
