@@ -37,6 +37,7 @@ BENCH_QUALITY_JSON = Path("BENCH_quality.json")
 BENCH_FEDERATED_JSON = Path("BENCH_federated.json")
 BENCH_FAULT_JSON = Path("BENCH_fault.json")
 BENCH_CHURN_JSON = Path("BENCH_churn.json")
+BENCH_OBS_JSON = Path("BENCH_obs.json")
 
 
 def _write(name: str, rows: List[Dict]) -> None:
@@ -968,6 +969,156 @@ def churn_waves(n_live: int = 1024, wave_size: int = 64, n_waves: int = 2,
                     note="runs after the timed wave section: amortized "
                          "background work, not per-event latency"))
     BENCH_CHURN_JSON.write_text(json.dumps(out, indent=2) + "\n")
+    return out
+
+
+def telemetry_overhead(n_live: int = 1024, wave_size: int = 64,
+                       n_waves: int = 4, n_olt: int = 16,
+                       onus_per_olt: int = 4, iot_per_onu: int = 7,
+                       runs: int = 2) -> Dict:
+    """Observability cost: the churn-wave workload with telemetry OFF
+    vs ON.
+
+    The same ``city_scale`` substrate, steady fleet, and
+    ``flash_crowd_trace`` replace waves as ``churn_waves``, replayed
+    through two engines built from the SAME PRNG key: one with no
+    telemetry attached (the disabled path -- every instrumentation site
+    is a ``None`` check) and one with a ``repro.telemetry.Telemetry``
+    streaming JSONL to disk with spans, the energy ledger, and compile
+    attribution all live.  Each variant replays ``runs`` times on a
+    fresh engine and keeps its best total (noise damping); both replay
+    the measured waves with ZERO fresh solver traces (asserted) and must
+    end bit-identical -- telemetry may observe the placement math, never
+    perturb it (asserted).  A micro section prices the primitives
+    (counter inc, histogram observe, span enter/exit) per call.
+
+    Writes BENCH_obs.json; the < 2% overhead acceptance gate lives in
+    ``benchmarks.run.run_obs`` (full scale only -- at smoke scale the
+    waves are milliseconds and timer noise dominates).
+    """
+    import os
+    import tempfile
+
+    from repro.telemetry import Telemetry, load_events
+
+    topo = topology.city_scale(n_olt=n_olt, onus_per_olt=onus_per_olt,
+                               iot_per_onu=iot_per_onu)
+    iot = topo.layer_indices("iot")
+    spec_kw = dict(effort="quick", anneal_steps=0, defrag_every=0,
+                   polish_sweeps=1)
+    mk = lambda sid: vsr.random_vsrs(
+        1, rng=np.random.default_rng(sid), n_vms=3,
+        source_nodes=iot[:max(8, len(iot) // 4)])
+
+    events = dynamic.flash_crowd_trace(n_live, n_waves + 1, wave_size,
+                                       rng=0, replace=True)
+    groups = list(dynamic.iter_waves(events))
+    warm_wave, measured = groups[1], groups[2:]
+    services = [mk(sid) for sid in range(n_live)]
+
+    hosts = [p for layer in ("mf", "af", "cdc")
+             for p in topo.layer_indices(layer)]
+    load = {p: 0.0 for p in hosts}
+    X0 = np.zeros((n_live, 3), np.int32)
+    for r, sv in enumerate(services):
+        for v in range(3):
+            p = min(hosts, key=load.get)
+            X0[r, v] = p
+            load[p] += float(sv.F[0, v])
+
+    def split(group):
+        deps = [ev.sid for ev in group if ev.kind == "depart"]
+        arrs = [(mk(ev.sid), ev.sid) for ev in group
+                if ev.kind == "arrive"]
+        return arrs, deps
+
+    def replay(tel):
+        """Fresh engine -> warmup wave -> timed measured waves."""
+        eng = dynamic.OnlineEmbedder(
+            topo, spec=api.PlacementSpec(**spec_kw),
+            key=jax.random.PRNGKey(0), telemetry=tel)
+        eng.bootstrap(services, X0=X0)
+        arrs, deps = split(warm_wave)
+        eng.apply_wave(arrs, deps)
+        before = dict(solvers.TRACE_COUNTS)
+        times = []
+        for group in measured:
+            arrs, deps = split(group)
+            t0 = time.time()
+            wr = eng.apply_wave(arrs, deps)
+            jax.block_until_ready(wr.result.X)
+            times.append(time.time() - t0)
+        fresh = sum(solvers.TRACE_COUNTS.get(k, 0) - before.get(k, 0)
+                    for k in solvers.TRACE_COUNTS)
+        assert fresh == 0, \
+            f"measured waves must not retrace solver kernels ({fresh})"
+        return eng, times
+
+    # interleave off/on replays so drift (thermal, page cache) hits both
+    tmp = tempfile.mkdtemp(prefix="bench_obs_")
+    off_times, on_times = [], []
+    eng_off = eng_on = tel = None
+    jsonl_bytes = n_events = 0
+    for i in range(runs):
+        eng_off, t = replay(None)
+        off_times.append(sum(t))
+        path = os.path.join(tmp, f"run{i}.jsonl")
+        tel = Telemetry(jsonl_path=path, attribution_every=8)
+        eng_on, t = replay(tel)
+        on_times.append(sum(t))
+        tel.close()
+        jsonl_bytes = os.path.getsize(path)
+        n_events = len(load_events(path))
+
+    X_off = np.asarray(eng_off._X)
+    X_on = np.asarray(eng_on._X)
+    identical = bool(np.array_equal(X_off, X_on))
+    assert identical, \
+        "telemetry must not perturb placements (PRNG/solver paths differ)"
+
+    # micro: per-call cost of the primitives on a live in-memory registry
+    micro_tel = Telemetry()
+    reps = 20000
+    t0 = time.time()
+    for _ in range(reps):
+        micro_tel.inc("bench.counter")
+    inc_ns = (time.time() - t0) / reps * 1e9
+    t0 = time.time()
+    for _ in range(reps):
+        micro_tel.observe("bench.lat_ms", 1.5)
+    observe_ns = (time.time() - t0) / reps * 1e9
+    t0 = time.time()
+    for _ in range(reps):
+        with micro_tel.span("bench"):
+            pass
+    span_ns = (time.time() - t0) / reps * 1e9
+
+    n_ev = float(wave_size) * len(measured)
+    off_s, on_s = min(off_times), min(on_times)
+    overhead = (on_s - off_s) / off_s
+    out = dict(
+        scenario=dict(topology=f"city_p{topo.P}", P=topo.P, R=n_live,
+                      wave_size=wave_size, n_waves=len(measured),
+                      runs=runs, effort=spec_kw["effort"],
+                      backend=jax.default_backend(),
+                      note=("churn_waves workload replayed with telemetry "
+                            "off vs on (spans + energy ledger + compile "
+                            "attribution + JSONL stream); best-of-runs "
+                            "totals, interleaved")),
+        off=dict(events_per_s=round(n_ev / off_s, 3),
+                 total_s=round(off_s, 4),
+                 runs_s=[round(s, 4) for s in off_times]),
+        on=dict(events_per_s=round(n_ev / on_s, 3),
+                total_s=round(on_s, 4),
+                runs_s=[round(s, 4) for s in on_times],
+                events_emitted=n_events, jsonl_bytes=jsonl_bytes),
+        overhead_pct=round(100.0 * overhead, 3),
+        identical_placements=identical,
+        fresh_compiles_measured=0,
+        micro_ns_per_call=dict(counter_inc=round(inc_ns, 1),
+                               histogram_observe=round(observe_ns, 1),
+                               span=round(span_ns, 1)))
+    BENCH_OBS_JSON.write_text(json.dumps(out, indent=2) + "\n")
     return out
 
 

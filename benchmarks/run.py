@@ -180,6 +180,38 @@ def run_churn_smoke():
         iot_per_onu=3, defrag_rows_per_tick=4))
 
 
+def _print_obs(out) -> None:
+    s = out["scenario"]
+    print(f"obs: {s['topology']} R={s['R']} wave_size={s['wave_size']} "
+          f"x{s['n_waves']} (best of {s['runs']})")
+    print(f"obs: off={out['off']['events_per_s']:.1f} ev/s "
+          f"on={out['on']['events_per_s']:.1f} ev/s "
+          f"overhead={out['overhead_pct']:+.2f}% "
+          f"identical_placements={out['identical_placements']}")
+    m = out["micro_ns_per_call"]
+    print(f"obs: micro inc={m['counter_inc']:.0f}ns "
+          f"observe={m['histogram_observe']:.0f}ns span={m['span']:.0f}ns "
+          f"jsonl={out['on']['jsonl_bytes']}B/"
+          f"{out['on']['events_emitted']}ev -> BENCH_obs.json")
+
+
+def run_obs():
+    out = kernel_bench.telemetry_overhead()
+    _print_obs(out)
+    assert out["identical_placements"], \
+        "acceptance: telemetry must not perturb placements"
+    assert out["overhead_pct"] < 2.0, \
+        "acceptance: enabled telemetry < 2% on the churn-wave bench"
+
+
+def run_obs_smoke():
+    # CI scale: the identity/zero-retrace asserts still run inside the
+    # bench; the 2% timing gate is full-scale-only (ms waves = timer noise)
+    _print_obs(kernel_bench.telemetry_overhead(
+        n_live=32, wave_size=8, n_waves=2, n_olt=2, onus_per_olt=2,
+        iot_per_onu=3, runs=1))
+
+
 def run_flash():
     rows = kernel_bench.flash_cases()
     for r in rows:
@@ -202,14 +234,16 @@ BENCHES = dict(fig3=run_fig3, fig4=run_fig4, gap=run_gap,
                placement=run_placement, solver=run_solver,
                sparse=run_sparse, online=run_online, quality=run_quality,
                federated=run_federated, fault=run_fault, churn=run_churn,
-               flash=run_flash, roofline=run_roofline)
+               obs=run_obs, flash=run_flash, roofline=run_roofline)
 BENCHES["churn-smoke"] = run_churn_smoke
+BENCHES["obs-smoke"] = run_obs_smoke
+_SMOKE = ("churn-smoke", "obs-smoke")
 
 
 def main() -> None:
-    # churn-smoke is the CI-scale variant of churn: it would overwrite
-    # BENCH_churn.json with test-scale numbers, so only run it by name
-    names = sys.argv[1:] or [n for n in BENCHES if n != "churn-smoke"]
+    # the -smoke names are CI-scale variants: they would overwrite their
+    # BENCH_*.json with test-scale numbers, so only run them by name
+    names = sys.argv[1:] or [n for n in BENCHES if n not in _SMOKE]
     for name in names:
         t0 = time.time()
         print(f"== {name} ==", flush=True)

@@ -13,9 +13,12 @@ alert on.
 
   PYTHONPATH=src python examples/failure_storm.py            # full storm
   PYTHONPATH=src python examples/failure_storm.py --quick    # CI-sized
+  PYTHONPATH=src python examples/failure_storm.py --telemetry run.jsonl
 
 Prints a per-event log (watts, live/queued counts) and the storm's
-availability / re-embed totals.
+availability / re-embed totals.  With ``--telemetry PATH`` the run
+streams spans, monitor events, compile attribution, and the energy
+ledger to a JSONL file and closes with the telemetry report summary.
 """
 import sys
 import time
@@ -25,9 +28,13 @@ import numpy as np
 from repro.api import CFNSession, PlacementSpec
 from repro.core import dynamic, topology, vsr
 from repro.fault.monitor import PlacementMonitor
+from repro.telemetry import (Telemetry, load_events, render,
+                             summarize_events)
 
 QUICK = "--quick" in sys.argv
 SEED = 0
+TEL_PATH = (sys.argv[sys.argv.index("--telemetry") + 1]
+            if "--telemetry" in sys.argv else None)
 
 topo = (topology.city_scale(n_olt=2, onus_per_olt=2, iot_per_onu=2)
         if QUICK else
@@ -42,8 +49,10 @@ def make_vsr(sid):
 
 
 monitor = PlacementMonitor()
+telemetry = (Telemetry(jsonl_path=TEL_PATH, attribution_every=4)
+             if TEL_PATH else None)
 spec = PlacementSpec(effort="quick", defrag_every=0)
-session = CFNSession(topo, spec, monitor=monitor)
+session = CFNSession(topo, spec, monitor=monitor, telemetry=telemetry)
 
 # the steady state: services admitted before the storm hits
 arrivals = [dynamic.ServiceEvent(float(i) * 0.5, "arrive", i)
@@ -103,3 +112,8 @@ print(f"  final live services : {session.n_live} "
       f"(queue={len(session.engine._queue)}, "
       f"substrate healthy={session.health is None or session.health.all_up})")
 assert not session.engine._queue, "recovery must drain the retry queue"
+
+if telemetry is not None:
+    telemetry.close()
+    print(f"\ntelemetry -> {TEL_PATH}")
+    print(render(summarize_events(load_events(TEL_PATH))))

@@ -9,21 +9,31 @@ full-portfolio defrag -- masked by the same ``PlacementSpec`` as every
 other path -- re-packing the substrate.
 
   PYTHONPATH=src python examples/online_day.py
+  PYTHONPATH=src python examples/online_day.py --telemetry day.jsonl
 
 Prints an hourly log of live services, fleet power, per-event re-solve
 latency, and the day's totals.  (First-time shapes pay jit compiles; the
 steady-state per-event latencies are the numbers to look at, and
-BENCH_online.json tracks them rigorously.)
+BENCH_online.json tracks them rigorously.)  With ``--telemetry PATH``
+the day streams spans, compile attribution, and the energy ledger to a
+JSONL file and closes with the telemetry report: the day's joules split
+into the paper's Eq.(1) networking vs Eq.(2) processing terms, by fog
+tier and by tenant.
 """
+import sys
 import time
 
 import numpy as np
 
 from repro.api import CFNSession, PlacementSpec
 from repro.core import dynamic, topology
+from repro.telemetry import (Telemetry, load_events, render,
+                             summarize_events)
 
 SEED = 0
 SCENARIO = dynamic.SCENARIOS["diurnal24"]
+TEL_PATH = (sys.argv[sys.argv.index("--telemetry") + 1]
+            if "--telemetry" in sys.argv else None)
 
 topo = topology.paper_topology()
 events = SCENARIO.timeline(rng=SEED)
@@ -34,7 +44,10 @@ print(f"scenario {SCENARIO.name}: {len(events)} events over "
 
 # one declarative spec: defrag cadence + (R, V) shape bucketing; add
 # max_hops= / power_budget_w= here and every event path enforces them
-session = CFNSession(topo, PlacementSpec(defrag_every=8))
+telemetry = (Telemetry(jsonl_path=TEL_PATH, attribution_every=16)
+             if TEL_PATH else None)
+session = CFNSession(topo, PlacementSpec(defrag_every=8),
+                     telemetry=telemetry)
 lat, hour_mark = [], 0.0
 
 
@@ -52,6 +65,7 @@ def log_event(ev, dt):
 t_day = time.time()
 live = set()
 for ev in events:
+    session.tick(ev.t)   # the ledger integrates against this clock
     t0 = time.time()   # per-event solve latency (print I/O excluded)
     if ev.kind == "arrive":
         session.add(SCENARIO.sample_vsr(1000 + ev.sid), sid=ev.sid)
@@ -78,3 +92,8 @@ if session.n_live:
           f"{session.power_w():.1f}W fleet "
           f"(top tenants: "
           + ", ".join(f"svc{sid}={w:.1f}W" for sid, w in top) + ")")
+
+if telemetry is not None:
+    telemetry.close()
+    print(f"\ntelemetry -> {TEL_PATH}")
+    print(render(summarize_events(load_events(TEL_PATH))))

@@ -24,6 +24,8 @@ EXPECTED = {
     "BENCH_federated.json": {"federated", "flat",
                              "objective_ratio_fed_vs_flat", "scenario",
                              "speedup_vs_flat"},
+    "BENCH_obs.json": {"identical_placements", "micro_ns_per_call", "off",
+                       "on", "overhead_pct", "scenario"},
     "BENCH_online.json": {"defrag_sweep", "events", "scenario", "summary"},
     "BENCH_quality.json": {"quality", "scenario"},
     "BENCH_solver.json": {"anneal", "coordinate_sweep",

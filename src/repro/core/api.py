@@ -284,17 +284,33 @@ class CFNSession:
     def __init__(self, topo: CFNTopology,
                  spec: Optional[PlacementSpec] = None,
                  key: Optional[jax.Array] = None,
-                 monitor=None):
+                 monitor=None, telemetry=None):
         self.topo = topo
         self._engine = dynamic.OnlineEmbedder(
             topo, spec=spec if spec is not None else PlacementSpec(),
-            key=key, monitor=monitor)
+            key=key, monitor=monitor, telemetry=telemetry)
+        if monitor is not None and telemetry is not None:
+            monitor.attach_telemetry(telemetry)
 
     # -- configuration / introspection ------------------------------------
     def attach_monitor(self, monitor) -> None:
         """Attach (or replace) the ``fault.monitor.PlacementMonitor``
         receiving this session's admission/budget events."""
         self._engine.monitor = monitor
+        if monitor is not None and self.telemetry is not None:
+            monitor.attach_telemetry(self.telemetry)
+
+    def attach_telemetry(self, telemetry) -> None:
+        """Attach (or replace) the ``repro.telemetry.Telemetry`` receiving
+        this session's spans, energy ledger, and compile attribution; an
+        attached monitor mirrors its counters there too."""
+        self._engine.attach_telemetry(telemetry)
+        if self._engine.monitor is not None and telemetry is not None:
+            self._engine.monitor.attach_telemetry(telemetry)
+
+    @property
+    def telemetry(self):
+        return self._engine.telemetry
 
     @property
     def spec(self) -> PlacementSpec:

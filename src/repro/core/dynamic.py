@@ -21,8 +21,10 @@ Times are in hours throughout; rates in services/hour.
 """
 from __future__ import annotations
 
+import functools
 import heapq
 import warnings
+from contextlib import nullcontext
 from dataclasses import dataclass, field
 from typing import Callable, Dict, Iterable, Iterator, List, Optional, \
     Sequence, Tuple, Union
@@ -388,6 +390,22 @@ def _bucket_rows(n: int, lo: int = 2) -> int:
     return solvers._pow2(n, lo=lo)
 
 
+def _traced(name: str):
+    """Wrap an engine entry point in a telemetry span (no-op -- not even a
+    context manager allocation -- when no ``Telemetry`` is attached, so
+    the disabled path stays bit-identical and free)."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(self, *args, **kwargs):
+            tel = self.telemetry
+            if tel is None:
+                return fn(self, *args, **kwargs)
+            with tel.span(name):
+                return fn(self, *args, **kwargs)
+        return wrapper
+    return deco
+
+
 class OnlineEmbedder:
     """Live CFN embedding under service churn.
 
@@ -431,7 +449,7 @@ class OnlineEmbedder:
                  admit_power_budget_w: Optional[float] = None,
                  admit_violation_tol: Optional[float] = None,
                  queue_rejected: bool = False,
-                 spec=None, monitor=None):
+                 spec=None, monitor=None, telemetry=None):
         if spec is None:
             from . import api
             warnings.warn(
@@ -452,6 +470,14 @@ class OnlineEmbedder:
         # a fault.monitor.PlacementMonitor (optional): admission rejections
         # and budget violations are counted there instead of being dropped
         self.monitor = monitor
+        # a repro.telemetry.Telemetry (optional): spans on the entry
+        # points, energy-ledger ticks + convergence traces on commits,
+        # compile attribution via the count_traces hook.  None (default)
+        # keeps every instrumented path a strict no-op.
+        self.telemetry = None
+        self._commits_since_attr = 0
+        if telemetry is not None:
+            self.attach_telemetry(telemetry)
         self._key = jax.random.PRNGKey(1) if key is None else key
         self._add_kw = dict(sweeps=spec.sweeps,
                             anneal_steps=spec.anneal_steps,
@@ -534,6 +560,21 @@ class OnlineEmbedder:
         """The row's OWN VM count (columns beyond it are concat padding)."""
         return self._vsrs[row].V
 
+    def attach_telemetry(self, tel) -> None:
+        """Attach (or replace) a ``repro.telemetry.Telemetry``: spans,
+        energy ledger, convergence traces, and compile attribution start
+        flowing from the next event.  Pass ``None`` to detach."""
+        self.telemetry = tel
+        if tel is not None:
+            if tel.ledger.tiers is None:
+                from ..telemetry import tiers_of
+                tel.ledger.set_tiers(tiers_of(self.topo))
+            tel.attach_traces()
+
+    def _span(self, name: str, **attrs):
+        tel = self.telemetry
+        return nullcontext() if tel is None else tel.span(name, **attrs)
+
     def clone(self) -> "OnlineEmbedder":
         """A detached copy sharing the (immutable) arrays: events applied to
         the clone leave this engine untouched.  Used by benchmarks to replay
@@ -613,11 +654,16 @@ class OnlineEmbedder:
             self._problem = h.degrade(self._problem)
 
     def _resolve_kw(self, base: dict) -> dict:
-        """Per-event solver kwargs: bucket-stable sweep padding."""
+        """Per-event solver kwargs: bucket-stable sweep padding, plus
+        convergence-trace recording when telemetry wants it (host-side
+        materialization only -- the jitted scans always compute the
+        trace, so this flag can never retrace)."""
         kw = dict(base)
         if self.bucket_rows and self._problem is not None:
             kw["pad_positions_to"] = int(
                 self._problem.R * (self._problem.V - 1))
+        if self.telemetry is not None and self.telemetry.convergence:
+            kw["record_conv"] = True
         return kw
 
     def _drop_row(self, row: int) -> None:
@@ -635,6 +681,31 @@ class OnlineEmbedder:
         self.stats.append(OnlineStats(
             event=event, method=res.method, objective=res.objective,
             power_w=res.power, n_live=self.n_live))
+        if self.telemetry is not None:
+            self._telemetry_commit(res, event)
+
+    def _telemetry_commit(self, res: solvers.SolveResult,
+                          event: str) -> None:
+        """Record one commit into the attached telemetry: a solve event
+        (with the convergence trace when recorded), an energy-ledger tick
+        from the commit's already-computed breakdown, and -- every
+        ``telemetry.attribution_every``-th commit -- the exact per-tenant
+        ``power.attribute_power`` split (an O(R) host loop, so it runs on
+        a cadence, never per commit by default)."""
+        tel = self.telemetry
+        per_tenant = None
+        every = tel.attribution_every
+        if every:
+            self._commits_since_attr += 1
+            if self._commits_since_attr >= every:
+                self._commits_since_attr = 0
+                per = power.attribute_power(self._problem, self._X,
+                                            res.breakdown,
+                                            n_rows=self.n_live)
+                per_tenant = {int(s): float(w)
+                              for s, w in zip(self._sids, per)}
+        tel.record_commit(event=event, res=res, t=self._now,
+                          n_live=self.n_live, per_tenant=per_tenant)
 
     def _full_solve(self, event: str,
                     incumbent: Optional[solvers.SolveResult] = None
@@ -687,6 +758,7 @@ class OnlineEmbedder:
         return prio
 
     # -- the online API ---------------------------------------------------
+    @_traced("bootstrap")
     def bootstrap(self, services: Sequence[vsr.VSRBatch],
                   sids: Optional[Sequence[int]] = None,
                   X0: Optional[np.ndarray] = None,
@@ -788,6 +860,7 @@ class OnlineEmbedder:
                 or self.admit_power_budget_w is not None
                 or self.admit_violation_tol is not None)
 
+    @_traced("add")
     def add(self, service: vsr.VSRBatch, sid: Optional[int] = None,
             priority: Optional[int] = None,
             _retry: bool = False,
@@ -923,6 +996,7 @@ class OnlineEmbedder:
             power_w=self.power_w(), n_live=self.n_live))
         return vsid
 
+    @_traced("remove")
     def remove(self, sid: int,
                _drain: bool = True) -> Optional[solvers.SolveResult]:
         """Retire a service: detach its loads in O(V*(N+P)), then let the
@@ -965,6 +1039,7 @@ class OnlineEmbedder:
         return res
 
     # -- wave-batched churn ------------------------------------------------
+    @_traced("apply_wave")
     def apply_wave(self, arrivals: Sequence = (),
                    departures: Sequence[int] = ()) -> WaveResult:
         """Apply one churn WAVE -- a tick's worth of arrivals and
@@ -1115,9 +1190,22 @@ class OnlineEmbedder:
                          else float(prev[7].breakdown.violation))
         # phase 3: ONE batched re-solve for the whole wave
         kw = self._add_kw if new_rows else self._remove_kw
-        res = solvers.resolve_wave(
-            self._problem, st, new_rows, key=self._split_key(),
-            spec=self.spec, **self._resolve_kw(kw))
+        wave_bucket = 0
+        if self.telemetry is not None and new_rows:
+            n_pos = int((~np.asarray(
+                self._problem.fixed_mask)[new_rows]).sum())
+            wave_bucket = solvers._pow2(n_pos) if n_pos else 0
+        with self._span("resolve_wave", n_arrive=len(new_rows),
+                        n_depart=len(deps), wave_bucket=wave_bucket,
+                        r_bucket=int(self._problem.R)) as sp:
+            res = solvers.resolve_wave(
+                self._problem, st, new_rows, key=self._split_key(),
+                spec=self.spec, **self._resolve_kw(kw))
+            if self.telemetry is not None:
+                # _result already materialized res.X/breakdown on host, so
+                # the span closes on completed device work without an
+                # extra sync point
+                sp.attrs["objective"] = float(res.objective)
         # phase 4: admission, per arrival in priority order
         if new_rows and self._admission_active:
             refused = self._wave_refusals(res, arr, new_rows,
@@ -1240,6 +1328,7 @@ class OnlineEmbedder:
                 self.monitor.unstrand(sid, self._now, re_embedded=False)
         return removed
 
+    @_traced("defrag")
     def defrag(self) -> Optional[solvers.SolveResult]:
         """Force a full-portfolio re-pack of the current service set (keeps
         the live placement when the portfolio cannot beat it)."""
@@ -1247,6 +1336,7 @@ class OnlineEmbedder:
             return None
         return self._full_solve("defrag", incumbent=self._result)
 
+    @_traced("defrag_tick")
     def defrag_tick(self, rows: Optional[int] = None
                     ) -> Optional[solvers.SolveResult]:
         """Amortized background defrag: ONE targeted delta-sweep over the
@@ -1469,6 +1559,7 @@ class OnlineEmbedder:
                                detail=f"budget_w={prev_budget}")
         self._drain_queue()
 
+    @_traced("apply_fault")
     def apply_fault(self, ev: FaultEvent):
         """Dispatch one ``FaultEvent`` to the handlers above (region kinds
         belong to ``FederatedSession``; a flat engine rejects them)."""

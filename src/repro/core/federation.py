@@ -56,6 +56,7 @@ reported to a ``fault.monitor.PlacementMonitor`` when one is attached.
 """
 from __future__ import annotations
 
+import functools
 import re
 from dataclasses import dataclass, field
 from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
@@ -686,6 +687,27 @@ class FederatedResult(NamedTuple):
         return self.breakdown.total_w
 
 
+def _traced(name: str, ledger: bool = False):
+    """Span a ``FederatedSession`` coordinator method when telemetry is
+    attached (multi-region only -- the flat path delegates to a flat
+    session whose engine records its own spans); ``ledger=True``
+    additionally takes one fleet-exact energy sample after the call.
+    The no-telemetry path stays a plain call."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(self, *args, **kwargs):
+            tel = self.telemetry
+            if tel is None or self._flat is not None:
+                return fn(self, *args, **kwargs)
+            with tel.span(name):
+                out = fn(self, *args, **kwargs)
+            if ledger:
+                self._record_fleet_energy(name)
+            return out
+        return wrapper
+    return deco
+
+
 class FederatedSession:
     """Hierarchical multi-region placement: one facade over G regions.
 
@@ -710,7 +732,8 @@ class FederatedSession:
     MAX_COORD_PASSES = 4
 
     def __init__(self, topo, spec=None, key: Optional[jax.Array] = None,
-                 monitor=None, partition: Optional[RegionPartition] = None):
+                 monitor=None, partition: Optional[RegionPartition] = None,
+                 telemetry=None):
         from . import api as api_mod
         if partition is None:
             partition = (topo if isinstance(topo, RegionPartition)
@@ -740,6 +763,9 @@ class FederatedSession:
             self._flat.engine.monitor = monitor
         else:
             self._check_spec_supported()
+        self.telemetry = None
+        if telemetry is not None:
+            self.attach_telemetry(telemetry)
 
     # -- config helpers ---------------------------------------------------
     def attach_monitor(self, monitor) -> None:
@@ -751,6 +777,61 @@ class FederatedSession:
             self._flat.attach_monitor(monitor)
         for eng in self._engines.values():
             eng.monitor = monitor
+        if (monitor is not None and self.telemetry is not None
+                and hasattr(monitor, "attach_telemetry")):
+            monitor.attach_telemetry(self.telemetry)
+
+    def attach_telemetry(self, telemetry) -> None:
+        """Attach a ``repro.telemetry.Telemetry`` to the federation.
+
+        Single-region: delegates wholesale to the flat ``CFNSession`` --
+        spans, convergence traces, and the energy ledger come from its
+        engine, identical to the non-federated path.  Multi-region: the
+        COORDINATOR is the instrumented layer -- spans around
+        ``solve``/``add``/``remove``/``apply_wave``/``apply_fault``, one
+        fleet-exact ledger sample (per-region watt splits from
+        ``breakdown()``) after each, and global compile attribution via
+        the trace hooks.  Per-region engines deliberately do NOT tick the
+        shared ledger: their commit samples would carry regional (not
+        fleet) totals and corrupt the fleet watt series."""
+        self.telemetry = telemetry
+        if telemetry is None:
+            if self._flat is not None:
+                self._flat.attach_telemetry(None)
+            return
+        if self._flat is not None:
+            self._flat.attach_telemetry(telemetry)
+            return
+        if telemetry.ledger.tiers is None:
+            from ..telemetry import tiers_of
+            telemetry.ledger.set_tiers(tiers_of(self.topo))
+        telemetry.attach_traces()
+        if (self.monitor is not None
+                and hasattr(self.monitor, "attach_telemetry")):
+            self.monitor.attach_telemetry(telemetry)
+
+    def _record_fleet_energy(self, event: str) -> None:
+        """One fleet-exact ledger sample (multi-region path only): total,
+        Eq.(1) networking, and Eq.(2) processing watts with per-region
+        splits, all from the exact ``federated_breakdown`` accounting."""
+        tel = self.telemetry
+        if tel is None or self._flat is not None:
+            return
+        try:
+            bd = self.breakdown()
+        except ValueError:   # empty session (everything departed/refused)
+            return
+        per_region = {int(g): float(w)
+                      for g, w in enumerate(np.asarray(bd.regional_w))}
+        # shared-core watts are in no region: keep the splits summing to
+        # the exact fleet total
+        per_region["inter_region"] = float(bd.inter_region_w)
+        tel.ledger.tick(
+            self._now, total_w=float(bd.total_w),
+            net_w=float(np.asarray(bd.per_net_w).sum()),
+            proc_w=float(np.asarray(bd.per_proc_w).sum()),
+            per_region=per_region, event=event)
+        tel.inc(f"commit.{event}")
 
     def _check_spec_supported(self) -> None:
         if self.spec.eligible is not None or (
@@ -965,6 +1046,7 @@ class FederatedSession:
         return out
 
     # -- batch path -------------------------------------------------------
+    @_traced("federated_solve", ledger=True)
     def solve(self, vsrs: Optional[vsr_mod.VSRBatch] = None):
         """Embed a whole VSR batch across the federation (empty session),
         or re-pack the live regions (no batch: per-region defrag).
@@ -1174,6 +1256,7 @@ class FederatedSession:
         return out
 
     # -- region-aware churn ------------------------------------------------
+    @_traced("federated_add", ledger=True)
     def add(self, service: vsr_mod.VSRBatch, sid: Optional[int] = None,
             region: Optional[int] = None, priority: Optional[int] = None):
         """Admit one service: an incremental churn event on its region's
@@ -1297,6 +1380,7 @@ class FederatedSession:
         self._order.remove(sid)
         self._prio.pop(sid, None)
 
+    @_traced("federated_remove", ledger=True)
     def remove(self, sid: int):
         """Retire a service from its region engine(s) (body + stub)."""
         if self._flat:
@@ -1312,6 +1396,7 @@ class FederatedSession:
         self._prio.pop(sid, None)
         return res
 
+    @_traced("federated_wave", ledger=True)
     def apply_wave(self, arrivals: Sequence = (),
                    departures: Sequence[int] = ()):
         """Apply one churn wave across the federation.
@@ -1617,6 +1702,7 @@ class FederatedSession:
             self.monitor.unstrand(sid, self._now, re_embedded=False)
         return removed
 
+    @_traced("federated_fault", ledger=True)
     def apply_fault(self, ev: dynamic.FaultEvent):
         """Dispatch one ``FaultEvent`` at region granularity (node/link
         kinds belong to flat engines; the federated substrate faults whole

@@ -55,6 +55,9 @@ class SolveResult:
     breakdown: PowerBreakdown
     method: str
     history: List[float] = field(default_factory=list)
+    # convergence trace (record_conv=True on the anneal paths): fixed-length
+    # per effort bucket -- {"best_obj": [n_steps], "accept_rate": [n_steps]}
+    conv: Optional[Dict[str, np.ndarray]] = None
 
     @property
     def objective(self) -> float:
@@ -75,6 +78,43 @@ class SolveResult:
 # tests/test_faults.py, tests/test_federation.py, benchmarks/kernel_bench.py.
 TRACE_COUNTS: Dict[str, int] = {}
 
+# Compile-attribution hooks (repro.telemetry): called once per fresh trace
+# with (entry name, abstract shape fingerprint).  Hooks run at TRACE time
+# on the host -- they must not touch traced values beyond static
+# attributes (.shape/.dtype), which _trace_fingerprint respects.
+TRACE_HOOKS: List = []
+
+_FINGERPRINT_MAX_LEAVES = 16
+
+
+def _trace_fingerprint(args, kwargs) -> str:
+    """Abstract shape fingerprint of a jitted call's arguments: per pytree
+    leaf ``dtype[shape]`` (static attribute reads only -- safe on tracers),
+    scalars by repr, other statics by type name.  Capped at
+    ``_FINGERPRINT_MAX_LEAVES`` leaves per argument."""
+    parts = []
+    for a in list(args) + [kwargs[k] for k in sorted(kwargs)]:
+        leaves = jax.tree_util.tree_leaves(a)
+        if not leaves:
+            parts.append("()" if a is None else type(a).__name__)
+            continue
+        sub = []
+        for leaf in leaves[:_FINGERPRINT_MAX_LEAVES]:
+            shp = getattr(leaf, "shape", None)
+            if shp is not None:
+                dt = getattr(leaf, "dtype", "?")
+                sub.append(f"{dt}[{','.join(str(d) for d in shp)}]")
+            else:
+                sub.append(repr(leaf) if isinstance(
+                    leaf, (bool, int, float, str)) else type(leaf).__name__)
+        if len(leaves) > _FINGERPRINT_MAX_LEAVES:
+            sub.append(f"+{len(leaves) - _FINGERPRINT_MAX_LEAVES}")
+        tag = type(a).__name__
+        parts.append("x".join(sub) if tag in ("ArrayImpl", "DynamicJaxprTracer",
+                                              "ndarray") and len(sub) == 1
+                     else f"{tag}({','.join(sub)})")
+    return ";".join(parts)
+
 
 def count_traces(name: str):
     """Mark a jitted solver entry: ``TRACE_COUNTS[name]`` ticks once per
@@ -91,11 +131,19 @@ def count_traces(name: str):
     so ``jax.jit(..., static_argnames=...)`` over a counted function still
     resolves argument names.  Rule CFN104 (``repro.analysis``) enforces
     this pattern on every jitted entry here and in ``core.federation``.
+
+    ``TRACE_HOOKS`` (registered by ``repro.telemetry``) observe each fresh
+    trace with the entry name and the abstract shape fingerprint jax is
+    tracing at -- the compile-attribution record.
     """
     def deco(fn):
         @functools.wraps(fn)
         def wrapper(*args, **kwargs):
             TRACE_COUNTS[name] = TRACE_COUNTS.get(name, 0) + 1
+            if TRACE_HOOKS:
+                fp = _trace_fingerprint(args, kwargs)
+                for hook in list(TRACE_HOOKS):
+                    hook(name, fp)
             return fn(*args, **kwargs)
         return wrapper
     return deco
@@ -383,7 +431,8 @@ def anneal(problem: PlacementProblem, key: jax.Array, X0: np.ndarray,
            n_chains: int = 32, n_steps: int = 4000,
            t0: float = 50.0, t1: float = 0.05,
            backend: str = "auto",
-           eligible: Optional[np.ndarray] = None) -> SolveResult:
+           eligible: Optional[np.ndarray] = None,
+           record_conv: bool = False) -> SolveResult:
     """Batched Metropolis chains on incremental (delta-evaluated) state.
 
     backend:
@@ -401,6 +450,13 @@ def anneal(problem: PlacementProblem, key: jax.Array, X0: np.ndarray,
     sampled from it, and every backend's proposal destinations are drawn
     from it (one proposal stream feeds all three), so no chain ever leaves
     the constraint set.
+
+    ``record_conv=True`` attaches the per-step convergence trace to the
+    result (``SolveResult.conv``: best-objective + acceptance-rate arrays,
+    length ``n_steps`` -- fixed per effort bucket).  The jitted scans
+    always COMPUTE the trace; the flag only materializes it host-side, so
+    recording can never retrace (CFN108).  Not available on the fused
+    Pallas backend (chain state stays in VMEM).
     """
     R, V, P = problem.R, problem.V, problem.P
     if backend == "auto":
@@ -451,8 +507,13 @@ def anneal(problem: PlacementProblem, key: jax.Array, X0: np.ndarray,
         bX, bobj, hist = _anneal_scan_delta(problem, aux, Xc, j_prop, p_prop,
                                             u_prop, temps)
     tag = "anneal" if backend == "delta" else f"anneal({backend})"
-    return _result(problem, np.asarray(bX), tag,
-                   [float(h) for h in np.asarray(hist[:: max(1, n_steps // 50)])])
+    res = _result(problem, np.asarray(bX), tag,
+                  [float(h) for h in
+                   np.asarray(hist[0][:: max(1, n_steps // 50)])])
+    if record_conv:
+        res.conv = {"best_obj": np.asarray(hist[0]),
+                    "accept_rate": np.asarray(hist[1])}
+    return res
 
 
 @jax.jit
@@ -484,7 +545,11 @@ def _anneal_scan_delta(problem: PlacementProblem, aux: PlacementAux,
         better = obj < bobj
         bX = jnp.where(better[:, None], Xf, bX)
         bobj = jnp.where(better, obj, bobj)
-        return (Xf, omega, theta, lam, obj, bX, bobj), bobj.min()
+        # per-step convergence trace: incumbent best + acceptance fraction
+        # (unconditional outputs -- emitting both keeps the jit cache
+        # key-space identical whether or not a caller records them)
+        return (Xf, omega, theta, lam, obj, bX, bobj), \
+            (bobj.min(), acc.mean())
 
     init = (Xf, omega, theta, lam, obj, Xf, obj)
     (_, _, _, _, _, bX, bobj), hist = jax.lax.scan(
@@ -516,7 +581,7 @@ def _anneal_scan_full(problem: PlacementProblem, Xc, j_prop, p_prop,
         better = obj < bobj
         bX = jnp.where(better[:, None, None], Xc, bX)
         bobj = jnp.where(better, obj, bobj)
-        return (Xc, obj, bX, bobj), bobj.min()
+        return (Xc, obj, bX, bobj), (bobj.min(), acc.mean())
 
     init = (Xc, obj0, Xc, obj0)
     (_, _, bX, bobj), hist = jax.lax.scan(
@@ -669,7 +734,8 @@ def resolve_incremental(problem: PlacementProblem,
                         eligible: Optional[np.ndarray] = None,
                         pad_positions_to: Optional[int] = None,
                         pad_changed_to: Optional[int] = None,
-                        spec=None) -> SolveResult:
+                        spec=None,
+                        record_conv: bool = False) -> SolveResult:
     """Warm-start re-solve after service churn: surviving services stay at
     their previous nodes, only the VMs of ``changed_rows`` (new arrivals /
     rows the caller distrusts) are actively re-placed.
@@ -751,6 +817,7 @@ def resolve_incremental(problem: PlacementProblem,
         cands.append(state.X)
 
     # phase 2: short Metropolis refinement
+    conv: Optional[Dict[str, np.ndarray]] = None
     if anneal_steps > 0 and anneal_chains > 0:
         P, V = problem.P, problem.V
         target = pos_changed if pos_changed.shape[0] else free
@@ -789,9 +856,14 @@ def resolve_incremental(problem: PlacementProblem,
         keep = ((jnp.arange(anneal_chains) == 0)[:, None, None]
                 | ~jnp.asarray(tgt_mask)[None])
         Xc = jnp.where(keep, Xc, rand)
-        bX, _, _ = _anneal_scan_delta(problem, aux, Xc, j_prop, p_prop,
-                                      u_prop, temps)
+        bX, _, hist = _anneal_scan_delta(problem, aux, Xc, j_prop, p_prop,
+                                         u_prop, temps)
         cands.append(bX)
+        if record_conv:
+            # fixed length anneal_steps (static per effort bucket): the
+            # telemetry plane's quality-vs-steps trace for this solve
+            conv = {"best_obj": np.asarray(hist[0]),
+                    "accept_rate": np.asarray(hist[1])}
 
     # pick the exact-objective best (one batched call), then polish
     objs = [float(o) for o in
@@ -808,7 +880,9 @@ def resolve_incremental(problem: PlacementProblem,
         if obj < best_obj:
             best_obj, best_X = obj, state.X
         history.append(best_obj)
-    return _result(problem, best_X, "incremental", history)
+    res = _result(problem, best_X, "incremental", history)
+    res.conv = conv
+    return res
 
 
 def resolve_wave(problem: PlacementProblem,
@@ -848,7 +922,7 @@ def resolve_wave(problem: PlacementProblem,
                               state=state, spec=spec,
                               pad_changed_to=pad_changed_to, **kw)
     return SolveResult(X=res.X, breakdown=res.breakdown, method="wave",
-                       history=res.history)
+                       history=res.history, conv=res.conv)
 
 
 # ---------------------------------------------------------------------------

@@ -96,6 +96,14 @@ class PlacementMonitor:
 
     ``count`` is also open to new kinds; ``events`` keeps the last
     ``max_events`` (kind, detail) pairs for debugging.
+
+    Telemetry delegation: with a ``repro.telemetry.Telemetry`` attached
+    (``attach_telemetry``), every ``count`` additionally increments the
+    registry counter ``<prefix>.<kind>`` and emits a JSONL ``event`` --
+    standalone behavior (``counters`` / ``events`` ring / ``snapshot`` /
+    ``merge`` semantics, the ``max_events`` bound) is unchanged, and the
+    registry mirror is purely additive.  ``reset()`` does NOT rewind the
+    registry (its counters are cumulative across the run by design).
     """
 
     counters: Dict[str, int] = field(default_factory=dict)
@@ -103,6 +111,14 @@ class PlacementMonitor:
     max_events: int = 256
     stranded_service_s: float = 0.0
     stranded_since: Dict[int, float] = field(default_factory=dict)
+    telemetry: Optional[object] = None
+    telemetry_prefix: str = "monitor"
+
+    def attach_telemetry(self, telemetry, prefix: str = "monitor") -> None:
+        """Mirror this monitor's counters/events into a ``Telemetry``
+        registry from now on (``None`` detaches)."""
+        self.telemetry = telemetry
+        self.telemetry_prefix = prefix
 
     def count(self, kind: str, detail: Optional[str] = None,
               n: int = 1) -> None:
@@ -110,6 +126,10 @@ class PlacementMonitor:
         self.events.append((kind, detail))
         if len(self.events) > self.max_events:
             del self.events[:len(self.events) - self.max_events]
+        tel = self.telemetry
+        if tel is not None:
+            tel.inc(f"{self.telemetry_prefix}.{kind}", n)
+            tel.emit("event", kind=kind, detail=detail, n=n)
 
     def get(self, kind: str) -> int:
         return self.counters.get(kind, 0)
@@ -129,6 +149,9 @@ class PlacementMonitor:
             return
         self.stranded_since[sid] = float(t)
         self.count("service_stranded", detail or f"sid={sid}")
+        if self.telemetry is not None:
+            self.telemetry.gauge(f"{self.telemetry_prefix}.stranded_open",
+                                 len(self.stranded_since))
 
     def unstrand(self, sid: int, t: float = 0.0,
                  re_embedded: bool = True) -> bool:
@@ -142,6 +165,12 @@ class PlacementMonitor:
         self.stranded_service_s += max(0.0, float(t) - t0)
         if re_embedded:
             self.count("re_embedded", f"sid={sid}")
+        if self.telemetry is not None:
+            self.telemetry.gauge(f"{self.telemetry_prefix}.stranded_open",
+                                 len(self.stranded_since))
+            self.telemetry.gauge(
+                f"{self.telemetry_prefix}.stranded_service_s",
+                self.stranded_service_s)
         return True
 
     def close_strands(self, t: float) -> int:
@@ -176,6 +205,11 @@ class PlacementMonitor:
         integrals add, and open windows keep the earliest start."""
         for kind, n in other.counters.items():
             self.counters[kind] = self.counters.get(kind, 0) + n
+            # mirror the fold into the registry -- unless other already
+            # reports to the SAME registry (its counts are there already)
+            if (self.telemetry is not None
+                    and other.telemetry is not self.telemetry):
+                self.telemetry.inc(f"{self.telemetry_prefix}.{kind}", n)
         self.events.extend(other.events)
         if len(self.events) > self.max_events:
             del self.events[:len(self.events) - self.max_events]

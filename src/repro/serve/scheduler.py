@@ -50,13 +50,15 @@ class EnergyAwareScheduler:
                  defrag_every: int = 16, max_hops: Optional[int] = None,
                  admit_power_budget_w: Optional[float] = None,
                  spec: Optional[cfn_api.PlacementSpec] = None,
-                 session=None, monitor=None):
+                 session=None, monitor=None, telemetry=None):
         """``session`` (optional) supplies a pre-built placement session --
         a ``CFNSession`` or a multi-region ``FederatedSession`` -- so the
         serving path schedules onto a federation unchanged; otherwise a
         flat session is built from ``spec`` (or the legacy kwargs).
         ``monitor`` (a ``fault.monitor.PlacementMonitor``) receives
-        admission rejections and budget violations."""
+        admission rejections and budget violations; ``telemetry`` (a
+        ``repro.telemetry.Telemetry``) receives spans, the energy ledger,
+        and compile attribution from the underlying session."""
         if spec is None:
             spec = cfn_api.PlacementSpec(
                 method=method, defrag_every=defrag_every, max_hops=max_hops,
@@ -65,9 +67,12 @@ class EnergyAwareScheduler:
         if session is not None:
             if monitor is not None:
                 session.attach_monitor(monitor)
+            if telemetry is not None:
+                session.attach_telemetry(telemetry)
             self.session = session
         else:
-            self.session = cfn_api.CFNSession(topo, spec, monitor=monitor)
+            self.session = cfn_api.CFNSession(topo, spec, monitor=monitor,
+                                              telemetry=telemetry)
         self.services: List[Service] = []
         self.rejected: List[str] = []   # names refused by admission control
         self.queued: List[str] = []     # names parked in the priority queue

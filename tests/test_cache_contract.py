@@ -109,3 +109,36 @@ def test_federated_solve_regions_within_static_bound(bounds):
              if ax.kind in ("bucket", "finite")}   # one bucket, one effort
     bound = eb.evaluate(sites=["solve_portfolio_batched"], axis_cards=cards)
     _check("solve_regions", d.get("solve_regions", 0), bound)
+
+
+def test_telemetry_attribution_matches_trace_counts(bounds):
+    """The telemetry compile-attribution hook records EXACTLY the traces
+    ``TRACE_COUNTS`` ticks during a live scenario, and every recorded
+    entry stays within its CFN108 static bound (``tel.report(bounds=)``)."""
+    from repro.telemetry import Telemetry
+
+    topo = topology.paper_topology()
+    # n_vms=6 is unique to this test: compiles below are fresh, so the
+    # hook (attached only here) must see every one of them
+    vs = vsr.random_vsrs(5, rng=2, n_vms=6,
+                         source_nodes=topo.layer_indices("iot")[:3])
+    problem = power.build_problem(topo, vs)
+    X0 = np.asarray(solvers.fixed_layer(problem, topo, "iot").X, np.int32)
+    state = power.init_state(problem, X0)
+
+    tel = Telemetry()
+    tel.attach_traces()
+    before = dict(solvers.TRACE_COUNTS)
+    solvers.resolve_wave(problem, state, [0, 1], key=jax.random.PRNGKey(0),
+                         anneal_steps=50, anneal_chains=4)
+    measured = {k: v for k, v in _deltas(before).items() if v}
+    rep = tel.report(bounds=bounds)
+    tel.close()
+
+    assert rep["compiles"]["agree"] is True
+    assert rep["compiles"]["recorded"] == measured
+    assert measured, "scenario must compile something fresh"
+    for entry, chk in rep["compiles"]["bounds"].items():
+        assert chk["within"], \
+            f"{entry}: recorded compiles exceed CFN108 static bound " \
+            f"{chk['static_bound']}"

@@ -1,0 +1,422 @@
+"""Unified telemetry plane tests.
+
+The contract under test: telemetry OBSERVES the serving stack, it never
+perturbs it.  Disabled (telemetry=None) the engine must be bit-identical
+to a never-instrumented one -- same placements, same power, same
+admission decisions, zero extra compiles -- and enabled it must record
+faithfully: span nesting and exception safety, histogram bucket edges,
+JSONL round-trips through the report pipeline, the energy ledger summing
+exactly to the per-tenant/per-region attribution, the monitor mirror
+staying in lockstep with the standalone counters, and the compile
+attribution agreeing with ``solvers.TRACE_COUNTS``.  The package itself
+must lint clean under tracelint with an empty baseline.
+"""
+import json
+import math
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.api import CFNSession, FederatedSession, PlacementSpec
+from repro.core import dynamic, federation, power, solvers, topology, vsr
+from repro.fault.monitor import PlacementMonitor
+from repro.kernels import ref as kref
+from repro.telemetry import (EnergyLedger, Telemetry, load_events,
+                             summarize_events, tiers_of, validate_events)
+from repro.telemetry.registry import _bucket_edge
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+@pytest.fixture(scope="module")
+def topo():
+    return topology.paper_topology()
+
+
+def _svc(seed, n_vms=3):
+    return vsr.random_vsrs(1, rng=np.random.default_rng(seed),
+                           n_vms=n_vms)
+
+
+def _spec(**kw):
+    return PlacementSpec(method="anneal", effort="quick", **kw)
+
+
+def _churn(sess):
+    """A small deterministic churn sequence: 3 adds, 1 remove, 1 wave."""
+    for seed in (0, 1, 2):
+        sess.engine.tick(float(seed))
+        sess.add(_svc(seed))
+    sess.engine.tick(3.0)
+    sess.remove(sess.sids[0])
+    sess.engine.tick(4.0)
+    sess.apply_wave([(_svc(7), None, 0), (_svc(8), None, 0)],
+                    [sess.sids[0]])
+    return sess
+
+
+# ---------------------------------------------------------------------------
+# disabled path: a no-op by construction
+# ---------------------------------------------------------------------------
+
+def test_disabled_telemetry_is_identical(topo, tmp_path):
+    """telemetry=None vs a live Telemetry: same placements (bitwise),
+    same f64-oracle power, same admission outcomes, and the instrumented
+    run adds ZERO fresh solver compiles beyond the baseline run's."""
+    plain = _churn(CFNSession(topo, _spec(), telemetry=None))
+    before = dict(solvers.TRACE_COUNTS)
+    tel = Telemetry(jsonl_path=str(tmp_path / "run.jsonl"))
+    instr = _churn(CFNSession(topo, _spec(), telemetry=tel))
+    fresh = {k: solvers.TRACE_COUNTS.get(k, 0) - before.get(k, 0)
+             for k in solvers.TRACE_COUNTS
+             if solvers.TRACE_COUNTS.get(k, 0) != before.get(k, 0)}
+    assert not fresh, \
+        f"instrumented replay of an identical scenario retraced: {fresh}"
+
+    assert plain.sids == instr.sids          # same admissions, same order
+    Xp, Xi = np.asarray(plain.X), np.asarray(instr.X)
+    assert np.array_equal(Xp, Xi)
+    assert plain.power_w() == instr.power_w()
+
+    # pin the power both engines agree on against the f64 oracle
+    eng = instr.engine
+    vs = eng._vsrs[0]
+    for b in eng._vsrs[1:]:
+        vs = vs.concat(b)
+    prob = power.build_problem(topo, vs)
+    oracle = kref.placement_objective_f64(prob, Xi[:vs.R, :vs.V])
+    assert instr.power_w() == pytest.approx(oracle, rel=1e-5)
+    tel.close()
+
+
+# ---------------------------------------------------------------------------
+# spans
+# ---------------------------------------------------------------------------
+
+def test_span_nesting_parents():
+    tel = Telemetry()
+    with tel.span("outer") as so:
+        with tel.span("inner") as si:
+            assert si.parent == so.id
+        with tel.span("inner") as s2:
+            assert s2.parent == so.id
+    assert so.parent is None
+    assert not tel._span_stack
+    assert tel.counters["span.outer"] == 1
+    assert tel.counters["span.inner"] == 2
+    evs = [e for e in tel.events if e["type"] == "span"]
+    by_id = {e["id"]: e for e in evs}
+    inner = [e for e in evs if e["name"] == "inner"]
+    assert all(by_id[e["parent"]]["name"] == "outer" for e in inner)
+
+
+def test_span_exception_safe():
+    tel = Telemetry()
+    with pytest.raises(ValueError):
+        with tel.span("boom"):
+            raise ValueError("no")
+    assert not tel._span_stack               # stack popped
+    ev = [e for e in tel.events if e["type"] == "span"][-1]
+    assert ev["ok"] is False and ev["err"] == "ValueError"
+    assert tel.hists["span.boom.ms"].count == 1   # duration still recorded
+
+
+def test_span_sync_blocks_on_value():
+    jax = pytest.importorskip("jax")
+    tel = Telemetry()
+    with tel.span("device") as sp:
+        out = sp.sync(jax.numpy.arange(8) * 2)
+    assert int(out[-1]) == 14
+    assert tel.hists["span.device.ms"].count == 1
+
+
+# ---------------------------------------------------------------------------
+# histograms
+# ---------------------------------------------------------------------------
+
+def test_histogram_bucket_edges():
+    # exact powers of two land on their own edge; everything else rounds
+    # up to the next power of two; non-positive values pool at 0
+    assert _bucket_edge(1.0) == 1.0
+    assert _bucket_edge(1.5) == 2.0
+    assert _bucket_edge(2.0) == 2.0
+    assert _bucket_edge(2.1) == 4.0
+    assert _bucket_edge(0.75) == 1.0
+    assert _bucket_edge(0.5) == 0.5
+    assert _bucket_edge(0.0) == 0.0
+    assert _bucket_edge(-3.0) == 0.0
+    for v in (1e-6, 0.3, 7.0, 1234.5):
+        e = _bucket_edge(v)
+        assert v <= e < 2 * v
+        m, _ = math.frexp(e)
+        assert m == 0.5                       # an exact power of two
+
+
+def test_histogram_stats_and_prometheus():
+    tel = Telemetry()
+    for v in (1.0, 1.5, 2.0, 2.1, 100.0):
+        tel.observe("lat.ms", v)
+    h = tel.hists["lat.ms"]
+    assert h.count == 5 and h.min == 1.0 and h.max == 100.0
+    assert h.sum == pytest.approx(106.6)
+    assert h.buckets == {1.0: 1, 2.0: 2, 4.0: 1, 128.0: 1}
+    text = tel.prometheus()
+    assert 'repro_lat_ms_bucket{le="+Inf"} 5' in text
+    assert "repro_lat_ms_count 5" in text
+    # le buckets are cumulative
+    assert 'repro_lat_ms_bucket{le="2.0"} 3' in text
+
+
+def test_metric_labels_flatten_sorted():
+    tel = Telemetry()
+    tel.inc("waves", b="y", a=1)
+    tel.inc("waves", a=1, b="y")
+    assert tel.counters == {"waves{a=1,b=y}": 2}
+
+
+# ---------------------------------------------------------------------------
+# JSONL round-trip
+# ---------------------------------------------------------------------------
+
+def test_jsonl_roundtrip(tmp_path):
+    path = tmp_path / "run.jsonl"
+    with Telemetry(jsonl_path=str(path)) as tel:
+        with tel.span("work", r_bucket=4):
+            tel.inc("things")
+        tel.ledger.tick(0.0, total_w=10.0, net_w=4.0, proc_w=6.0)
+        tel.ledger.tick(2.0, total_w=20.0, net_w=8.0, proc_w=12.0)
+        tel.emit("event", kind="node_failed", detail="p3", n=1)
+    evs = load_events(str(path))
+    assert validate_events(evs) == []
+    assert evs[0]["type"] == "meta" and evs[0]["version"] == 1
+    assert evs[-1]["type"] == "summary"
+    s = summarize_events(evs)
+    assert s["spans"]["work"]["count"] == 1
+    # left-hold: 10 W held for 2 h = 72 kJ, final sample extends nothing
+    assert s["energy"]["joules_total"] == pytest.approx(10.0 * 2 * 3600)
+    assert s["energy"]["joules_net"] == pytest.approx(4.0 * 2 * 3600)
+    assert s["monitor"] == {"node_failed": 1}
+
+
+def test_load_events_rejects_bad_lines(tmp_path):
+    path = tmp_path / "bad.jsonl"
+    path.write_text('{"type": "meta", "ts": 0, "version": 1}\nnot json\n')
+    with pytest.raises(ValueError):
+        load_events(str(path))
+
+
+def test_validate_flags_missing_fields():
+    assert validate_events([{"type": "span", "ts": 1.0}])  # no name/dur
+    assert validate_events([{"ts": 1.0}])                  # no type
+
+
+# ---------------------------------------------------------------------------
+# energy ledger
+# ---------------------------------------------------------------------------
+
+def test_ledger_integration_left_hold():
+    led = EnergyLedger()
+    led.tick(0.0, total_w=100.0, net_w=40.0, proc_w=60.0)
+    led.tick(1.0, total_w=50.0, net_w=20.0, proc_w=30.0)
+    out = led.integrate(t_end=3.0)
+    # 100 W for 1 h + 50 W for 2 h = 200 Wh = 720 kJ
+    assert out["joules_total"] == pytest.approx(200.0 * 3600)
+    assert out["joules_net"] == pytest.approx(80.0 * 3600)
+    assert out["joules_proc"] == pytest.approx(120.0 * 3600)
+    assert out["joules_net"] + out["joules_proc"] == \
+        pytest.approx(out["joules_total"])
+
+
+def test_ledger_tenant_attribution_exact(topo):
+    """With per-commit attribution, every sample's tenant watts sum to
+    the sample total EXACTLY (attribute_power's conservation), and the
+    integrated per-tenant joules sum to the total joules."""
+    tel = Telemetry(attribution_every=1)
+    sess = _churn(CFNSession(topo, _spec(), telemetry=tel))
+    assert tel.ledger.samples
+    for s in tel.ledger.samples:
+        assert "tenant_w" in s
+        # tenant split is f64-exact; the sample total is the engine's f32
+        # breakdown, so they agree to f32 precision
+        assert sum(s["tenant_w"].values()) == pytest.approx(
+            s["total_w"], rel=1e-6)
+        assert s["net_w"] + s["proc_w"] == pytest.approx(
+            s["total_w"], rel=1e-6)
+    # cross-check the LAST sample against a fresh attribute_power call
+    eng = sess.engine
+    per = eng.per_service_power_w()
+    last = tel.ledger.samples[-1]["tenant_w"]
+    assert set(last) == {str(s) for s in per}
+    for sid, w in per.items():
+        assert last[str(sid)] == pytest.approx(w, rel=1e-9)
+    out = tel.ledger.integrate()
+    assert sum(out["joules_by_tenant"].values()) == pytest.approx(
+        out["joules_total"], rel=1e-6)
+    # per-tier proc watts decompose the Eq.(2) term
+    tier = tel.ledger.samples[-1]["tier_w"]
+    assert set(tier) == set(tiers_of(topo))
+    assert sum(tier.values()) == pytest.approx(
+        tel.ledger.samples[-1]["proc_w"], rel=1e-6)
+
+
+def test_federated_ledger_regions_sum_exact():
+    topo = topology.federated_scale(n_regions=3, n_olt=1, onus_per_olt=2,
+                                    iot_per_onu=2, n_core=6)
+    part = federation.RegionPartition.from_topology(topo)
+    srcs = [int(r.proc_ids[0]) for r in part.regions]
+    tel = Telemetry()
+    sess = FederatedSession(topo, _spec(), telemetry=tel)
+    sess.solve(vsr.random_vsrs(6, rng=1, n_vms=3, source_nodes=srcs))
+    sess.tick(1.0)
+    sess.add(vsr.random_vsrs(1, rng=9, n_vms=3, source_nodes=[srcs[1]]))
+    assert tel.ledger.samples
+    for s in tel.ledger.samples:
+        assert sum(s["region_w"].values()) == pytest.approx(
+            s["total_w"], rel=1e-9)
+        assert s["net_w"] + s["proc_w"] == pytest.approx(
+            s["total_w"], rel=1e-9)
+    bd = sess.breakdown()
+    last = tel.ledger.samples[-1]
+    assert last["total_w"] == pytest.approx(bd.total_w, rel=1e-12)
+    for g, w in enumerate(np.asarray(bd.regional_w)):
+        assert last["region_w"][str(g)] == pytest.approx(float(w))
+
+
+# ---------------------------------------------------------------------------
+# convergence traces
+# ---------------------------------------------------------------------------
+
+def test_convergence_trace_fixed_length(topo):
+    vs = vsr.random_vsrs(4, rng=0, n_vms=3)
+    prob = power.build_problem(topo, vs)
+    import jax
+    X0 = np.zeros((prob.R, prob.V), np.int32)
+    res = solvers.anneal(prob, jax.random.PRNGKey(0), X0, n_steps=64,
+                         backend="delta", record_conv=True)
+    assert set(res.conv) == {"best_obj", "accept_rate"}
+    assert len(res.conv["best_obj"]) == 64
+    assert len(res.conv["accept_rate"]) == 64
+    bo = np.asarray(res.conv["best_obj"])
+    assert (np.diff(bo) <= 1e-6).all()        # best objective is monotone
+    ar = np.asarray(res.conv["accept_rate"])
+    assert (ar >= 0).all() and (ar <= 1).all()
+    # flag off -> no trace, and the jit cache key-space is UNTOUCHED
+    before = dict(solvers.TRACE_COUNTS)
+    res2 = solvers.anneal(prob, jax.random.PRNGKey(0), X0, n_steps=64,
+                          backend="delta")
+    assert res2.conv is None
+    assert dict(solvers.TRACE_COUNTS) == before
+
+
+def test_commit_records_convergence(topo):
+    tel = Telemetry()
+    sess = CFNSession(topo, _spec(), telemetry=tel)
+    sess.add(_svc(0))
+    sess.add(_svc(1))
+    solves = [e for e in tel.events if e["type"] == "solve"]
+    assert any("conv" in e for e in solves)
+    ev = next(e for e in solves if "conv" in e)
+    assert len(ev["conv"]["best_obj"]) <= 64  # downsampled payload bound
+
+
+# ---------------------------------------------------------------------------
+# monitor delegation
+# ---------------------------------------------------------------------------
+
+def test_monitor_mirror_parity():
+    plain, tel = PlacementMonitor(), Telemetry()
+    mirrored = PlacementMonitor()
+    mirrored.attach_telemetry(tel)
+    for mon in (plain, mirrored):
+        for _ in range(3):
+            mon.count("admission_rejected", detail="sla")
+        mon.count("node_failed", n=2)
+        mon.strand(7, t=1.0)
+        mon.unstrand(7, t=3.5)
+    assert mirrored.snapshot() == plain.snapshot()   # standalone unchanged
+    assert mirrored.events == plain.events
+    assert tel.counters["monitor.admission_rejected"] == 3
+    assert tel.counters["monitor.node_failed"] == 2
+    assert tel.gauges["monitor.stranded_open"] == 0
+    assert tel.gauges["monitor.stranded_service_s"] == pytest.approx(2.5)
+
+
+def test_monitor_ring_bound_unchanged_with_telemetry():
+    tel = Telemetry()
+    mon = PlacementMonitor(max_events=4)
+    mon.attach_telemetry(tel)
+    for i in range(10):
+        mon.count("k", detail=str(i))
+    assert len(mon.events) == 4
+    assert mon.counters["k"] == 10 and tel.counters["monitor.k"] == 10
+
+
+def test_monitor_merge_no_double_count():
+    tel = Telemetry()
+    a, b = PlacementMonitor(), PlacementMonitor()
+    a.attach_telemetry(tel)
+    b.attach_telemetry(tel)        # same registry: counts already there
+    a.count("x")
+    b.count("x")
+    a.merge(b)
+    assert a.counters["x"] == 2
+    assert tel.counters["monitor.x"] == 2    # merge did NOT re-count
+    c = PlacementMonitor()         # un-mirrored: merge must fold it in
+    c.count("x", n=3)
+    a.merge(c)
+    assert a.counters["x"] == 5 and tel.counters["monitor.x"] == 5
+
+
+# ---------------------------------------------------------------------------
+# compile attribution
+# ---------------------------------------------------------------------------
+
+def test_compile_attribution_agrees(topo):
+    tel = Telemetry()
+    # unique shape (n_vms=5) so this scenario really compiles fresh
+    sess = CFNSession(topo, _spec(), telemetry=tel)
+    sess.add(_svc(0, n_vms=5))
+    sess.add(_svc(1, n_vms=5))
+    rep = tel.report()
+    assert rep["compiles"]["agree"] is True
+    assert rep["compiles"]["recorded"] == rep["compiles"]["live"]
+    for rec in tel.compile_attribution():
+        assert rec["entry"] in solvers.TRACE_COUNTS
+        assert "[" in rec["fingerprint"]      # carries abstract shapes
+    tel.close()                               # detaches the hook
+    assert tel._trace_hook is None
+    assert not solvers.TRACE_HOOKS or tel._trace_hook not in \
+        solvers.TRACE_HOOKS
+
+
+# ---------------------------------------------------------------------------
+# the package lints clean
+# ---------------------------------------------------------------------------
+
+def test_telemetry_package_tracelint_clean():
+    from repro.analysis import analyze_paths
+    findings = analyze_paths([str(REPO / "src" / "repro" / "telemetry")])
+    assert findings == [], [f"{f.rule}:{f.path}:{f.line}" for f in findings]
+
+
+def test_report_cli_roundtrip(tmp_path):
+    import subprocess
+    import sys
+    path = tmp_path / "cli.jsonl"
+    with Telemetry(jsonl_path=str(path)) as tel:
+        with tel.span("work"):
+            pass
+        tel.ledger.tick(0.0, total_w=5.0, net_w=2.0, proc_w=3.0)
+    env_path = str(REPO / "src")
+    for args in (["validate", str(path)], ["report", str(path), "--json"]):
+        out = subprocess.run(
+            [sys.executable, "-m", "repro.telemetry", *args],
+            capture_output=True, text=True,
+            env={"PYTHONPATH": env_path, "PATH": "/usr/bin:/bin"})
+        assert out.returncode == 0, out.stderr
+    rep = json.loads(subprocess.run(
+        [sys.executable, "-m", "repro.telemetry", "report", str(path),
+         "--json"], capture_output=True, text=True,
+        env={"PYTHONPATH": env_path, "PATH": "/usr/bin:/bin"}).stdout)
+    assert rep["spans"]["work"]["count"] == 1
